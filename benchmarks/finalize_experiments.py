@@ -1,0 +1,70 @@
+"""Inject generated tables into EXPERIMENTS.md (idempotent).
+
+Replaces the marker lines:
+  <!-- ROOFLINE_TABLE_SINGLE -->   with the single-pod roofline table
+  <!-- HILLCLIMB_ZERO1 -->         with the measured §Perf #2 iterations
+  <!-- HILLCLIMB_MOE -->           with the measured §Perf #3 iterations
+"""
+from __future__ import annotations
+
+import json
+import re
+
+from benchmarks.roofline_bench import load_table, markdown_table
+
+
+def _hillclimb_block(path: str, baseline_note: str) -> str:
+    try:
+        r = json.load(open(path))
+    except FileNotFoundError:
+        return f"*(pending: {path})*"
+    lines = [
+        "| variant | compute s | memory s | collective s | vs baseline coll |",
+        "|---|---|---|---|---|",
+    ]
+    base = r.get("baseline_roofline", {})
+    base_coll = base.get("collective_s")
+    if base_coll:
+        lines.append(
+            f"| baseline (dry-run table) | {base.get('compute_s', 0):.2e} "
+            f"| {base.get('memory_s', 0):.2e} | {base_coll:.2e} | 1.0× |"
+        )
+    for it in r["iterations"]:
+        rel = f"{base_coll / it['collective_s']:.1f}×" if base_coll and it["collective_s"] else "—"
+        lines.append(
+            f"| {it['variant']} | {it['compute_s']:.2e} | {it['memory_s']:.2e} "
+            f"| {it['collective_s']:.2e} | {rel} |"
+        )
+        split = it.get("per_layer_split")
+        if split:
+            lines.append(
+                f"| &nbsp;&nbsp;↳ per-layer coll split | token-prop "
+                f"{split['per_layer_token_prop']:.2e} B | param-const "
+                f"{split['per_layer_param_const']:.2e} B | | |"
+            )
+    return "\n".join(lines) + f"\n\n{baseline_note}"
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    rows = load_table()
+    md = md.replace("<!-- ROOFLINE_TABLE_SINGLE -->",
+                    markdown_table(rows, "16x16"))
+    md = md.replace("<!-- ROOFLINE_TABLE_MULTI -->",
+                    markdown_table(rows, "2x16x16"))
+    md = md.replace(
+        "<!-- HILLCLIMB_ZERO1 -->",
+        _hillclimb_block("results/perf/hillclimb_zero1.json",
+                         "(`results/perf/hillclimb_zero1.json`)"),
+    )
+    md = md.replace(
+        "<!-- HILLCLIMB_MOE -->",
+        _hillclimb_block("results/perf/hillclimb_moe.json",
+                         "(`results/perf/hillclimb_moe.json`)"),
+    )
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

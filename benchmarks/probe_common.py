@@ -1,0 +1,34 @@
+"""Shared probe-calibration math for the LM hillclimb scripts.
+
+Model (mirrors repro/launch/calibrate.py):
+  flops/bytes:  full = u11 + (L−1)·per_layer         (microbatch-invariant)
+  collectives:  per-layer term splits into token-proportional `a` and
+                param-constant `b` via half-batch probes; only `b` repeats
+                per microbatch:
+  full = u11 + (L−1)·(a+b) + (M−1)·per_mb + (M−1)(L−1)·b
+"""
+from __future__ import annotations
+
+import numpy as np
+
+COMPONENTS = ("flops", "bytes", "all-gather", "all-reduce", "reduce-scatter",
+              "all-to-all", "collective-permute")
+
+
+def combine(u11, u21, u11h, u21h, u12, l_full, m_full):
+    per_layer = np.maximum(u21 - u11, 0.0)
+    per_layer_h = np.maximum(u21h - u11h, 0.0)
+    b_const = np.clip(2.0 * per_layer_h - per_layer, 0.0, per_layer)
+    per_mb = np.maximum(u12 - u11, 0.0)
+    full = u11 + (l_full - 1) * per_layer
+    coll = slice(2, len(COMPONENTS))
+    full[coll] = (
+        u11[coll]
+        + (l_full - 1) * per_layer[coll]
+        + (m_full - 1) * per_mb[coll]
+        + (m_full - 1) * (l_full - 1) * b_const[coll]
+    )
+    return np.maximum(full, 0.0), dict(
+        per_layer_param_const=b_const[coll].sum(),
+        per_layer_token_prop=(per_layer[coll] - b_const[coll]).sum(),
+    )

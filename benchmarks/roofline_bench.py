@@ -1,0 +1,159 @@
+"""Roofline table builder: joins the dry-run JSONs with analytic
+MODEL_FLOPS (6·N·D for dense LM training / 6·N_active·D for MoE; forward
+variants use the 2·N·D factor) and emits the EXPERIMENTS.md §Roofline table.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import get_config, get_shapes
+from repro.launch.hlo_analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def _lm_param_counts(cfg) -> Dict[str, float]:
+    """total and ACTIVE parameter counts (active: MoE experts scaled by
+    top_k/n_experts; embeddings excluded from the 6ND rule-of-thumb)."""
+    d, v = cfg.d_model, cfg.vocab
+    attn = cfg.n_layers * (
+        d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+    )
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.moe is None:
+        ffn_total = ffn_active = cfg.n_layers * 3 * d * cfg.d_ff
+    else:
+        m = cfg.moe
+        n_moe = cfg.n_layers - m.first_k_dense
+        dense = m.first_k_dense * 3 * d * m.d_ff_dense
+        shared = n_moe * 3 * d * (m.n_shared * m.d_expert)
+        routed_total = n_moe * m.n_experts * 3 * d * m.d_expert
+        routed_active = n_moe * m.top_k * 3 * d * m.d_expert
+        ffn_total = dense + shared + routed_total
+        ffn_active = dense + shared + routed_active
+    return {
+        "total": attn + ffn_total + embed,
+        "active": attn + ffn_active,      # matmul-active, sans embedding
+        "embed": embed,
+    }
+
+
+def model_flops(arch: str, shape_name: str, chips: int) -> Optional[float]:
+    """Per-device useful model FLOPs for one step of this cell."""
+    shape = get_shapes(arch)[shape_name]
+    cfg = get_config(arch)
+    if arch.startswith(("gemma", "qwen", "deepseek", "olmoe")):
+        counts = _lm_param_counts(cfg)
+        n_act = counts["active"]
+        vocab_flops_tok = 2 * cfg.d_model * cfg.vocab
+        # causal attention: qk + av over an average context of S/2
+        #   fwd per token = 2 dots × 2 MACs × (S/2) × h × hd = 2·S·h·hd
+        attn_fwd_tok = 2 * shape.seq_len * cfg.n_heads * cfg.head_dim * cfg.n_layers
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            per_tok = 6 * n_act + 3 * vocab_flops_tok + 3 * attn_fwd_tok
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            per_tok = 2 * n_act + attn_fwd_tok + vocab_flops_tok / shape.seq_len
+        else:  # decode: one token per sequence + KV-cache attention reads
+            tokens = shape.global_batch
+            kv_flops = 4 * cfg.n_layers * shape.seq_len * cfg.n_heads * cfg.head_dim
+            per_tok = 2 * n_act + vocab_flops_tok + kv_flops
+        return tokens * per_tok / chips
+    if arch == "graphsage-reddit":
+        d_feat = shape.extra("d_feat")
+        d = cfg.d_hidden
+        if shape.extra("mode") == "full":
+            n, e = shape.extra("n_nodes"), shape.extra("n_edges")
+            fwd = 2 * (n * (d_feat + d) * d * 2 + e * (d_feat + d))
+        elif shape.extra("mode") == "minibatch":
+            bn = shape.extra("batch_nodes")
+            f1, f2 = shape.extra("fanout")
+            rows = bn * (1 + f1 + f1 * f2)
+            fwd = 2 * rows * (d_feat + d) * d * 2
+        else:
+            fwd = 2 * shape.extra("batch") * shape.extra("n_nodes") * (
+                shape.extra("d_feat") + d) * d * 2
+        return 3 * fwd / chips  # fwd + bwd
+    if arch in ("dlrm-rm2", "dcn-v2", "din", "bst"):
+        b = shape.global_batch if shape.kind != "retrieval" else shape.extra("n_candidates")
+        mlp_params = {
+            "dlrm": 13 * 512 + 512 * 256 + 256 * 64 + 415 * 512 + 512 * 512 + 512 * 256 + 256,
+            "dcn": 3 * 429 * 429 + 429 * 1024 + 1024 * 1024 + 1024 * 512 + 512,
+            "din": 72 * 80 + 80 * 40 + 40 + 36 * 200 + 200 * 80 + 80,
+            "bst": 4 * 32 * 32 + 2 * 32 * 128 + 21 * 32 * 1024 + 1024 * 512 + 512 * 256 + 256,
+        }[cfg.kind]
+        factor = 3 if shape.kind == "train" else 1
+        return factor * 2 * b * mlp_params / chips
+    if arch.startswith("icd"):
+        if shape.kind == "retrieval":
+            return 2 * shape.global_batch * shape.extra("n_candidates") * cfg.k / chips
+        c, i = shape.extra("n_ctx"), shape.extra("n_items")
+        nnz = shape.extra("nnz")
+        k = cfg.k
+        return 2.0 * (k * k * (c + i) + 6 * k * nnz) / chips
+    return None
+
+
+def load_table(dryrun_dir: str = "results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(f))
+        chips = r.get("chips", 256)
+        row = {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": r["status"],
+        }
+        if r["status"] == "ok":
+            ro = r["roofline"]
+            mf_ = model_flops(r["arch"], r["shape"], chips)
+            row.update(
+                dominant=ro["dominant"],
+                compute_s=ro["compute_s"], memory_s=ro["memory_s"],
+                collective_s=ro["collective_s"],
+                roofline_fraction=ro["roofline_fraction"],
+                hlo_flops=ro["flops_per_device"],
+                model_flops=mf_,
+                useful_ratio=(mf_ / ro["flops_per_device"])
+                if mf_ and ro["flops_per_device"] else None,
+            )
+        elif r["status"] == "skipped":
+            row["skip_reason"] = r["skip_reason"]
+        else:
+            row["error"] = r.get("error", "")[:120]
+        rows.append(row)
+    return rows
+
+
+def markdown_table(rows, mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | dominant | compute s | memory s | collective s | "
+        "roofline frac | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | — | — |")
+            continue
+        ur = f"{r['useful_ratio']:.2f}" if r.get("useful_ratio") else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['dominant']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['roofline_fraction']:.3f} | {ur} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = load_table()
+    print(markdown_table(rows))

@@ -1,0 +1,118 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline.
+
+  python -m benchmarks.run              # everything (quick mode)
+  python -m benchmarks.run --full       # paper-scale synthetic runs
+  python -m benchmarks.run --only fig8
+
+Prints ``name,value,derived`` CSV lines and writes JSON to
+results/experiments/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def _emit(name: str, seconds: float, derived: str):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def run_figure(name, fn, out_dir, quick):
+    t0 = time.perf_counter()
+    res = fn(quick=quick)
+    dt = time.perf_counter() - t0
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    return res, dt
+
+
+def fig7(quick):
+    from benchmarks.experiments import paper_dataset, relative_to_popularity, run_cold_start
+
+    res = run_cold_start(paper_dataset(quick), quick=quick)
+    return {"absolute": res, "relative_to_popularity": relative_to_popularity(res)}
+
+
+def fig6a(quick):
+    from benchmarks.experiments import paper_dataset, relative_to_popularity, run_offline
+
+    res = run_offline(paper_dataset(quick), quick=quick)
+    return {"absolute": res, "relative_to_popularity": relative_to_popularity(res)}
+
+
+def fig6b(quick):
+    from benchmarks.experiments import paper_dataset, relative_to_popularity, run_instant
+
+    res = run_instant(paper_dataset(quick), quick=quick)
+    return {"absolute": res, "relative_to_popularity": relative_to_popularity(res)}
+
+
+def fig8(quick):
+    from benchmarks import fig8_cost
+
+    return fig8_cost.run(quick=quick)
+
+
+def kernels(quick):
+    """Micro-bench the Pallas kernels (interpret mode ⇒ timing is not
+    meaningful on CPU; we report the oracle-XLA timings + shapes covered)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.gram.ref import gram_ref
+
+    out = {}
+    for rows, k in ((4096, 128), (65536, 128)):
+        x = jax.random.normal(jax.random.PRNGKey(0), (rows, k))
+        f = jax.jit(gram_ref)
+        f(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            f(x).block_until_ready()
+        out[f"gram_xla_{rows}x{k}"] = (time.perf_counter() - t0) / 5
+    return out
+
+
+def roofline(quick):
+    from benchmarks.roofline_bench import load_table, markdown_table
+
+    rows = load_table()
+    ok = [r for r in rows if r["status"] == "ok"]
+    return {
+        "n_cells": len(rows),
+        "n_ok": len(ok),
+        "table_single_pod": markdown_table(rows, "16x16"),
+        "table_multi_pod": markdown_table(rows, "2x16x16"),
+    }
+
+
+FIGURES = {
+    "fig7_coldstart": fig7,
+    "fig6a_offline": fig6a,
+    "fig6b_instant": fig6b,
+    "fig8_cost": fig8,
+    "kernels": kernels,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/experiments")
+    args = ap.parse_args()
+    quick = not args.full
+
+    for name, fn in FIGURES.items():
+        if args.only and args.only not in name:
+            continue
+        res, dt = run_figure(name, fn, args.out, quick)
+        _emit(name, dt, json.dumps(res, default=str)[:160].replace(",", ";"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Cold-start with iCD-FM (paper §6.2.1): attribute features rescue users
+the model has never seen.
+
+    PYTHONPATH=src:. python examples/coldstart_fm.py
+"""
+import json
+
+from benchmarks.experiments import paper_dataset, relative_to_popularity, run_cold_start
+
+
+def main():
+    ds = paper_dataset(quick=True)
+    results = run_cold_start(ds, quick=True)
+    rel = relative_to_popularity(results)
+    print(json.dumps(rel, indent=1))
+    assert rel["icd-fm A"]["ndcg@100"] > 1.5, "FM-A should be ≫ popularity"
+    assert rel["icd-mf"]["ndcg@100"] < 1.2, "MF cannot help cold users"
+    print("\ncold-start: attribute FM beats popularity ~2x, MF does not — "
+          "matches Figure 7")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""End-to-end LM training driver (smoke scale): a few hundred steps on
+synthetic bigram-structured tokens with checkpointing and resume.
+
+    PYTHONPATH=src python examples/lm_pretrain.py --steps 200
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_smoke_config
+from repro.data.loader import lm_token_batches
+from repro.models import transformer as T
+from repro.optim import adamw, linear_warmup_cosine
+from repro.train.train_step import build_train_step, init_state
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="gemma2-2b")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(linear_warmup_cosine(3e-3, 20, args.steps))
+    step = jax.jit(build_train_step(
+        lambda p, b: T.loss_fn(cfg, p, b["tokens"], b["targets"],
+                               compute_dtype=jnp.float32),
+        opt,
+    ))
+    data = (
+        {"tokens": jnp.asarray(b["tokens"]), "targets": jnp.asarray(b["targets"])}
+        for b in lm_token_batches(cfg.vocab, 16, 64, seed=0)
+    )
+    ckdir = tempfile.mkdtemp(prefix="lm_ckpt_")
+    trainer = Trainer(step, init_state(params, opt), data,
+                      checkpointer=Checkpointer(ckdir), ckpt_every=50,
+                      log_every=25)
+    trainer.run(args.steps)
+
+    losses = [m["loss"] for m in trainer.metrics_history]
+    first, last = sum(losses[:10]) / 10, sum(losses[-10:]) / 10
+    print(f"\nloss: first-10 avg {first:.3f} → last-10 avg {last:.3f}")
+    assert last < first - 0.5, "model should learn the bigram structure"
+    print(f"checkpoints in {ckdir}; restart this script with the same dir to "
+          "resume (Trainer.maybe_resume)")
+
+
+if __name__ == "__main__":
+    main()

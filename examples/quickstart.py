@@ -1,0 +1,56 @@
+"""Quickstart: train iCD-MF on synthetic implicit feedback and evaluate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core.metrics import recall_at_k
+from repro.core.models import mf
+from repro.data.synthetic import make_implicit_dataset
+from repro.sparse.interactions import build_interactions
+
+
+def main():
+    ds = make_implicit_dataset(n_users=400, n_items=800, pop_strength=0.4,
+                               taste_strength=2.5, seed=0)
+    events = ds.events
+
+    # leave-one-out split
+    last = {}
+    for idx, (u, i, t) in enumerate(events):
+        last[u] = idx
+    held = set(last.values())
+    train = events[[i for i in range(len(events)) if i not in held]]
+
+    # Lemma 1: rescale observed feedback, keep α₀ for the implicit zeros
+    alpha0 = 0.5
+    pairs = np.unique(train[:, :2], axis=0)
+    data = build_interactions(
+        pairs[:, 0], pairs[:, 1], np.ones(len(pairs)),
+        np.full(len(pairs), alpha0 + 4.0),
+        ds.n_users, ds.n_items, alpha0=alpha0,
+    )
+
+    hp = mf.MFHyperParams(k=16, alpha0=alpha0, l2=0.05)
+    params = mf.init(jax.random.PRNGKey(0), ds.n_users, ds.n_items, 16)
+
+    def log(ep, p):
+        if (ep + 1) % 5 == 0:
+            print(f"epoch {ep + 1:3d}  objective {float(mf.objective(p, data, hp)):.2f}")
+
+    params = mf.fit(params, data, hp, n_epochs=20, callback=log)
+
+    # evaluate Recall@10 on the held-out last items
+    users = np.asarray(sorted(last))
+    truth = np.asarray([events[last[u]][1] for u in users])
+    scores = mf.scores_all(params)[users]
+    r = float(recall_at_k(scores, truth, 10))
+    pop = np.bincount(train[:, 1], minlength=ds.n_items)
+    r_pop = float(recall_at_k(np.tile(pop, (len(users), 1)), truth, 10))
+    print(f"\nRecall@10: iCD-MF {r:.3f}  vs popularity {r_pop:.3f}")
+    assert r > r_pop, "iCD-MF should beat popularity on this data"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""repro — production multi-pod JAX framework for the iCD paper.
+
+Implements "A Generic Coordinate Descent Framework for Learning from
+Implicit Feedback" (Bayer, Kanagal, He, Rendle, 2016) as a first-class
+feature of a framework-scale training/inference system:
+
+- ``repro.core``       — k-separable models, implicit regularizer, iCD solver
+- ``repro.sparse``     — CSR / segment ops / EmbeddingBag / neighbor sampler
+- ``repro.models``     — architecture zoo (LM transformers, recsys, GNN)
+- ``repro.kernels``    — Pallas TPU kernels (gram, embedding_bag, cd_update,
+                         flash_attention) with pure-jnp oracles
+- ``repro.optim``      — optimizers, schedules, gradient compression
+- ``repro.train``      — train-step builders, remat, microbatching
+- ``repro.serve``      — decode / recsys serving paths
+- ``repro.checkpoint`` — fault-tolerant sharded checkpointing
+- ``repro.runtime``    — elastic mesh management, straggler watchdog
+- ``repro.configs``    — assigned architecture configs + the paper's own
+- ``repro.launch``     — production meshes, multi-pod dry-run, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,63 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the exact published configuration;
+``get_smoke_config(arch_id)`` returns a reduced same-family config for CPU
+smoke tests. ``ARCH_IDS`` lists the 10 assigned architectures plus the
+paper's own iCD configs.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    # LM family
+    "gemma2-2b",
+    "qwen1.5-4b",
+    "deepseek-67b",
+    "olmoe-1b-7b",
+    "deepseek-moe-16b",
+    # GNN
+    "graphsage-reddit",
+    # RecSys
+    "dlrm-rm2",
+    "din",
+    "dcn-v2",
+    "bst",
+    # the paper's own models
+    "icd-mf",
+    "icd-fm",
+]
+
+_MODULES = {
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "din": "repro.configs.din",
+    "dcn-v2": "repro.configs.dcn_v2",
+    "bst": "repro.configs.bst",
+    "icd-mf": "repro.configs.icd_mf",
+    "icd-fm": "repro.configs.icd_fm",
+}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get_config(arch_id: str):
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str):
+    return _module(arch_id).SMOKE_CONFIG
+
+
+def get_shapes(arch_id: str):
+    """dict shape_name -> ShapeSpec for this arch."""
+    return _module(arch_id).SHAPES

@@ -1,0 +1,21 @@
+"""BST [arXiv:1905.06874] — 1 transformer block over a 20-item sequence."""
+import dataclasses
+
+from repro.configs.base import RECSYS_SHAPES, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="bst",
+    kind="bst",
+    embed_dim=32,
+    seq_len=20,
+    n_blocks=1,
+    n_heads=8,
+    mlp=(1024, 512, 256),
+    item_vocab=5_000_000,
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, embed_dim=16, seq_len=6, n_heads=4, mlp=(32, 16), item_vocab=100,
+)
+
+SHAPES = RECSYS_SHAPES

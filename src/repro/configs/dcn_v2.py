@@ -1,0 +1,22 @@
+"""DCN-v2 [arXiv:2008.13535] — 3 full-rank cross layers + deep MLP."""
+import dataclasses
+
+from repro.configs.base import RECSYS_SHAPES, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="dcn-v2",
+    kind="dcn",
+    n_dense=13,
+    n_sparse=26,
+    embed_dim=16,
+    table_vocabs=tuple([10_000_000] * 4 + [100_000] * 22),
+    n_cross_layers=3,
+    mlp=(1024, 1024, 512),
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, table_vocabs=tuple([40] * 4 + [12] * 22), embed_dim=4,
+    mlp=(32, 16), n_cross_layers=2,
+)
+
+SHAPES = RECSYS_SHAPES

@@ -1,0 +1,31 @@
+"""DeepSeek 67B [arXiv:2401.02954; hf] — llama-arch dense, GQA kv=8."""
+import dataclasses
+
+from repro.configs.base import LMConfig, lm_shapes
+
+CONFIG = LMConfig(
+    name="deepseek-67b",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab=102_400,
+    act="swiglu",
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    num_microbatches=16,
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, head_dim=8,
+    d_ff=160, vocab=128, num_microbatches=1,
+)
+
+SHAPES = lm_shapes(
+    long_context_skip=(
+        "pure full attention (95 layers × full 524k KV); long_500k is "
+        "assigned to SSM/hybrid/linear-attn archs only (DESIGN.md §4)"
+    )
+)

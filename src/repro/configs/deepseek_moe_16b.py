@@ -1,0 +1,38 @@
+"""DeepSeekMoE 16B [arXiv:2401.06066; hf] — 2 shared + 64 routed top-6,
+fine-grained experts, first layer dense."""
+import dataclasses
+
+from repro.configs.base import LMConfig, MoEConfig, lm_shapes
+
+CONFIG = LMConfig(
+    name="deepseek-moe-16b",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,  # per-expert hidden
+    vocab=102_400,
+    act="swiglu",
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    moe=MoEConfig(
+        n_experts=64, top_k=6, d_expert=1408, n_shared=2,
+        first_k_dense=1, d_ff_dense=10944,
+    ),
+    num_microbatches=8,
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+    d_ff=24, vocab=64, num_microbatches=1,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=24, n_shared=1,
+                  first_k_dense=1, d_ff_dense=64),
+)
+
+SHAPES = lm_shapes(
+    long_context_skip=(
+        "pure full attention MoE; long_500k is assigned to SSM/hybrid/"
+        "linear-attn archs only (DESIGN.md §4)"
+    )
+)

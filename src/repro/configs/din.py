@@ -1,0 +1,21 @@
+"""DIN [arXiv:1706.06978] — target attention over 100-item history."""
+import dataclasses
+
+from repro.configs.base import RECSYS_SHAPES, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="din",
+    kind="din",
+    embed_dim=18,
+    seq_len=100,
+    attn_mlp=(80, 40),
+    mlp=(200, 80),
+    item_vocab=10_000_000,
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, embed_dim=6, seq_len=12, attn_mlp=(16, 8), mlp=(24, 12),
+    item_vocab=200,
+)
+
+SHAPES = RECSYS_SHAPES

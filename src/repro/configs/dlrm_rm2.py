@@ -1,0 +1,27 @@
+"""DLRM RM2 [arXiv:1906.00091] — dot interaction, 26 sparse features.
+
+Table sizes follow the RM2 regime (a few huge user/item-id tables + many
+small categorical ones); the total (41.8M rows × 64) is row-sharded over the
+``model`` mesh axis in the dry run.
+"""
+import dataclasses
+
+from repro.configs.base import RECSYS_SHAPES, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="dlrm-rm2",
+    kind="dlrm",
+    n_dense=13,
+    n_sparse=26,
+    embed_dim=64,
+    table_vocabs=tuple([5_000_000] * 8 + [100_000] * 18),
+    bot_mlp=(512, 256, 64),
+    top_mlp=(512, 512, 256, 1),
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, table_vocabs=tuple([50] * 8 + [10] * 18),
+    bot_mlp=(16, 8), top_mlp=(16, 8, 1), embed_dim=8,
+)
+
+SHAPES = RECSYS_SHAPES

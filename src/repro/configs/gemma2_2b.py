@@ -1,0 +1,33 @@
+"""Gemma-2 2B [arXiv:2408.00118; hf] — local+global alternating, softcaps."""
+import dataclasses
+
+from repro.configs.base import LMConfig, lm_shapes
+
+CONFIG = LMConfig(
+    name="gemma2-2b",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab=256_000,
+    act="geglu",
+    attn_window=4096,
+    local_global_alternating=True,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    post_norms=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    num_microbatches=4,
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=256, attn_window=8, num_microbatches=1,
+)
+
+# hybrid local/global ⇒ long_500k RUNS (half the cache is window-bounded;
+# decode is O(L) per token)
+SHAPES = lm_shapes(long_context_skip=None)

@@ -1,0 +1,19 @@
+"""GraphSAGE-Reddit [arXiv:1706.02216] — 2 layers, mean agg, fanout 25-10."""
+import dataclasses
+
+from repro.configs.base import GNN_SHAPES, GNNConfig
+
+CONFIG = GNNConfig(
+    name="graphsage-reddit",
+    n_layers=2,
+    d_hidden=128,
+    aggregator="mean",
+    sample_sizes=(25, 10),
+    n_classes=41,
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, d_hidden=16, sample_sizes=(4, 3), n_classes=5,
+)
+
+SHAPES = GNN_SHAPES

@@ -1,0 +1,33 @@
+"""OLMoE 1B-7B [arXiv:2409.02060; hf] — 64 experts, top-8, no shared."""
+import dataclasses
+
+from repro.configs.base import LMConfig, MoEConfig, lm_shapes
+
+CONFIG = LMConfig(
+    name="olmoe-1b-7b",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,  # per-expert hidden
+    vocab=50_304,
+    act="swiglu",
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    moe=MoEConfig(n_experts=64, top_k=8, d_expert=1024),
+    num_microbatches=4,
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+    d_ff=32, vocab=64, num_microbatches=1,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=32),
+)
+
+SHAPES = lm_shapes(
+    long_context_skip=(
+        "pure full attention MoE; long_500k is assigned to SSM/hybrid/"
+        "linear-attn archs only (DESIGN.md §4)"
+    )
+)

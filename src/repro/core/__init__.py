@@ -1,0 +1,13 @@
+"""Core iCD library — the paper's contribution as composable JAX modules.
+
+- ``gram``        — Lemma 2 Gram machinery (incl. sharded all-reduce form)
+- ``implicit``    — Lemma 1 rescaling + implicit regularizer/objective
+- ``sweeps``      — vectorized Newton column-sweep building blocks
+- ``models``      — MF / MFSI / FM / PARAFAC / Tucker iCD (paper §5)
+- ``naive_cd``    — conventional dense-CD oracle (§3.2 strawman, Fig. 8)
+- ``bpr``         — BPR-SGD baseline (the paper's main competitor)
+- ``ials``        — iALS vector-wise ALS baseline (Hu et al. [5])
+- ``metrics``     — Recall@K / NDCG@K evaluation (paper §6)
+"""
+
+from repro.core import gram, implicit, sweeps  # noqa: F401

@@ -1,0 +1,142 @@
+"""Fielded design matrices for feature-based models (paper §5.2).
+
+The paper writes X ∈ R^{|C|×p} as a generic sparse matrix. Production
+feature pipelines are *fielded*: p columns partition into fields (user id,
+age bucket, country, device, previous video, watch history, ...), and each
+row activates a bounded number of features per field — exactly one for
+categorical fields, a variable-length bag for history fields.
+
+Fieldedness is what makes CD parallelizable on TPU: within a ONE-HOT field
+no two features share a row, so their coordinate updates touch disjoint
+residuals and can run as one vectorized Newton step (exact CD). Multi-hot
+fields share rows; for those the solver offers
+  - ``exact``  — sequential scan over bag slots (slot j of every row forms a
+                 one-hot-like layer; still vectorized across rows), or
+  - ``jacobi`` — damped parallel update over the whole bag (η < 1).
+
+A ``Design`` stacks all field vocabularies into one (p, k) parameter matrix
+with per-field row offsets, matching the paper's flat W ∈ R^{p×k}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Field:
+    """One feature field.
+
+    ids:     (n_rows, bag) int32 — local feature ids (0..vocab-1); padded
+             slots may hold any id but must be zero-weighted.
+    weights: (n_rows, bag) f32 — x values; 0 for padding. One-hot categorical
+             fields have bag == 1 and weight 1 (or a real value for dense
+             scalar features, which are vocab-1 fields).
+    vocab:   static — number of features in this field.
+    offset:  static — row offset of this field inside the stacked table.
+    one_hot: static — True when no two rows share... (precisely: when bag==1,
+             so per-column updates within the field are exact).
+    """
+
+    ids: jax.Array
+    weights: jax.Array
+    vocab: int = dataclasses.field(metadata=dict(static=True))
+    offset: int = dataclasses.field(metadata=dict(static=True))
+    one_hot: bool = dataclasses.field(metadata=dict(static=True))
+    name: str = dataclasses.field(default="", metadata=dict(static=True))
+
+    @property
+    def bag(self) -> int:
+        return int(self.ids.shape[1])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Design:
+    fields: Tuple[Field, ...]
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+    p: int = dataclasses.field(metadata=dict(static=True))  # total features
+
+    def global_ids(self, field: Field) -> jax.Array:
+        return field.ids + field.offset
+
+
+def make_design(fields_spec: Sequence[dict], n_rows: int) -> Design:
+    """Host-side builder.
+
+    Each spec: {name, ids (n_rows,) or (n_rows, bag), vocab,
+                weights optional same shape}.
+    """
+    fields = []
+    offset = 0
+    for spec in fields_spec:
+        ids = np.asarray(spec["ids"], dtype=np.int32)
+        if ids.ndim == 1:
+            ids = ids[:, None]
+        weights = spec.get("weights")
+        if weights is None:
+            weights = np.ones_like(ids, dtype=np.float32)
+        else:
+            weights = np.asarray(weights, dtype=np.float32)
+            if weights.ndim == 1:
+                weights = weights[:, None]
+        vocab = int(spec["vocab"])
+        assert ids.shape == weights.shape and ids.shape[0] == n_rows
+        if ids.shape[1] > 1:
+            # Invariant: within a row, non-zero-weighted slots carry DISTINCT
+            # feature ids (bag = set semantics). FM's pairwise identity
+            # Σ_{l<l'} relies on it; duplicates must be pre-merged by the
+            # data pipeline (sum their weights into one slot).
+            for r in range(ids.shape[0]):
+                active = ids[r][weights[r] != 0]
+                if len(np.unique(active)) != len(active):
+                    raise ValueError(
+                        f"field {spec.get('name')}: duplicate ids in row {r}; "
+                        "merge duplicate bag entries before make_design"
+                    )
+        fields.append(
+            Field(
+                ids=jnp.asarray(ids),
+                weights=jnp.asarray(weights),
+                vocab=vocab,
+                offset=offset,
+                one_hot=ids.shape[1] == 1,
+                name=spec.get("name", f"field{len(fields)}"),
+            )
+        )
+        offset += vocab
+    return Design(fields=tuple(fields), n_rows=n_rows, p=offset)
+
+
+def design_matmul(design: Design, table: jax.Array) -> jax.Array:
+    """Φ = X·W for the stacked table W (p, k): fielded embedding-bag sum."""
+    out = jnp.zeros((design.n_rows, table.shape[1]), dtype=jnp.float32)
+    for field in design.fields:
+        gathered = jnp.take(table, design.global_ids(field), axis=0)  # (n,bag,k)
+        out = out + jnp.sum(gathered * field.weights[..., None], axis=1)
+    return out
+
+
+def design_col_sq_sums(design: Design) -> jax.Array:
+    """Σ_c x_{c,l}² per feature l — the R'' weights of eq. (24). (p,)"""
+    out = jnp.zeros((design.p,), dtype=jnp.float32)
+    for field in design.fields:
+        flat_ids = design.global_ids(field).reshape(-1)
+        flat_w = field.weights.reshape(-1)
+        out = out.at[flat_ids].add(flat_w * flat_w)
+    return out
+
+
+def to_dense(design: Design) -> jax.Array:
+    """Materialize X (n_rows, p) — tests only."""
+    x = jnp.zeros((design.n_rows, design.p), dtype=jnp.float32)
+    rows = jnp.arange(design.n_rows)
+    for field in design.fields:
+        for j in range(field.bag):
+            x = x.at[rows, field.offset + field.ids[:, j]].add(field.weights[:, j])
+    return x

@@ -1,0 +1,76 @@
+"""Lemma 1: the implicit objective as explicit loss + implicit regularizer.
+
+``L(Θ|S_impl) = L(Θ|S̄) + α₀·R(Θ) + const`` where ``S̄`` rescales the
+observed feedback (ȳ = α/(α−α₀)·y, ᾱ = α−α₀; paper eq. 7–8) and
+``R(Θ) = Σ_{c∈C} Σ_{i∈I} ŷ(c,i)²`` penalizes non-zero predictions anywhere.
+
+This module provides both the efficient (Lemma 2 / Gram) evaluation and the
+brute-force O(|C||I|) oracle used by the equivalence tests and the Figure 8
+cost benchmark.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gram import gram
+from repro.sparse.interactions import Interactions
+
+
+def rescale_observed(y: jax.Array, alpha: jax.Array, alpha0: float) -> Tuple[jax.Array, jax.Array]:
+    """Eq. (8): collapse each (c,i,y,α) ∈ S⁺ with its (c,i,0,−α₀) counterpart."""
+    return alpha / (alpha - alpha0) * y, alpha - alpha0
+
+
+def implicit_regularizer_gram(phi: jax.Array, psi: jax.Array) -> jax.Array:
+    """Lemma 2: R(Θ) = Σ_{f,f'} J_C(f,f')·J_I(f,f') in O((|C|+|I|)k²)."""
+    j_c = gram(phi)
+    j_i = gram(psi)
+    return jnp.sum(j_c * j_i)
+
+
+def implicit_regularizer_naive(phi: jax.Array, psi: jax.Array) -> jax.Array:
+    """Brute force O(|C||I|): R(Θ) = Σ_c Σ_i ⟨φ(c),ψ(i)⟩². Oracle/benchmark."""
+    scores = phi.astype(jnp.float32) @ psi.astype(jnp.float32).T
+    return jnp.sum(scores * scores)
+
+
+def explicit_loss(e: jax.Array, alpha: jax.Array) -> jax.Array:
+    """Rescaled explicit part Σ ᾱ·(ŷ−ȳ)² given cached residuals e = ŷ−ȳ."""
+    return jnp.sum(alpha * e * e)
+
+
+def implicit_objective(
+    phi: jax.Array,
+    psi: jax.Array,
+    e: jax.Array,
+    data: Interactions,
+    alpha0: float,
+    l2: float,
+    params_sq_norm: jax.Array,
+) -> jax.Array:
+    """Full Lemma-1 objective (up to the additive constant of the proof):
+
+    Σ_S̄ ᾱ(ŷ−ȳ)² + α₀·R(Θ) + λ‖Θ‖².
+    """
+    return (
+        explicit_loss(e, data.alpha)
+        + alpha0 * implicit_regularizer_gram(phi, psi)
+        + l2 * params_sq_norm
+    )
+
+
+def dense_implicit_objective(
+    scores: jax.Array,
+    y_dense: jax.Array,
+    alpha_dense: jax.Array,
+    l2: float,
+    params_sq_norm: jax.Array,
+) -> jax.Array:
+    """The original, pre-Lemma-1 objective over the FULL |C|×|I| grid
+    (eq. 1 over S_impl). Used by the exactness tests: iCD on the rescaled
+    form must reach the same optimum as naive CD on this objective."""
+    diff = scores - y_dense
+    return jnp.sum(alpha_dense * diff * diff) + l2 * params_sq_norm

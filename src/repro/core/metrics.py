@@ -1,0 +1,74 @@
+"""Ranking metrics: Recall@K and NDCG@K (paper §6 evaluates top-100).
+
+Scores for evaluation contexts arrive as a dense (n_eval_ctx, n_items)
+matrix (or in chunks); training items can be masked out, matching the
+standard offline protocol.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_items(
+    scores: jax.Array, k: int, exclude_mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Top-k item ids per row; ``exclude_mask`` True ⇒ never recommend."""
+    if exclude_mask is not None:
+        scores = jnp.where(exclude_mask, -jnp.inf, scores)
+    return jax.lax.top_k(scores, k)[1]
+
+
+def recall_at_k(
+    scores: jax.Array,
+    true_items: jax.Array,
+    k: int,
+    exclude_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Recall@K for a single held-out item per context (leave-one-out)."""
+    top = topk_items(scores, k, exclude_mask)
+    return jnp.mean(jnp.any(top == true_items[:, None], axis=1).astype(jnp.float32))
+
+
+def ndcg_at_k(
+    scores: jax.Array,
+    true_items: jax.Array,
+    k: int,
+    exclude_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """NDCG@K, single relevant item ⇒ DCG = 1/log2(rank+1), IDCG = 1."""
+    top = topk_items(scores, k, exclude_mask)
+    hits = top == true_items[:, None]  # (n, k)
+    ranks = jnp.arange(1, k + 1, dtype=jnp.float32)
+    gains = jnp.where(hits, 1.0 / jnp.log2(ranks + 1.0)[None, :], 0.0)
+    return jnp.mean(jnp.sum(gains, axis=1))
+
+
+def recall_ndcg_multi(
+    scores: np.ndarray,
+    held_out: list,
+    k: int,
+    exclude_mask: Optional[np.ndarray] = None,
+) -> Tuple[float, float]:
+    """Host-side metrics with a SET of held-out items per context (instant /
+    cold-start protocols hold out whole user histories)."""
+    if exclude_mask is not None:
+        scores = np.where(exclude_mask, -np.inf, scores)
+    top = np.argpartition(-scores, min(k, scores.shape[1] - 1), axis=1)[:, :k]
+    # sort the partitioned top-k by score for NDCG
+    order = np.argsort(-np.take_along_axis(scores, top, axis=1), axis=1)
+    top = np.take_along_axis(top, order, axis=1)
+    recalls, ndcgs = [], []
+    discounts = 1.0 / np.log2(np.arange(2, k + 2))
+    for row, truth in enumerate(held_out):
+        truth = set(int(t) for t in truth)
+        if not truth:
+            continue
+        hits = np.fromiter((int(t) in truth for t in top[row]), bool, k)
+        recalls.append(hits.sum() / len(truth))
+        idcg = discounts[: min(len(truth), k)].sum()
+        ndcgs.append((hits * discounts).sum() / idcg)
+    return float(np.mean(recalls)), float(np.mean(ndcgs))

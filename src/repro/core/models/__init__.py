@@ -1,0 +1,15 @@
+"""k-separable model catalogue (paper §5) with exact iCD sweeps.
+
+Every module exposes the same surface:
+
+- ``init(key, ...) -> params``            parameter pytree
+- ``phi(params, ...) / psi(params, ...)`` the k-separable decomposition
+- ``predict(params, ...)``                scores for (context, item) pairs
+- ``epoch(params, data, hp) -> params``   one full iCD epoch (ctx + item sweep)
+- ``objective(params, data, hp)``         Lemma-1 objective for monitoring
+
+MF (eq. 15), MF with side information (eq. 20), FM ((k+2)-separable, eq. 26),
+PARAFAC (eq. 34, sparse & dense context), Tucker (k₃-separable, eq. 40).
+"""
+
+from repro.core.models import fm, mf, mfsi, parafac, tucker  # noqa: F401

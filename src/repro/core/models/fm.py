@@ -1,0 +1,310 @@
+"""iCD for Factorization Machines (paper §5.2.2).
+
+FM (eq. 26) over the concatenated feature vector x = (x_c, z_i):
+
+    ŷ(x) = b + Σ_l x_l w̃_l + Σ_{l<l'} ⟨w_l, w_l'⟩ x_l x_l'
+
+is (k+2)-separable (eqs. 27–31). We lay the extended components out as
+aligned columns of Φe ∈ R^{C×(k+2)} and Ψe ∈ R^{I×(k+2)}:
+
+    column f < k : φ_f = Σ_l x_l w_{l,f}          ψ_f = Σ_l z_l h_{l,f}
+    column k     : φ_spec (ctx bias+linear+pairs)  ones
+    column k+1   : ones                            ψ_spec (item side)
+
+so ŷ = ⟨Φe(c), Ψe(i)⟩ exactly. Gradients are sparse (eqs. 32–33): a context
+embedding w_{l*,f*} feeds component f* (value x) and the ctx-special
+component (value x·g, g = φ_{f*} − x·w_{l*,f*}); FM stays *linear* in every
+single coordinate, so full Newton steps (η=1) are exact.
+
+Sweep order per side: all k embedding dims (field-vectorized like MFSI),
+then the linear weights, then (context side only) the global bias. One-hot
+fields are exact; multi-hot fields use damped Jacobi (DESIGN.md §3) and the
+second-order cross-slot residual drift is bounded by refreshing caches every
+epoch. Runtime matches the paper: same flow/complexity as MFSI,
+O(k² N_Z(X)) per epoch for the implicit part.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sweeps
+from repro.core.design import Design, design_matmul
+from repro.core.gram import gram
+from repro.core.implicit import implicit_objective
+from repro.sparse.interactions import Interactions
+from repro.sparse.segment import segment_sum
+
+
+class FMParams(NamedTuple):
+    b: jax.Array       # () global bias
+    w_lin: jax.Array   # (p,)  context linear weights  (paper w̃)
+    w: jax.Array       # (p, k) context embeddings
+    h_lin: jax.Array   # (p',) item linear weights     (paper h̃)
+    h: jax.Array       # (p', k) item embeddings
+
+
+@dataclasses.dataclass(frozen=True)
+class FMHyperParams:
+    k: int
+    alpha0: float = 1.0
+    l2: float = 0.1
+    l2_lin: float = 0.1
+    eta: float = 1.0
+    use_linear: bool = True
+    use_bias: bool = True
+    multi_hot_mode: str = "jacobi"  # 'jacobi' | 'slot'
+    jacobi_eta: float = 0.5
+    implementation: str = "xla"
+
+
+def init(key: jax.Array, p_ctx: int, p_item: int, k: int, sigma: float = 0.1) -> FMParams:
+    kw, kh = jax.random.split(key)
+    return FMParams(
+        b=jnp.zeros((), jnp.float32),
+        w_lin=jnp.zeros((p_ctx,), jnp.float32),
+        w=sigma * jax.random.normal(kw, (p_ctx, k), dtype=jnp.float32),
+        h_lin=jnp.zeros((p_item,), jnp.float32),
+        h=sigma * jax.random.normal(kh, (p_item, k), dtype=jnp.float32),
+    )
+
+
+def _self_pairwise(design: Design, table: jax.Array, phi_m: jax.Array) -> jax.Array:
+    """Σ_{l<l'} ⟨w_l,w_l'⟩ x_l x_l' = ½ Σ_f (φ_f² − Σ_l x_l² w_{l,f}²)."""
+    sq_sum = jnp.zeros((design.n_rows,), jnp.float32)
+    for field in design.fields:
+        wsq = jnp.take(table * table, design.global_ids(field), axis=0)  # (n,bag,k)
+        sq_sum = sq_sum + jnp.sum(
+            jnp.sum(wsq, axis=-1) * field.weights * field.weights, axis=-1
+        )
+    return 0.5 * (jnp.sum(phi_m * phi_m, axis=-1) - sq_sum)
+
+
+def phi_ext(params: FMParams, x: Design, hp: FMHyperParams) -> jax.Array:
+    """Φe (C, k+2): [Φ | φ_spec | 1]."""
+    phi_m = design_matmul(x, params.w)
+    spec = _self_pairwise(x, params.w, phi_m)
+    if hp.use_linear:
+        spec = spec + design_matmul(x, params.w_lin[:, None])[:, 0]
+    if hp.use_bias:
+        spec = spec + params.b
+    ones = jnp.ones((x.n_rows,), jnp.float32)
+    return jnp.concatenate([phi_m, spec[:, None], ones[:, None]], axis=1)
+
+
+def psi_ext(params: FMParams, z: Design, hp: FMHyperParams) -> jax.Array:
+    """Ψe (I, k+2): [Ψ | 1 | ψ_spec]."""
+    psi_m = design_matmul(z, params.h)
+    spec = _self_pairwise(z, params.h, psi_m)
+    if hp.use_linear:
+        spec = spec + design_matmul(z, params.h_lin[:, None])[:, 0]
+    ones = jnp.ones((z.n_rows,), jnp.float32)
+    return jnp.concatenate([psi_m, ones[:, None], spec[:, None]], axis=1)
+
+
+def predict(params: FMParams, x: Design, z: Design, ctx, item, hp: FMHyperParams) -> jax.Array:
+    pe, se = phi_ext(params, x, hp), psi_ext(params, z, hp)
+    return jnp.sum(jnp.take(pe, ctx, axis=0) * jnp.take(se, item, axis=0), axis=-1)
+
+
+def _embed_layer_update(
+    table_col, self_ext, e, q, u, r_a, r_b, p2, p1, p0, j_ff, j_fs, j_ss,
+    ids_g, xw, rows, vocab, offset, f, spec_col,
+    other_f_nnz, other_s_nnz, rows_nnz, hp, eta,
+):
+    """Vectorized Newton update of one embedding layer (field × dim f*)."""
+    local = ids_g - offset
+    w_rows = jnp.take(table_col, ids_g)                      # w_{l,f*} per entry
+    g = jnp.take(sweeps.take_col(self_ext, f), rows) - xw * w_rows
+    lp = segment_sum(xw * (jnp.take(q, rows) + g * jnp.take(u, rows)), local, vocab)
+    lpp = segment_sum(
+        xw * xw * (jnp.take(p2, rows) + 2 * g * jnp.take(p1, rows) + g * g * jnp.take(p0, rows)),
+        local, vocab,
+    )
+    rp = segment_sum(xw * (jnp.take(r_a, rows) + g * jnp.take(r_b, rows)), local, vocab)
+    rpp = segment_sum(xw * xw * (j_ff + 2 * g * j_fs + g * g * j_ss), local, vocab)
+    w_layer = table_col[offset : offset + vocab]
+    num = lp + hp.alpha0 * rp + hp.l2 * w_layer
+    den = lpp + hp.alpha0 * rpp + hp.l2
+    delta = -eta * num / jnp.maximum(den, 1e-12)
+    table_col = table_col.at[offset : offset + vocab].add(delta)
+
+    d_entry = xw * jnp.take(delta, local)                    # per-entry Δ(xw)
+    n_rows = self_ext.shape[0]
+    dphi_f = segment_sum(d_entry, rows, n_rows)              # Δφ_{f*}
+    dphi_s = segment_sum(d_entry * g, rows, n_rows)          # Δφ_spec (linear patch)
+    self_ext = sweeps.put_col(self_ext, f, sweeps.take_col(self_ext, f) + dphi_f)
+    self_ext = self_ext.at[:, spec_col].add(dphi_s)
+    e = e + jnp.take(dphi_f, rows_nnz) * other_f_nnz + jnp.take(dphi_s, rows_nnz) * other_s_nnz
+    q = q + dphi_f * p2 + dphi_s * p1
+    u = u + dphi_f * p1 + dphi_s * p0
+    r_a = r_a + dphi_f * j_ff + dphi_s * j_fs
+    r_b = r_b + dphi_f * j_fs + dphi_s * j_ss
+    return table_col, self_ext, e, q, u, r_a, r_b
+
+
+def _side_sweep(
+    table: jax.Array,
+    lin: Optional[jax.Array],
+    bias: Optional[jax.Array],
+    self_ext: jax.Array,     # (n, k+2), kept in sync
+    other_ext: jax.Array,    # (m, k+2), fixed
+    other_j: jax.Array,      # (k+2, k+2) Gram of other_ext
+    design: Design,
+    rows_nnz: jax.Array,
+    other_nnz_ids: jax.Array,
+    alpha: jax.Array,
+    e: jax.Array,
+    spec_col: int,
+    hp: FMHyperParams,
+):
+    n_rows = design.n_rows
+    row_idx = jnp.arange(n_rows, dtype=jnp.int32)
+    o_spec_nnz = jnp.take(other_ext[:, spec_col], other_nnz_ids)  # ones, kept generic
+    p0 = segment_sum(alpha * o_spec_nnz * o_spec_nnz, rows_nnz, n_rows)
+    j_ss = other_j[spec_col, spec_col]
+
+    # ---- embedding dims -------------------------------------------------
+    def dim_body(f, carry):
+        table, self_ext, e = carry
+        other_f_nnz = jnp.take(sweeps.take_col(other_ext, f), other_nnz_ids)
+        p2 = segment_sum(alpha * other_f_nnz * other_f_nnz, rows_nnz, n_rows)
+        p1 = segment_sum(alpha * other_f_nnz * o_spec_nnz, rows_nnz, n_rows)
+        q = segment_sum(alpha * e * other_f_nnz, rows_nnz, n_rows)
+        u = segment_sum(alpha * e * o_spec_nnz, rows_nnz, n_rows)
+        r_a = self_ext @ sweeps.take_col(other_j, f)
+        r_b = self_ext @ other_j[:, spec_col]
+        j_ff = other_j[f, f]
+        j_fs = other_j[f, spec_col]
+        table_col = sweeps.take_col(table, f)
+
+        for field in design.fields:
+            gids = design.global_ids(field)
+            if field.one_hot or hp.multi_hot_mode == "slot":
+                for j in range(field.bag):
+                    table_col, self_ext, e, q, u, r_a, r_b = _embed_layer_update(
+                        table_col, self_ext, e, q, u, r_a, r_b, p2, p1, p0,
+                        j_ff, j_fs, j_ss, gids[:, j], field.weights[:, j],
+                        row_idx, field.vocab, field.offset, f, spec_col,
+                        other_f_nnz, o_spec_nnz, rows_nnz, hp, hp.eta,
+                    )
+            else:
+                flat_rows = jnp.repeat(row_idx, field.bag)
+                table_col, self_ext, e, q, u, r_a, r_b = _embed_layer_update(
+                    table_col, self_ext, e, q, u, r_a, r_b, p2, p1, p0,
+                    j_ff, j_fs, j_ss, gids.reshape(-1), field.weights.reshape(-1),
+                    flat_rows, field.vocab, field.offset, f, spec_col,
+                    other_f_nnz, o_spec_nnz, rows_nnz, hp, hp.jacobi_eta,
+                )
+        return sweeps.put_col(table, f, table_col), self_ext, e
+
+    table, self_ext, e = jax.lax.fori_loop(0, hp.k, dim_body, (table, self_ext, e))
+
+    # ---- linear weights --------------------------------------------------
+    if hp.use_linear and lin is not None:
+        u = segment_sum(alpha * e * o_spec_nnz, rows_nnz, n_rows)
+        r_b = self_ext @ other_j[:, spec_col]
+        for field in design.fields:
+            gids = design.global_ids(field)
+            slots = (
+                [(gids[:, j], field.weights[:, j], row_idx) for j in range(field.bag)]
+                if (field.one_hot or hp.multi_hot_mode == "slot")
+                else [(gids.reshape(-1), field.weights.reshape(-1), jnp.repeat(row_idx, field.bag))]
+            )
+            eta = hp.eta if (field.one_hot or hp.multi_hot_mode == "slot") else hp.jacobi_eta
+            for ids_g, xw, rows in slots:
+                local = ids_g - field.offset
+                lp = segment_sum(xw * jnp.take(u, rows), local, field.vocab)
+                lpp = segment_sum(xw * xw * jnp.take(p0, rows), local, field.vocab)
+                rp = segment_sum(xw * jnp.take(r_b, rows), local, field.vocab)
+                rpp = j_ss * segment_sum(xw * xw, local, field.vocab)
+                lin_layer = lin[field.offset : field.offset + field.vocab]
+                num = lp + hp.alpha0 * rp + hp.l2_lin * lin_layer
+                den = lpp + hp.alpha0 * rpp + hp.l2_lin
+                delta = -eta * num / jnp.maximum(den, 1e-12)
+                lin = lin.at[field.offset : field.offset + field.vocab].add(delta)
+                dspec = segment_sum(xw * jnp.take(delta, local), rows, n_rows)
+                self_ext = self_ext.at[:, spec_col].add(dspec)
+                e = e + jnp.take(dspec, rows_nnz) * o_spec_nnz
+                u = u + dspec * p0
+                r_b = r_b + dspec * j_ss
+
+    # ---- global bias (context side only) ----------------------------------
+    if hp.use_bias and bias is not None:
+        u = segment_sum(alpha * e * o_spec_nnz, rows_nnz, n_rows)
+        r_b = self_ext @ other_j[:, spec_col]
+        lp = jnp.sum(u)
+        lpp = jnp.sum(p0)
+        rp = jnp.sum(r_b)
+        rpp = j_ss * n_rows
+        delta = -hp.eta * (lp + hp.alpha0 * rp) / jnp.maximum(lpp + hp.alpha0 * rpp, 1e-12)
+        bias = bias + delta
+        self_ext = self_ext.at[:, spec_col].add(delta)
+        e = e + delta * o_spec_nnz
+
+    return table, lin, bias, self_ext, e
+
+
+@partial(jax.jit, static_argnames=("hp",))
+def epoch(
+    params: FMParams,
+    x: Design,
+    z: Design,
+    data: Interactions,
+    e: jax.Array,
+    hp: FMHyperParams,
+) -> Tuple[FMParams, jax.Array]:
+    b, w_lin, w, h_lin, h = params
+    pe = phi_ext(params, x, hp)
+    se = psi_ext(params, z, hp)
+
+    j_i = gram(se, implementation=hp.implementation)
+    w, w_lin, b, pe, e = _side_sweep(
+        w, w_lin if hp.use_linear else None, b if hp.use_bias else None,
+        pe, se, j_i, x, data.ctx, data.item, data.alpha, e,
+        spec_col=hp.k, hp=hp,
+    )
+
+    j_c = gram(pe, implementation=hp.implementation)
+    e_t = sweeps.to_item_major(e, data.t_perm)
+    alpha_t = sweeps.to_item_major(data.alpha, data.t_perm)
+    h, h_lin, _, se, e_t = _side_sweep(
+        h, h_lin if hp.use_linear else None, None,
+        se, pe, j_c, z, data.t_item, data.t_ctx, alpha_t, e_t,
+        spec_col=hp.k + 1, hp=hp,
+    )
+    e = sweeps.to_ctx_major(e_t, data.t_perm)
+    return FMParams(b, w_lin, w, h_lin, h), e
+
+
+def residuals(params: FMParams, x: Design, z: Design, data: Interactions, hp: FMHyperParams) -> jax.Array:
+    return sweeps.residuals_from_factors(
+        phi_ext(params, x, hp), psi_ext(params, z, hp), data.ctx, data.item, data.y
+    )
+
+
+def objective(params: FMParams, x: Design, z: Design, data: Interactions, hp: FMHyperParams) -> jax.Array:
+    e = residuals(params, x, z, data, hp)
+    sq = jnp.sum(params.w**2) + jnp.sum(params.h**2)
+    sq_lin = jnp.sum(params.w_lin**2) + jnp.sum(params.h_lin**2)
+    pe, se = phi_ext(params, x, hp), psi_ext(params, z, hp)
+    # NOTE: φ_spec/ψ_spec are model components, not free parameters — only
+    # the L2 on true parameters enters; the implicit R covers the rest.
+    return implicit_objective(
+        pe, se, e, data, hp.alpha0, 0.0, jnp.zeros(())
+    ) + hp.l2 * sq + hp.l2_lin * sq_lin
+
+
+def fit(params, x, z, data, hp, n_epochs, callback=None, refresh_residuals=True):
+    e = residuals(params, x, z, data, hp)
+    for ep in range(n_epochs):
+        if refresh_residuals and ep > 0:
+            e = residuals(params, x, z, data, hp)  # bound multi-hot drift
+        params, e = epoch(params, x, z, data, e, hp)
+        if callback is not None:
+            callback(ep, params)
+    return params

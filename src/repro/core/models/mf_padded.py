@@ -1,0 +1,153 @@
+"""Kernel-fused iCD-MF over the padded observation layout.
+
+Mathematically identical to ``repro.core.models.mf`` (same Newton steps, same
+sweep order) but laid out for the Pallas kernels:
+
+  * observations padded per row to the max degree (α=0 on padding) so the
+    explicit reductions become dense (bc, D_pad) VPU tiles — no segment ops;
+  * J via the ``gram`` MXU kernel;
+  * the whole column update (+ residual patch) fused in ``cd_update``.
+
+This is the "beyond-paper optimized" §Perf variant; the equivalence test
+(tests/test_mf_padded.py) pins it to the reference epoch. Degree-skewed data
+should be degree-bucketed before padding (see EXPERIMENTS.md §Perf for the
+measured padding overhead; the bucketing hook is ``degree_cap``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sweeps
+from repro.core.models.mf import MFHyperParams, MFParams
+from repro.kernels.cd_update.ops import cd_column_update
+from repro.kernels.gram.ops import gram as gram_kernel
+from repro.sparse.interactions import Interactions
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaddedInteractions:
+    """Dual padded layout of the rescaled observed set S̄."""
+
+    # context-major: (n_ctx, d_ctx)
+    item_ids: jax.Array
+    alpha_c: jax.Array   # 0 on padding
+    y_c: jax.Array
+    # item-major: (n_items, d_item)
+    ctx_ids: jax.Array
+    alpha_i: jax.Array
+    y_i: jax.Array
+    # flat(ctx-major nnz) <-> padded coordinates, for residual transfer
+    c_rows: jax.Array    # (nnz,) row in ctx-major padded grid
+    c_cols: jax.Array    # (nnz,) slot in ctx-major padded grid
+    i_rows: jax.Array    # (nnz,) row in item-major padded grid (ctx-major order)
+    i_cols: jax.Array
+    n_ctx: int = dataclasses.field(metadata=dict(static=True))
+    n_items: int = dataclasses.field(metadata=dict(static=True))
+
+
+def pad_interactions(data: Interactions, lane: int = 128) -> PaddedInteractions:
+    """Host-side: build the dual padded layout (degrees padded to the max,
+    slot dim rounded up to the TPU lane width)."""
+    ctx = np.asarray(data.ctx)
+    item = np.asarray(data.item)
+    alpha = np.asarray(data.alpha)
+    y = np.asarray(data.y)
+    nnz = len(ctx)
+
+    def build(rows, n_rows):
+        deg = np.bincount(rows, minlength=n_rows)
+        d_pad = max(lane, int(-(-max(1, deg.max()) // lane) * lane))
+        slot = np.zeros(nnz, np.int64)
+        counter = np.zeros(n_rows, np.int64)
+        for j, r in enumerate(rows):  # rows are sorted; cheap slot assignment
+            slot[j] = counter[r]
+            counter[r] += 1
+        return d_pad, slot
+
+    d_c, slot_c = build(ctx, data.n_ctx)
+    order_i = np.lexsort((ctx, item))
+    d_i, slot_i_sorted = build(item[order_i], data.n_items)
+    slot_i = np.empty(nnz, np.int64)
+    slot_i[order_i] = slot_i_sorted
+
+    def scatter(shape, rows, cols, vals, dtype, fill=0):
+        out = np.full(shape, fill, dtype)
+        out[rows, cols] = vals
+        return out
+
+    item_ids = scatter((data.n_ctx, d_c), ctx, slot_c, item, np.int32)
+    alpha_c = scatter((data.n_ctx, d_c), ctx, slot_c, alpha, np.float32)
+    y_c = scatter((data.n_ctx, d_c), ctx, slot_c, y, np.float32)
+    ctx_ids = scatter((data.n_items, d_i), item, slot_i, ctx, np.int32)
+    alpha_i = scatter((data.n_items, d_i), item, slot_i, alpha, np.float32)
+    y_i = scatter((data.n_items, d_i), item, slot_i, y, np.float32)
+
+    return PaddedInteractions(
+        item_ids=jnp.asarray(item_ids), alpha_c=jnp.asarray(alpha_c),
+        y_c=jnp.asarray(y_c),
+        ctx_ids=jnp.asarray(ctx_ids), alpha_i=jnp.asarray(alpha_i),
+        y_i=jnp.asarray(y_i),
+        c_rows=jnp.asarray(ctx, dtype=jnp.int32),
+        c_cols=jnp.asarray(slot_c, dtype=jnp.int32),
+        i_rows=jnp.asarray(item, dtype=jnp.int32),
+        i_cols=jnp.asarray(slot_i, dtype=jnp.int32),
+        n_ctx=data.n_ctx, n_items=data.n_items,
+    )
+
+
+def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
+    def body(f, carry):
+        side_m, e_pad = carry
+        psi_pad = jnp.take(sweeps.take_col(other, f), ids_pad)   # (n, d_pad)
+        r1 = side_m @ sweeps.take_col(other_j, f)
+        w_new, e_pad = cd_column_update(
+            psi_pad, alpha_pad, e_pad, sweeps.take_col(side_m, f), r1,
+            other_j[f, f], alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+        )
+        return sweeps.put_col(side_m, f, w_new), e_pad
+
+    return jax.lax.fori_loop(0, side.shape[1], body, (side, e_pad))
+
+
+@partial(jax.jit, static_argnames=("hp",))
+def epoch(
+    params: MFParams, pdata: PaddedInteractions, e_pad: jax.Array, hp: MFHyperParams
+) -> Tuple[MFParams, jax.Array]:
+    """Kernel-fused iCD epoch; carries the ctx-major padded residual grid."""
+    w, h = params
+
+    j_i = gram_kernel(h)
+    w, e_pad = _padded_side_sweep(w, h, j_i, pdata.item_ids, pdata.alpha_c, e_pad, hp)
+
+    # transfer residual grid ctx-major → item-major through flat nnz order
+    e_flat = e_pad[pdata.c_rows, pdata.c_cols]
+    e_pad_i = jnp.zeros_like(pdata.alpha_i).at[pdata.i_rows, pdata.i_cols].set(e_flat)
+
+    j_c = gram_kernel(w)
+    h, e_pad_i = _padded_side_sweep(h, w, j_c, pdata.ctx_ids, pdata.alpha_i, e_pad_i, hp)
+
+    e_flat = e_pad_i[pdata.i_rows, pdata.i_cols]
+    e_pad = jnp.zeros_like(pdata.alpha_c).at[pdata.c_rows, pdata.c_cols].set(e_flat)
+    return MFParams(w, h), e_pad
+
+
+def residuals(params: MFParams, pdata: PaddedInteractions) -> jax.Array:
+    """ŷ−ȳ on the ctx-major padded grid (garbage on padding, α=0 kills it)."""
+    scores = jnp.sum(
+        params.w[:, None, :] * jnp.take(params.h, pdata.item_ids, axis=0), axis=-1
+    )
+    return scores - pdata.y_c
+
+
+def fit(params, pdata, hp, n_epochs):
+    e_pad = residuals(params, pdata)
+    for _ in range(n_epochs):
+        params, e_pad = epoch(params, pdata, e_pad, hp)
+    return params

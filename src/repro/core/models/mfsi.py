@@ -1,0 +1,220 @@
+"""iCD for Matrix Factorization with Side Information (paper §5.2.1, Alg. 3).
+
+Model (eq. 20): ŷ(c,i) = x_c W (z_i H)ᵀ with feature embeddings
+W ∈ R^{p×k}, H ∈ R^{p'×k}. k-separable via φ_f(c) = Σ_l x_{c,l} w_{l,f}
+(eq. 21); gradients sparse in f (eq. 22), so
+
+    R'(w_{l*,f*})  = 2 Σ_f J_I(f,f*) Σ_c x_{c,l*} φ_f(c)        (eq. 23)
+    R''(w_{l*,f*}) = 2 J_I(f*,f*) Σ_c x_{c,l*}²                 (eq. 24)
+
+and Φ is kept in sync with the eq. (25) incremental update. Per-epoch cost
+O(k²(N_Z(X)+N_Z(Z))) for the implicit part — the paper's bound.
+
+TPU sweep layout (DESIGN.md §3): coordinates of a one-hot field never share
+a row, so a whole field × one dimension updates as a single vectorized
+Newton step. The explicit part uses three per-context caches that are
+patched incrementally instead of recomputed:
+
+    q_c  = Σ_{i∈S_c} ᾱ e ψ_{f*}(i)     (patched: Δq = Δφ_{f*}·p2)
+    p2_c = Σ_{i∈S_c} ᾱ ψ_{f*}(i)²      (constant during the side sweep)
+    r_c  = Σ_f J(f,f*) φ_f(c)          (patched: Δr = Δφ_{f*}·J(f*,f*))
+
+One-hot (categorical) fields update EXACTLY — no two features of such a
+field share a context row, so the vectorized step equals scalar CD. Features
+of a multi-hot (bag) field DO share rows; updating them in parallel is not
+scalar CD. Two documented modes (the one deliberate deviation from the
+paper, forced by TPU parallelism — DESIGN.md §3):
+
+  - ``jacobi`` (default): one damped (η≈0.5) parallel Newton step per field
+    with full row sums — parallel-CD à la Bradley et al.; converges in all
+    our experiments and is the production mode.
+  - ``slot``: sequential over bag slots; each slot update uses only the rows
+    where the feature occupies that slot (fresh residuals between slots) —
+    a mini-batched CD flavour that tolerates η=1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sweeps
+from repro.core.design import Design, design_matmul
+from repro.core.gram import gram
+from repro.core.implicit import implicit_objective
+from repro.sparse.interactions import Interactions
+from repro.sparse.segment import segment_sum
+
+
+class MFSIParams(NamedTuple):
+    w: jax.Array  # (p_ctx, k)  stacked context-feature embeddings
+    h: jax.Array  # (p_item, k) stacked item-feature embeddings
+
+
+@dataclasses.dataclass(frozen=True)
+class MFSIHyperParams:
+    k: int
+    alpha0: float = 1.0
+    l2: float = 0.1
+    eta: float = 1.0
+    multi_hot_mode: str = "jacobi"  # 'jacobi' | 'slot'
+    jacobi_eta: float = 0.5
+    implementation: str = "xla"
+
+
+def init(key: jax.Array, p_ctx: int, p_item: int, k: int, sigma: float = 0.1) -> MFSIParams:
+    kw, kh = jax.random.split(key)
+    return MFSIParams(
+        w=sigma * jax.random.normal(kw, (p_ctx, k), dtype=jnp.float32),
+        h=sigma * jax.random.normal(kh, (p_item, k), dtype=jnp.float32),
+    )
+
+
+def phi(params: MFSIParams, x: Design) -> jax.Array:
+    return design_matmul(x, params.w)
+
+
+def psi(params: MFSIParams, z: Design) -> jax.Array:
+    return design_matmul(z, params.h)
+
+
+def predict(params: MFSIParams, x: Design, z: Design, ctx, item) -> jax.Array:
+    ph, ps = phi(params, x), psi(params, z)
+    return jnp.sum(jnp.take(ph, ctx, axis=0) * jnp.take(ps, item, axis=0), axis=-1)
+
+
+def _field_layer_update(
+    table_col, phi_col, e, q, r_vec, p2, jff,
+    ids_g, xw, rows, vocab, offset, other_nnz, rows_nnz, alpha, n_rows, hp, eta,
+):
+    """One vectorized Newton update of a one-hot layer (field or bag slot).
+
+    ids_g:  (n,) global feature ids for this layer (offset applied)
+    xw:     (n,) feature values x_{c,l} (0 ⇒ row inactive in this layer)
+    rows:   (n,) context row per entry (identity for bag=1 fields)
+    """
+    w_layer = table_col[offset : offset + vocab]
+    lp = segment_sum(xw * jnp.take(q, rows), ids_g - offset, vocab)
+    lpp = segment_sum(xw * xw * jnp.take(p2, rows), ids_g - offset, vocab)
+    rp = segment_sum(xw * jnp.take(r_vec, rows), ids_g - offset, vocab)
+    rpp = jff * segment_sum(xw * xw, ids_g - offset, vocab)
+    num = lp + hp.alpha0 * rp + hp.l2 * w_layer
+    den = lpp + hp.alpha0 * rpp + hp.l2
+    delta = -eta * num / jnp.maximum(den, 1e-12)
+
+    # scatter the step back + incremental patches (eq. 25 and DESIGN.md §3)
+    table_col = table_col.at[offset : offset + vocab].add(delta)
+    dphi_rows = segment_sum(xw * jnp.take(delta, ids_g - offset), rows, q.shape[0])
+    phi_col = phi_col + dphi_rows
+    q = q + dphi_rows * p2
+    r_vec = r_vec + dphi_rows * jff
+    e = e + jnp.take(dphi_rows, rows_nnz) * other_nnz
+    return table_col, phi_col, e, q, r_vec
+
+
+def _side_sweep(
+    table: jax.Array,       # (p, k) this side's feature embeddings
+    phi_m: jax.Array,       # (n_rows, k) this side's Φ (kept in sync)
+    other_psi: jax.Array,   # (n_other, k) opposite side's Ψ (fixed)
+    other_j: jax.Array,     # (k, k) Gram of Ψ
+    design: Design,
+    rows_nnz: jax.Array,    # (nnz,) this-side row per observation
+    other_nnz_ids: jax.Array,  # (nnz,) opposite-side row per observation
+    alpha: jax.Array,
+    e: jax.Array,
+    hp: MFSIHyperParams,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    n_rows = design.n_rows
+    row_idx = jnp.arange(n_rows, dtype=jnp.int32)
+
+    def dim_body(f, carry):
+        table, phi_m, e = carry
+        psi_col = sweeps.take_col(other_psi, f)
+        psi_nnz = jnp.take(psi_col, other_nnz_ids)
+        p2 = segment_sum(alpha * psi_nnz * psi_nnz, rows_nnz, n_rows)
+        q = segment_sum(alpha * e * psi_nnz, rows_nnz, n_rows)
+        r_vec = phi_m @ sweeps.take_col(other_j, f)
+        jff = other_j[f, f]
+        table_col = sweeps.take_col(table, f)
+        phi_col = sweeps.take_col(phi_m, f)
+
+        for field in design.fields:
+            gids = design.global_ids(field)
+            if field.one_hot or hp.multi_hot_mode == "slot":
+                # one-hot: EXACT (features never share a row); multi-hot
+                # 'slot': sequential slot layers with fresh residuals.
+                for j in range(field.bag):
+                    table_col, phi_col, e, q, r_vec = _field_layer_update(
+                        table_col, phi_col, e, q, r_vec, p2, jff,
+                        gids[:, j], field.weights[:, j], row_idx,
+                        field.vocab, field.offset,
+                        psi_nnz, rows_nnz, alpha, n_rows, hp, hp.eta,
+                    )
+            else:  # jacobi: whole bag in one damped parallel step
+                flat_rows = jnp.repeat(row_idx, field.bag)
+                table_col, phi_col, e, q, r_vec = _field_layer_update(
+                    table_col, phi_col, e, q, r_vec, p2, jff,
+                    gids.reshape(-1), field.weights.reshape(-1), flat_rows,
+                    field.vocab, field.offset,
+                    psi_nnz, rows_nnz, alpha, n_rows, hp, hp.jacobi_eta,
+                )
+
+        table = sweeps.put_col(table, f, table_col)
+        phi_m = sweeps.put_col(phi_m, f, phi_col)
+        return table, phi_m, e
+
+    table, phi_m, e = jax.lax.fori_loop(0, hp.k, dim_body, (table, phi_m, e))
+    return table, phi_m, e
+
+
+@partial(jax.jit, static_argnames=("hp",))
+def epoch(
+    params: MFSIParams,
+    x: Design,
+    z: Design,
+    data: Interactions,
+    e: jax.Array,
+    hp: MFSIHyperParams,
+) -> Tuple[MFSIParams, jax.Array]:
+    """One iCD epoch: full context-feature sweep, then item-feature sweep."""
+    w, h = params
+    phi_m = design_matmul(x, w)
+    psi_m = design_matmul(z, h)
+
+    j_i = gram(psi_m, implementation=hp.implementation)
+    w, phi_m, e = _side_sweep(
+        w, phi_m, psi_m, j_i, x, data.ctx, data.item, data.alpha, e, hp
+    )
+
+    j_c = gram(phi_m, implementation=hp.implementation)
+    e_t = sweeps.to_item_major(e, data.t_perm)
+    alpha_t = sweeps.to_item_major(data.alpha, data.t_perm)
+    h, psi_m, e_t = _side_sweep(
+        h, psi_m, phi_m, j_c, z, data.t_item, data.t_ctx, alpha_t, e_t, hp
+    )
+    e = sweeps.to_ctx_major(e_t, data.t_perm)
+    return MFSIParams(w, h), e
+
+
+def residuals(params: MFSIParams, x: Design, z: Design, data: Interactions) -> jax.Array:
+    return sweeps.residuals_from_factors(
+        phi(params, x), psi(params, z), data.ctx, data.item, data.y
+    )
+
+
+def objective(params: MFSIParams, x: Design, z: Design, data: Interactions, hp: MFSIHyperParams) -> jax.Array:
+    e = residuals(params, x, z, data)
+    sq = jnp.sum(params.w**2) + jnp.sum(params.h**2)
+    return implicit_objective(phi(params, x), psi(params, z), e, data, hp.alpha0, hp.l2, sq)
+
+
+def fit(params, x, z, data, hp, n_epochs, callback=None):
+    e = residuals(params, x, z, data)
+    for ep in range(n_epochs):
+        params, e = epoch(params, x, z, data, e, hp)
+        if callback is not None:
+            callback(ep, params)
+    return params

@@ -1,0 +1,221 @@
+"""iCD for PARAFAC tensor factorization (paper §5.3.1).
+
+Model (eq. 34): ŷ(c1,c2,i) = Σ_f u_{c1,f} v_{c2,f} w_{i,f}, the 3-mode
+extension of MF. k-separable with φ_f(c1,c2) = u_{c1,f}·v_{c2,f} and
+ψ_f(i) = w_{i,f} (eq. 35). The regularizer derivatives (eqs. 37–38) reduce
+to per-c1 reductions over that context's *partner* c2 values:
+
+    R'(u_{c1*,f*})  = 2 Σ_f J_I(f,f*) u_{c1*,f} K_{c1*}(f,f*)
+    R''(u_{c1*,f*}) = 2 J_I(f*,f*) K_{c1*}(f*,f*)
+    K_{c1}(f,f*)    = Σ_{c2:(c1,c2)∈C} v_{c2,f} v_{c2,f*}
+
+Context modes (paper's distinction):
+  * ``sparse``  — C ⊂ C1×C2 is exactly the provided pair list; K is a
+    segment-reduce over pairs. O((|C|+|I|)k²) per epoch.
+  * ``dense``   — C = C1×C2; K decomposes to J_{C2} (eq. 39), identical for
+    every c1, and J_C = J_{C1} ⊙ J_{C2} for the item sweep.
+    O((|C1|+|C2|+|I|)k²) per epoch — no pair materialization.
+
+The item sweep is exactly MF's (§5.1): "The item side is equivalent to
+matrix factorization."
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sweeps
+from repro.core.gram import gram
+from repro.core.implicit import explicit_loss
+from repro.sparse.interactions import Interactions
+from repro.sparse.segment import segment_sum
+
+
+class PARAFACParams(NamedTuple):
+    u: jax.Array  # (n_c1, k)
+    v: jax.Array  # (n_c2, k)
+    w: jax.Array  # (n_items, k)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TensorContext:
+    """Observed context pairs C ⊆ C1×C2. ``Interactions.ctx`` indexes rows
+    of this pair list."""
+
+    c1: jax.Array  # (n_ctx,) int32
+    c2: jax.Array  # (n_ctx,) int32
+    n_c1: int = dataclasses.field(metadata=dict(static=True))
+    n_c2: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_ctx(self) -> int:
+        return int(self.c1.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class PARAFACHyperParams:
+    k: int
+    alpha0: float = 1.0
+    l2: float = 0.1
+    eta: float = 1.0
+    dense_context: bool = False  # True ⇒ regularizer universe is C1×C2
+    implementation: str = "xla"
+
+
+def init(key, n_c1: int, n_c2: int, n_items: int, k: int, sigma: float = 0.1) -> PARAFACParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return PARAFACParams(
+        u=sigma * jax.random.normal(k1, (n_c1, k), jnp.float32),
+        v=sigma * jax.random.normal(k2, (n_c2, k), jnp.float32),
+        w=sigma * jax.random.normal(k3, (n_items, k), jnp.float32),
+    )
+
+
+def phi(params: PARAFACParams, tc: TensorContext) -> jax.Array:
+    """Φ over the observed pair list (sparse-context materialization)."""
+    return jnp.take(params.u, tc.c1, axis=0) * jnp.take(params.v, tc.c2, axis=0)
+
+
+def psi(params: PARAFACParams) -> jax.Array:
+    return params.w
+
+
+def predict(params: PARAFACParams, c1, c2, item) -> jax.Array:
+    return jnp.sum(
+        jnp.take(params.u, c1, axis=0)
+        * jnp.take(params.v, c2, axis=0)
+        * jnp.take(params.w, item, axis=0),
+        axis=-1,
+    )
+
+
+def _context_mode_sweep(
+    side: jax.Array,          # (n_side, k): U (group by c1) or V (group by c2)
+    partner: jax.Array,       # (n_partner, k): V or U
+    group_of_pair: jax.Array,     # (n_ctx,) c1 or c2 per pair
+    partner_of_pair: jax.Array,   # (n_ctx,) c2 or c1 per pair
+    j_i: jax.Array,
+    data: Interactions,
+    w_items: jax.Array,
+    e: jax.Array,
+    n_side: int,
+    hp: PARAFACHyperParams,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sweep one context mode (U or V). Sparse-context K via segment sums;
+    dense-context K via the partner Gram (eq. 39)."""
+    pair_of_nnz = data.ctx
+
+    def body(f, carry):
+        side_m, e = carry
+        s_col = sweeps.take_col(side_m, f)
+        p_col_pair = jnp.take(sweeps.take_col(partner, f), partner_of_pair)  # (n_ctx,)
+        w_col_nnz = jnp.take(sweeps.take_col(w_items, f), data.item)
+        other_nnz = jnp.take(p_col_pair, pair_of_nnz) * w_col_nnz  # ∂ŷ per nnz
+
+        grp_nnz = jnp.take(group_of_pair, pair_of_nnz)
+        lp = segment_sum(data.alpha * e * other_nnz, grp_nnz, n_side)
+        lpp = segment_sum(data.alpha * other_nnz * other_nnz, grp_nnz, n_side)
+
+        if hp.dense_context:
+            # K_{c1}(·,f*) = J_partner[:, f*] — identical for every group row.
+            j_p_col = partner.T @ sweeps.take_col(partner, f)        # (k,)
+            kmat = jnp.broadcast_to(j_p_col[None, :], side_m.shape)  # (n_side, k)
+        else:
+            pp = jnp.take(partner, partner_of_pair, axis=0)          # (n_ctx, k)
+            kmat = segment_sum(pp * p_col_pair[:, None], group_of_pair, n_side)
+        rp = jnp.sum(kmat * side_m * sweeps.take_col(j_i, f)[None, :], axis=1)
+        rpp = j_i[f, f] * sweeps.take_col(kmat, f)
+
+        delta = sweeps.newton_delta(
+            sweeps.NewtonParts(lp + hp.alpha0 * rp, lpp + hp.alpha0 * rpp),
+            s_col, hp.l2, hp.eta,
+        )
+        e = e + jnp.take(delta, grp_nnz) * other_nnz
+        return sweeps.put_col(side_m, f, s_col + delta), e
+
+    return jax.lax.fori_loop(0, hp.k, body, (side, e))
+
+
+def _item_sweep(params_w, j_c, phi_cols_nnz, data, e_t, alpha_t, hp):
+    """MF item sweep (paper: identical to §5.1)."""
+
+    def body(f, carry):
+        w_m, e_t = carry
+        o_col = phi_cols_nnz(f)
+        w_col = sweeps.take_col(w_m, f)
+        lp = segment_sum(alpha_t * e_t * o_col, data.t_item, data.n_items)
+        lpp = segment_sum(alpha_t * o_col * o_col, data.t_item, data.n_items)
+        rp = w_m @ sweeps.take_col(j_c, f)
+        rpp = j_c[f, f]
+        delta = sweeps.newton_delta(
+            sweeps.NewtonParts(lp + hp.alpha0 * rp, lpp + hp.alpha0 * rpp),
+            w_col, hp.l2, hp.eta,
+        )
+        e_t = e_t + jnp.take(delta, data.t_item) * o_col
+        return sweeps.put_col(w_m, f, w_col + delta), e_t
+
+    return jax.lax.fori_loop(0, hp.k, body, (params_w, e_t))
+
+
+@partial(jax.jit, static_argnames=("hp",))
+def epoch(
+    params: PARAFACParams,
+    tc: TensorContext,
+    data: Interactions,
+    e: jax.Array,
+    hp: PARAFACHyperParams,
+) -> Tuple[PARAFACParams, jax.Array]:
+    """One iCD epoch: U sweep → V sweep → item (W) sweep."""
+    u, v, w = params
+    j_i = gram(w, implementation=hp.implementation)
+
+    u, e = _context_mode_sweep(
+        u, v, tc.c1, tc.c2, j_i, data, w, e, u.shape[0], hp
+    )
+    v, e = _context_mode_sweep(
+        v, u, tc.c2, tc.c1, j_i, data, w, e, v.shape[0], hp
+    )
+
+    if hp.dense_context:
+        j_c = gram(u) * gram(v)  # eq. (39): J_C = J_{C1} ⊙ J_{C2}
+    else:
+        j_c = gram(jnp.take(u, tc.c1, axis=0) * jnp.take(v, tc.c2, axis=0))
+    e_t = sweeps.to_item_major(e, data.t_perm)
+    alpha_t = sweeps.to_item_major(data.alpha, data.t_perm)
+    phi_cols = lambda f: jnp.take(
+        jnp.take(sweeps.take_col(u, f), tc.c1) * jnp.take(sweeps.take_col(v, f), tc.c2),
+        data.t_ctx,
+    )
+    w, e_t = _item_sweep(w, j_c, phi_cols, data, e_t, alpha_t, hp)
+    e = sweeps.to_ctx_major(e_t, data.t_perm)
+    return PARAFACParams(u, v, w), e
+
+
+def residuals(params: PARAFACParams, tc: TensorContext, data: Interactions) -> jax.Array:
+    return sweeps.residuals_from_factors(
+        phi(params, tc), params.w, data.ctx, data.item, data.y
+    )
+
+
+def objective(params: PARAFACParams, tc: TensorContext, data: Interactions, hp: PARAFACHyperParams) -> jax.Array:
+    e = residuals(params, tc, data)
+    if hp.dense_context:
+        reg = jnp.sum(gram(params.u) * gram(params.v) * gram(params.w))
+    else:
+        reg = jnp.sum(gram(phi(params, tc)) * gram(params.w))
+    sq = sum(jnp.sum(p**2) for p in params)
+    return explicit_loss(e, data.alpha) + hp.alpha0 * reg + hp.l2 * sq
+
+
+def fit(params, tc, data, hp, n_epochs, callback=None):
+    e = residuals(params, tc, data)
+    for ep in range(n_epochs):
+        params, e = epoch(params, tc, data, e, hp)
+        if callback is not None:
+            callback(ep, params)
+    return params

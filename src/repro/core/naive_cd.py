@@ -1,0 +1,118 @@
+"""Conventional CD over the FULL implicit matrix — the paper's strawman.
+
+This is the O(|C||I|k) per-epoch solver of §3.2 applied directly to
+``S_impl`` (eq. 5): every context-item cell, including all zeros, enters the
+loss. It exists for two reasons:
+
+1. **Exactness oracle** — iCD (Lemma 1 + Lemma 2) must produce *identical*
+   parameter trajectories: same init, same sweep order ⇒ same Newton steps.
+   ``tests/test_icd_exact.py`` asserts this to ~1e-5.
+2. **Figure 8** — the 4-orders-of-magnitude cost gap between conventional CD
+   and iCD is reproduced by ``benchmarks/fig8_cost.py`` using the FLOP
+   counts of these two implementations.
+
+Only feasible for tiny |C|,|I|; guarded accordingly.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sweeps
+from repro.core.models.mf import MFHyperParams, MFParams
+
+
+def dense_from_observed(
+    ctx, item, y, alpha, n_ctx: int, n_items: int, alpha0: float
+) -> Tuple[jax.Array, jax.Array]:
+    """Materialize (Y, A) of S_impl: zeros with confidence α₀ everywhere
+    except the observed cells (y with confidence α)."""
+    y_dense = jnp.zeros((n_ctx, n_items), jnp.float32).at[ctx, item].set(y)
+    a_dense = (
+        jnp.full((n_ctx, n_items), alpha0, jnp.float32).at[ctx, item].set(alpha)
+    )
+    return y_dense, a_dense
+
+
+@partial(jax.jit, static_argnames=("hp",))
+def epoch_dense(
+    params: MFParams, y_dense: jax.Array, a_dense: jax.Array, hp: MFHyperParams
+) -> MFParams:
+    """One conventional-CD epoch on the dense objective, with the same
+    column-major sweep order as ``repro.core.models.mf.epoch``."""
+    w, h = params
+
+    def w_body(f, w):
+        err = w @ h.T - y_dense                      # (C, I) — the O(|C||I|) part
+        h_col = sweeps.take_col(h, f)
+        w_col = sweeps.take_col(w, f)
+        num = (a_dense * err) @ h_col + hp.l2 * w_col
+        den = a_dense @ (h_col * h_col) + hp.l2
+        return sweeps.put_col(w, f, w_col - hp.eta * num / den)
+
+    w = jax.lax.fori_loop(0, w.shape[1], w_body, w)
+
+    def h_body(f, h):
+        err = w @ h.T - y_dense
+        w_col = sweeps.take_col(w, f)
+        h_col = sweeps.take_col(h, f)
+        num = (a_dense * err).T @ w_col + hp.l2 * h_col
+        den = a_dense.T @ (w_col * w_col) + hp.l2
+        return sweeps.put_col(h, f, h_col - hp.eta * num / den)
+
+    h = jax.lax.fori_loop(0, h.shape[1], h_body, h)
+    return MFParams(w, h)
+
+
+def epoch_dense_mfsi(
+    params,
+    x_dense: jax.Array,   # (C, p)  materialized context design
+    z_dense: jax.Array,   # (I, p') materialized item design
+    field_slices,         # tuple of (offset, vocab) per context field
+    field_slices_item,    # same for item fields
+    y_dense: jax.Array,
+    a_dense: jax.Array,
+    hp,
+):
+    """Conventional CD for MFSI on the dense implicit matrix, sweeping in the
+    same order as ``repro.core.models.mfsi.epoch`` (dim-major, fields
+    sequential, one-hot features vectorized). Oracle for exactness tests."""
+    w, h = params
+    k = w.shape[1]
+
+    for f in range(k):
+        for (off, voc) in field_slices:
+            x_g = x_dense[:, off : off + voc]              # (C, vocab)
+            err = (x_dense @ w) @ (z_dense @ h).T - y_dense
+            psi_col = z_dense @ h[:, f]
+            num = x_g.T @ ((a_dense * err) @ psi_col) + hp.l2 * w[off : off + voc, f]
+            den = (x_g * x_g).T @ (a_dense @ (psi_col * psi_col)) + hp.l2
+            w = w.at[off : off + voc, f].add(-hp.eta * num / jnp.maximum(den, 1e-12))
+
+    for f in range(k):
+        for (off, voc) in field_slices_item:
+            z_g = z_dense[:, off : off + voc]
+            err = (x_dense @ w) @ (z_dense @ h).T - y_dense
+            phi_col = x_dense @ w[:, f]
+            num = z_g.T @ ((a_dense * err).T @ phi_col) + hp.l2 * h[off : off + voc, f]
+            den = (z_g * z_g).T @ (a_dense.T @ (phi_col * phi_col)) + hp.l2
+            h = h.at[off : off + voc, f].add(-hp.eta * num / jnp.maximum(den, 1e-12))
+
+    return type(params)(w, h)
+
+
+def flops_per_epoch_dense(n_ctx: int, n_items: int, k: int) -> float:
+    """Conventional CD: each of the 2k column updates recomputes the dense
+    error (|C||I|k) and reduces over |C||I|. ≈ 2k·(|C||I|(k+4))."""
+    return 2.0 * k * (n_ctx * n_items * (k + 4.0))
+
+
+def flops_per_epoch_icd(n_ctx: int, n_items: int, nnz: int, k: int) -> float:
+    """iCD (paper §5.1): O((|C|+|I|)k² + |S|k) per epoch.
+    Grams: (|C|+|I|)k² MACs; sweeps: per column ~6·nnz + (|C|+|I|)·k."""
+    return 2.0 * ((n_ctx + n_items) * k * k) + 2.0 * k * (
+        6.0 * nnz + (n_ctx + n_items) * k
+    )

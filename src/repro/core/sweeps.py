@@ -1,0 +1,69 @@
+"""Shared machinery for iCD column sweeps.
+
+The TPU adaptation of Algorithm 1/2/3 (see DESIGN.md §3): for a fixed
+embedding dimension ``f*`` the Newton updates of all coordinates on one side
+are independent, so each inner loop of the paper becomes ONE vectorized
+column update:
+
+    gather → segment-reduce (explicit part from the residual cache)
+    k-vector contraction with the opposite Gram (implicit part, Lemma 3)
+    fused Newton step  θ ← θ − η·(L'/2 + α₀R'/2 + λθ)/(L''/2 + α₀R''/2 + λ)
+    rank-1 residual patch
+
+All helpers are jit-friendly; the f* loop is a ``lax.fori_loop`` with the
+parameter matrix as carry.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NewtonParts(NamedTuple):
+    """Halved derivative pieces; the common factor 2 of eqs. (2,3,13,14)
+    cancels in the Newton ratio so we carry L'/2 etc. throughout."""
+
+    grad: jax.Array  # L'/2 + α₀·R'/2   (no L2 term yet)
+    hess: jax.Array  # L''/2 + α₀·R''/2 (no L2 term yet)
+
+
+def newton_delta(
+    parts: NewtonParts, theta: jax.Array, l2: float, eta: float
+) -> jax.Array:
+    """η-damped Newton step on the 1-D quadratic (exact at η=1 for
+    multilinear models, paper §3.2). Returns Δθ."""
+    num = parts.grad + l2 * theta
+    den = parts.hess + l2
+    return -eta * num / den
+
+
+def take_col(m: jax.Array, f) -> jax.Array:
+    """m[:, f] with a traced index."""
+    return jax.lax.dynamic_slice_in_dim(m, f, 1, axis=1)[:, 0]
+
+
+def put_col(m: jax.Array, f, col: jax.Array) -> jax.Array:
+    """m with column f replaced (traced index)."""
+    return jax.lax.dynamic_update_slice_in_dim(m, col[:, None], f, axis=1)
+
+
+def residuals_from_factors(
+    phi: jax.Array, psi: jax.Array, ctx: jax.Array, item: jax.Array, y: jax.Array
+) -> jax.Array:
+    """e = ŷ − ȳ on observed pairs: Σ_f φ_f(c)ψ_f(i) − ȳ, per nnz."""
+    scores = jnp.sum(
+        jnp.take(phi, ctx, axis=0) * jnp.take(psi, item, axis=0), axis=-1
+    )
+    return scores - y
+
+
+def to_item_major(e_ctx_major: jax.Array, t_perm: jax.Array) -> jax.Array:
+    """Permute a per-nnz vector from context-major to item-major order."""
+    return jnp.take(e_ctx_major, t_perm)
+
+
+def to_ctx_major(e_item_major: jax.Array, t_perm: jax.Array) -> jax.Array:
+    """Inverse permutation of :func:`to_item_major`."""
+    return jnp.zeros_like(e_item_major).at[t_perm].set(e_item_major)

@@ -1,0 +1,30 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package ships three layers:
+  kernel.py — ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (padding, dtype policy, interpret switch)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  gram            — tall-skinny AᵀA (Lemma 2's J matrices): row-blocked MXU
+                    accumulation in VMEM. The iCD inner product engine.
+  cd_update       — fused iCD Newton column update over the padded-CSR
+                    observation layout (explicit+implicit parts + residual
+                    patch in one VMEM pass).
+  embedding_bag   — multi-hot EmbeddingBag as one-hot×table MXU matmuls,
+                    vocab-block streamed (recsys hot path).
+  flash_attention — online-softmax attention (causal / sliding-window /
+                    logit-softcap) for the LM zoo's prefill shapes.
+
+This container is CPU-only: kernels are validated with ``interpret=True``
+(the Pallas interpreter executes the same BlockSpec program in Python).
+On TPU the same code path sets ``interpret=False``.
+"""
+
+INTERPRET = True  # flipped to False on real TPU backends by launch/mesh.py
+
+
+def use_interpret() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"

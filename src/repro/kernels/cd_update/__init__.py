@@ -1,0 +1,1 @@
+from repro.kernels.cd_update.ops import cd_column_update  # noqa: F401

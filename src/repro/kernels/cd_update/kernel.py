@@ -1,0 +1,98 @@
+"""Pallas fused iCD Newton column update (the paper's Algorithm 2 inner loop).
+
+One grid step processes a block of contexts for a fixed embedding dimension
+f*. The padded observation layout (each context's interactions padded to
+D_pad, α pre-zeroed on padding) makes every tensor dense:
+
+  inputs  (per block): ψ tile (bc, D_pad) — pre-gathered ψ_{f*}(item)
+                       α tile, e tile     — confidences / residual cache
+                       w (bc, 1), r1 (bc, 1) — column + R'/2 ≡ (W·J[:,f*])
+                       jff (1,1)          — J(f*,f*)
+  compute: L'/2  = Σ_d α·e·ψ            (VPU row reduce)
+           L''/2 = Σ_d α·ψ²
+           Δ     = −η·(L'/2 + α₀·R'/2 + λw)/(L''/2 + α₀·J(f*,f*) + λ)
+           e    += Δ·ψ                   (rank-1 residual patch)
+  outputs: w_new (bc,1), e_new (bc,D_pad)
+
+The fusion saves 4 HBM round-trips of (C, D_pad) intermediates versus the
+XLA segment-sum path (gather → mul → reduce → newton → scatter as separate
+ops). VMEM per step: 3·bc·D_pad·4 B ≈ 3 MiB at bc=256, D_pad=1024.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cd_kernel(alpha0, l2, eta, psi_ref, alpha_ref, e_ref, w_ref, r1_ref,
+               jff_ref, w_out_ref, e_out_ref):
+    psi = psi_ref[...].astype(jnp.float32)
+    alpha = alpha_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # (bc, 1)
+    r1 = r1_ref[...].astype(jnp.float32)        # (bc, 1)
+    jff = jff_ref[0, 0]
+
+    ae = alpha * e
+    lp = jnp.sum(ae * psi, axis=1, keepdims=True)            # L'/2
+    lpp = jnp.sum(alpha * psi * psi, axis=1, keepdims=True)  # L''/2
+    num = lp + alpha0 * r1 + l2 * w
+    den = lpp + alpha0 * jff + l2
+    delta = -eta * num / jnp.maximum(den, 1e-12)
+
+    w_out_ref[...] = w + delta
+    e_out_ref[...] = e + delta * psi
+
+
+def cd_column_update_pallas(
+    psi: jax.Array,     # (C, D_pad)
+    alpha: jax.Array,   # (C, D_pad), 0 on padding
+    e: jax.Array,       # (C, D_pad)
+    w_col: jax.Array,   # (C,)
+    r1: jax.Array,      # (C,)
+    jff: jax.Array,     # scalar
+    *,
+    alpha0: float,
+    l2: float,
+    eta: float = 1.0,
+    block_ctx: int = 256,
+    interpret: bool = True,
+):
+    c, d_pad = psi.shape
+    c_pad = -(-c // block_ctx) * block_ctx
+    if c_pad != c:
+        pad = ((0, c_pad - c), (0, 0))
+        psi, alpha, e = (jnp.pad(a, pad) for a in (psi, alpha, e))
+        w_col = jnp.pad(w_col, (0, c_pad - c))
+        r1 = jnp.pad(r1, (0, c_pad - c))
+
+    w2 = w_col[:, None]
+    r2 = r1[:, None]
+    jff2 = jnp.reshape(jff.astype(jnp.float32), (1, 1))
+
+    grid = (c_pad // block_ctx,)
+    w_new, e_new = pl.pallas_call(
+        partial(_cd_kernel, alpha0, l2, eta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_ctx, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad, d_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(psi, alpha, e, w2, r2, jff2)
+    return w_new[:c, 0], e_new[:c]

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the fused CD column update."""
+from functools import partial
+
+import jax
+
+from repro.kernels import use_interpret
+from repro.kernels.cd_update.kernel import cd_column_update_pallas
+
+
+@partial(jax.jit, static_argnames=("alpha0", "l2", "eta", "block_ctx"))
+def cd_column_update(psi, alpha, e, w_col, r1, jff, *, alpha0, l2, eta=1.0,
+                     block_ctx=256):
+    return cd_column_update_pallas(
+        psi, alpha, e, w_col, r1, jff,
+        alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
+        interpret=use_interpret(),
+    )

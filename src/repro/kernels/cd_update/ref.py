@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused CD column update."""
+import jax.numpy as jnp
+
+
+def cd_column_update_ref(psi, alpha, e, w_col, r1, jff, *, alpha0, l2, eta=1.0):
+    lp = jnp.sum(alpha * e * psi, axis=1)
+    lpp = jnp.sum(alpha * psi * psi, axis=1)
+    num = lp + alpha0 * r1 + l2 * w_col
+    den = lpp + alpha0 * jff + l2
+    delta = -eta * num / jnp.maximum(den, 1e-12)
+    return w_col + delta, e + delta[:, None] * psi

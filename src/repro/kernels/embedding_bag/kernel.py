@@ -1,0 +1,92 @@
+"""Pallas EmbeddingBag as one-hot × table MXU matmuls.
+
+TPU adaptation of the recsys hot path (DESIGN.md §3): a gather + segment-sum
+is scatter-bound on the VPU, but the same contraction can be phrased as
+
+    out[b, :] = Σ_l w[b,l] · T[ids[b,l], :]  =  (Σ_l w·onehot(ids)) @ T
+
+The one-hot matrix is built block-wise in registers (compare-with-iota per
+bag slot, L static) and contracted on the MXU against vocab-tiled table
+blocks. Grid (batch_blocks, vocab_blocks), output accumulated in VMEM
+scratch across the vocab sweep.
+
+Scope: per-field vocabularies up to ~10⁵ (work is O(B·V·D/MXU) — the dense
+formulation trades FLOPs for bandwidth and wins while V_block fits VMEM).
+Tables beyond that stay on the row-sharded XLA take+segment_sum path
+(``repro.sparse.embedding_bag``); on real hardware those belong to
+SparseCore. ops.py dispatches on vocab size.
+
+VMEM per step: bv·D·4 (table tile) + bb·bv·4 (one-hot) + bb·D·4 (acc)
+≈ 0.5–2 MiB at defaults (bb=256, bv=512, D≤128).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(bag, bb, bv, ids_ref, w_ref, table_ref, o_ref, acc_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v_lo = j * bv
+    idx = v_lo + jax.lax.broadcasted_iota(jnp.int32, (bb, bv), 1)
+    onehot = jnp.zeros((bb, bv), jnp.float32)
+    for l in range(bag):  # bag is static & small (≤ ~100)
+        ids_l = ids_ref[:, l][:, None]
+        w_l = w_ref[:, l][:, None].astype(jnp.float32)
+        onehot = onehot + jnp.where(idx == ids_l, w_l, 0.0)
+
+    acc_ref[...] += jax.lax.dot(
+        onehot, table_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def embedding_bag_pallas(
+    table: jax.Array,    # (V, D)
+    ids: jax.Array,      # (B, L) int32
+    weights: jax.Array,  # (B, L) f32 (0 ⇒ padding)
+    *,
+    block_batch: int = 256,
+    block_vocab: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    v, d = table.shape
+    b, bag = ids.shape
+    bb = min(block_batch, max(8, b))
+    bv = min(block_vocab, max(128, v))
+    b_pad = -(-b // bb) * bb
+    v_pad = -(-v // bv) * bv
+    d_pad = max(128, -(-d // 128) * 128)
+    if (v_pad, d_pad) != (v, d):
+        table = jnp.pad(table, ((0, v_pad - v), (0, d_pad - d)))
+    if b_pad != b:
+        ids = jnp.pad(ids, ((0, b_pad - b), (0, 0)))
+        weights = jnp.pad(weights, ((0, b_pad - b), (0, 0)))
+
+    out = pl.pallas_call(
+        partial(_bag_kernel, bag, bb, bv),
+        grid=(b_pad // bb, v_pad // bv),
+        in_specs=[
+            pl.BlockSpec((bb, bag), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, bag), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d_pad), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, d_pad), table.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, d_pad), jnp.float32)],
+        interpret=interpret,
+    )(ids, weights, table)
+    return out[:b, :d]

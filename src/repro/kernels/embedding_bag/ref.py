@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the dense EmbeddingBag kernel."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights):
+    gathered = jnp.take(table, ids, axis=0)  # (B, L, D)
+    return jnp.sum(gathered * weights[..., None].astype(gathered.dtype), axis=1)

@@ -1,0 +1,142 @@
+"""Pallas flash attention (online softmax), TPU-tiled.
+
+Single-head program: q (Sq, d), k/v (Skv, d) → o (Sq, d); batch and heads
+are vmapped in ops.py. Grid (q_blocks, kv_blocks) with kv innermost; the
+(bq, d) output accumulator plus (bq, 1) running max / sum live in VMEM
+scratch that persists across the kv sweep of one q block.
+
+Supported masks (all composable):
+  causal           — global q position ≥ kv position (q_offset shifts the
+                     q positions; decode passes Sq=1, q_offset=kv_len−1)
+  sliding window   — kv position > q position − window  (Gemma-2 local)
+  kv_len           — kv padding mask
+Logit soft-capping (Gemma-2): s ← cap·tanh(s/cap).
+
+Fully-masked kv blocks are SKIPPED via pl.when on the block indices — for
+causal self-attention this halves the FLOPs (see EXPERIMENTS.md §Perf).
+
+VMEM per step: (bq+2·bkv)·d·4 + bq·bkv·4 ≈ 1.6 MiB at bq=bkv=512, d=128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    causal, window, softcap, kv_len, q_offset, scale, bq, bkv,
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- block-level skip: any (q, kv) pair in this tile alive? ----------
+    q_lo = i * bq + q_offset          # global position of first q row
+    q_hi = q_lo + bq - 1
+    kv_lo = j * bkv
+    alive = kv_lo < kv_len
+    if causal:
+        alive = jnp.logical_and(alive, kv_lo <= q_hi)
+    if window is not None:
+        alive = jnp.logical_and(alive, (j + 1) * bkv - 1 > q_lo - window)
+
+    @pl.when(alive)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * scale
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bkv)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kv_pos = kv_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = kv_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= kv_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kv_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                   # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,        # (Sq, d)
+    k: jax.Array,        # (Skv, d)
+    v: jax.Array,        # (Skv, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    sq, d = q.shape
+    skv = k.shape[0]
+    kv_len = skv if kv_len is None else kv_len
+    scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_q, max(8, sq))
+    bkv = min(block_kv, max(8, skv))
+    sq_pad = -(-sq // bq) * bq
+    skv_pad = -(-skv // bkv) * bkv
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, sq_pad - sq), (0, 0)))
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, skv_pad - skv), (0, 0)))
+        v = jnp.pad(v, ((0, skv_pad - skv), (0, 0)))
+
+    kern = functools.partial(
+        _flash_kernel, causal, window, softcap, min(kv_len, skv), q_offset,
+        scale, bq, bkv,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(sq_pad // bq, skv_pad // bkv),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bkv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bkv, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:sq]

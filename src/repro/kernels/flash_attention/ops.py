@@ -1,0 +1,51 @@
+"""Jit'd public wrapper: batched multi-head (GQA) flash attention."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_offset", "kv_len",
+                     "block_q", "block_kv"),
+)
+def flash_attention(
+    q: jax.Array,   # (batch, n_q_heads, Sq, d)
+    k: jax.Array,   # (batch, n_kv_heads, Skv, d)
+    v: jax.Array,   # (batch, n_kv_heads, Skv, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, "GQA requires n_q_heads % n_kv_heads == 0"
+    groups = hq // hkv
+
+    def one_head(qh, kh, vh):
+        return flash_attention_pallas(
+            qh, kh, vh,
+            causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, kv_len=kv_len,
+            block_q=block_q, block_kv=block_kv,
+            interpret=use_interpret(),
+        )
+
+    q5 = q.reshape(b, hkv, groups, sq, d)
+    out = jax.vmap(            # batch
+        jax.vmap(              # kv head
+            jax.vmap(one_head, in_axes=(0, None, None)),  # group
+            in_axes=(0, 0, 0),
+        ),
+        in_axes=(0, 0, 0),
+    )(q5, k, v)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (dense softmax attention)."""
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  q_offset=0, kv_len=None):
+    sq, d = q.shape
+    skv = k.shape[0]
+    kv_len = skv if kv_len is None else kv_len
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / math.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = kv_pos < kv_len
+    if causal:
+        mask = mask & (q_pos >= kv_pos)
+    if window is not None:
+        mask = mask & (kv_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=1, keepdims=True), 1e-30)
+    return ((p / denom) @ v.astype(jnp.float32)).astype(q.dtype)

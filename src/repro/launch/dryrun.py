@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes and derive the roofline terms.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) so
+the two lines above execute before ANY other jax import in the process —
+jax locks the device count at first init.
+
+Usage:
+  python -m repro.launch.dryrun --mesh both --out results/dryrun
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.launch import hlo_analysis
+from repro.launch.cells import all_cell_ids, build_cell
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.launch.sharding import named
+
+MODEL_FLOPS_NOTE = (
+    "model_flops = 6·N·D (dense train) / 6·N_active·D (MoE) — computed by "
+    "benchmarks/roofline_bench.py and joined into EXPERIMENTS.md"
+)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, save_hlo: str = "",
+             calibrate: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch, shape, mesh)
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips(mesh), "kind": cell.kind, "notes": cell.notes,
+    }
+    if cell.skip:
+        result["status"] = "skipped"
+        result["skip_reason"] = cell.skip
+        return result
+
+    t0 = time.time()
+    with mesh:
+        in_sh = tuple(named(mesh, s) for s in cell.in_specs)
+        out_sh = named(mesh, cell.out_specs)
+        lowered = jax.jit(
+            cell.step_fn, in_shardings=in_sh, out_shardings=out_sh
+        ).lower(*cell.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    roof = hlo_analysis.roofline_from_compiled(compiled)
+    result.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=hlo_analysis.memory_stats(compiled),
+        roofline_raw=roof.to_dict(),
+    )
+    # scanned LM cells under-report loop-body costs (XLA counts while
+    # bodies once) — recover exact terms via unrolled probe compiles
+    from repro.launch.cells import LM_ARCHS
+
+    if calibrate and arch in LM_ARCHS:
+        from repro.launch import calibrate as cal
+
+        result["roofline"] = cal.calibrated_roofline(arch, shape, mesh)
+    else:
+        result["roofline"] = roof.to_dict()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    cells = all_cell_ids()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    if args.list:
+        for a, s in cells:
+            print(f"{a} × {s}")
+        return
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for arch, shape in cells:
+        for multi_pod in meshes:
+            tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                prev = json.load(open(path))
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[skip-cached] {tag}")
+                    continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                res = run_cell(arch, shape, multi_pod, save_hlo=args.save_hlo and
+                               os.path.join(args.out, tag + ".hlo"))
+            except Exception as e:  # noqa: BLE001 — record and continue
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if multi_pod else "16x16",
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-3000:]}
+                n_fail += 1
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            status = res["status"]
+            extra = ""
+            if status == "ok":
+                r = res["roofline"]
+                extra = (f" dominant={r['dominant']}"
+                         f" compute={r['compute_s']:.3e}s"
+                         f" memory={r['memory_s']:.3e}s"
+                         f" coll={r['collective_s']:.3e}s"
+                         f" compile={res['compile_s']:.0f}s")
+            print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Sharding rules: parameter/optimizer/batch PartitionSpecs per arch family.
+
+Conventions (DESIGN.md §5):
+  * batch/context dims shard over ``dp`` = ("pod","data") on multi-pod,
+    ("data",) on single-pod;
+  * weights shard over "model" on their parallel dim and over "data" on the
+    other large dim (ZeRO/FSDP via GSPMD all-gather-at-use). Parameters are
+    intentionally NOT sharded over "pod": cross-pod traffic is the gradient
+    all-reduce only;
+  * embedding / vocab tables row-shard over "model";
+  * small vectors (norms, biases) replicate.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------- LM ------
+MODEL_AXIS_SIZE = 16  # both production meshes use a 16-way model axis
+
+
+def _drop_data(spec: P) -> P:
+    """Replace every 'data'/('data',) entry with None (ZeRO-1 live params:
+    replicated over data, sharded over model only)."""
+    def clean(e):
+        if e == "data" or e == ("data",):
+            return None
+        return e
+
+    return P(*[clean(e) for e in spec])
+
+
+def _lm_leaf_spec(cfg, name: str, stacked: bool, model_axis: int = MODEL_AXIS_SIZE) -> P:
+    """Spec for one transformer block leaf, by parameter name.
+
+    Attention projections are column-parallel (sharded over heads) only when
+    the head count divides the model axis; otherwise ROW-parallel (sharded on
+    d_model, partial-sum all-reduce of the small projection output). Naively
+    head-sharding e.g. Gemma-2's 8 q / 4 kv heads 16 ways makes GSPMD emit
+    f32 (S×S) score partial-sum all-reduces — catastrophic (measured in
+    EXPERIMENTS.md §Dry-run notes).
+    """
+    l = (None,) if stacked else ()
+    q_col = cfg.n_heads % model_axis == 0
+    kv_col = cfg.n_kv_heads % model_axis == 0
+    table = {
+        "wq": l + ((("data",), "model") if q_col else ("model", ("data",))),
+        "wk": l + ((("data",), "model") if kv_col else ("model", ("data",))),
+        "wv": l + ((("data",), "model") if kv_col else ("model", ("data",))),
+        "wo": l + (("model", ("data",)) if q_col else (("data",), "model")),
+        "bq": l + (("model",) if q_col else (None,)),
+        "bk": l + (("model",) if kv_col else (None,)),
+        "bv": l + (("model",) if kv_col else (None,)),
+        "w_gate": l + (("data",), "model"),
+        "w_up": l + (("data",), "model"),
+        "w_down": l + ("model", ("data",)),
+        "router": l + (("data",), None),
+        "e_gate": l + ("model", ("data",), None),
+        "e_up": l + ("model", ("data",), None),
+        "e_down": l + ("model", None, ("data",)),
+        "s_gate": l + (("data",), "model"),
+        "s_up": l + (("data",), "model"),
+        "s_down": l + ("model", ("data",)),
+        "pre_attn": l + (None,),
+        "pre_ffn": l + (None,),
+        "post_attn": l + (None,),
+        "post_ffn": l + (None,),
+    }
+    return P(*table[name])
+
+
+def lm_param_specs(cfg, params: Any, model_axis: int = MODEL_AXIS_SIZE):
+    """Same-structure PartitionSpec tree for the transformer param pytree."""
+
+    def block_specs(block, stacked):
+        return {k: _lm_leaf_spec(cfg, k, stacked, model_axis) for k in block}
+
+    specs = {
+        "embed": P("model", None),
+        "final_norm": P(None),
+        "head_dense": [block_specs(b, stacked=False) for b in params["head_dense"]],
+        "layers": tuple(block_specs(b, stacked=True) for b in params["layers"]),
+    }
+    if "unembed" in params:
+        specs["unembed"] = P(None, "model")
+    return specs
+
+
+def lm_batch_specs(mesh):
+    dp = dp_axes(mesh)
+    return {"tokens": P(dp, None), "targets": P(dp, None)}
+
+
+def lm_cache_specs(cfg, cache, mesh, shard_seq_over_dp: bool = False):
+    """KV cache (n_steps, 2, B, S, Hkv, hd): batch over dp, seq over model
+    (sequence-sharded cache). long-context B=1 cells shard seq over
+    (dp + model) instead."""
+    dp = dp_axes(mesh)
+    if shard_seq_over_dp:
+        seq_spec = P(None, None, None, dp + ("model",), None, None)
+        one_spec = P(None, None, dp + ("model",), None, None)
+    else:
+        seq_spec = P(None, None, dp, "model", None, None)
+        one_spec = P(None, dp, "model", None, None)
+    return {
+        "head_dense": [one_spec for _ in cache["head_dense"]],
+        "layers": tuple(seq_spec for _ in cache["layers"]),
+        "max_seq": P(),
+    }
+
+
+# ------------------------------------------------------------- optimizer --
+def opt_state_specs(param_specs):
+    """AdamW state: m/v mirror the parameters, step replicates."""
+    return {"step": P(), "m": param_specs, "v": param_specs}
+
+
+def train_state_specs(param_specs):
+    from repro.train.train_step import TrainState
+
+    return TrainState(params=param_specs, opt=opt_state_specs(param_specs),
+                      step=P())
+
+
+def zero1_state_specs(fsdp_param_specs):
+    """ZeRO-1 TrainState specs: live (bf16) params lose the 'data' axis;
+    the fp32 master + adam moments inside the optimizer keep it."""
+    from repro.train.train_step import TrainState
+
+    live = jax.tree_util.tree_map(
+        _drop_data, fsdp_param_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    opt = {"master": fsdp_param_specs,
+           "inner": opt_state_specs(fsdp_param_specs)}
+    return TrainState(params=live, opt=opt, step=P()), live
+
+
+# --------------------------------------------------------------- recsys ---
+def recsys_param_specs(cfg, params):
+    def mlp_specs(layers):
+        return [
+            {k: P(*([None] * v.ndim)) for k, v in layer.items()}
+            for layer in layers
+        ]
+
+    if cfg.kind in ("dlrm", "dcn"):
+        specs = {"table": P("model", None)}
+        if cfg.kind == "dlrm":
+            specs["bot"] = mlp_specs(params["bot"])
+            specs["top"] = mlp_specs(params["top"])
+        else:
+            specs["cross"] = [
+                {"w": P(None, None), "b": P(None)} for _ in params["cross"]
+            ]
+            specs["deep"] = mlp_specs(params["deep"])
+        return specs
+    if cfg.kind == "din":
+        return {
+            "items": P("model", None),
+            "attn": mlp_specs(params["attn"]),
+            "mlp": mlp_specs(params["mlp"]),
+        }
+    if cfg.kind == "bst":
+        return {
+            "items": P("model", None),
+            "pos": P(None, None),
+            "blocks": [
+                {k: P(*([None] * v.ndim)) for k, v in b.items()}
+                for b in params["blocks"]
+            ],
+            "mlp": mlp_specs(params["mlp"]),
+        }
+    raise ValueError(cfg.kind)
+
+
+def recsys_batch_specs(cfg, mesh):
+    dp = dp_axes(mesh)
+    if cfg.kind in ("dlrm", "dcn"):
+        return {"dense": P(dp, None), "sparse": P(dp, None), "label": P(dp)}
+    return {"hist": P(dp, None), "mask": P(dp, None), "target": P(dp),
+            "label": P(dp)}
+
+
+# ------------------------------------------------------------------ gnn ---
+def gnn_param_specs(params):
+    return {
+        "layers": [
+            {"w_self": P(None, None), "w_neigh": P(None, None), "b": P(None)}
+            for _ in params["layers"]
+        ],
+        "cls": P(None, None),
+    }
+
+
+# ------------------------------------------------------------------ icd ---
+def icd_mf_specs(mesh):
+    """W rows (contexts) over dp; H rows (items) over model; observation
+    arrays over dp. The k×k Grams replicate — Lemma 2's k² all-reduce."""
+    dp = dp_axes(mesh)
+    from repro.core.models.mf import MFParams
+
+    params = MFParams(w=P(dp, None), h=P("model", None))
+    data = dict(
+        ctx=P(dp), item=P(dp), y=P(dp), alpha=P(dp),
+        t_ctx=P(dp), t_item=P(dp), t_perm=P(dp),
+    )
+    return params, data

@@ -1,0 +1,6 @@
+"""Architecture zoo: LM transformers, recsys rankers, GNN.
+
+All models are config-driven pure-function modules over explicit parameter
+pytrees (init / apply / train-loss / serve paths) so the same definitions
+drive CPU smoke tests, the multi-pod dry-run and the roofline benches.
+"""

@@ -1,0 +1,87 @@
+"""BST — Behavior Sequence Transformer (Chen et al., arXiv:1905.06874).
+
+The target item is appended to the behaviour sequence; one post-LN
+transformer block (8 heads) contextualizes it; flattened sequence output +
+other features feed the 1024-512-256 MLP. embed_dim=32, seq_len=20.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.common import dense_init, layer_norm, mlp_apply, mlp_init
+from repro.models.recsys_common import binary_ce
+
+
+def init_params(key, cfg: RecsysConfig) -> Dict:
+    ks = jax.random.split(key, 10)
+    d = cfg.embed_dim
+    seq = cfg.seq_len + 1  # history + target slot
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + i], 6)
+        blocks.append({
+            "wq": dense_init(kb[0], (d, d)),
+            "wk": dense_init(kb[1], (d, d)),
+            "wv": dense_init(kb[2], (d, d)),
+            "wo": dense_init(kb[3], (d, d)),
+            "ln1_s": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "ffn_w1": dense_init(kb[4], (d, 4 * d)),
+            "ffn_b1": jnp.zeros((4 * d,)),
+            "ffn_w2": dense_init(kb[5], (4 * d, d)),
+            "ffn_b2": jnp.zeros((d,)),
+            "ln2_s": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        })
+    return {
+        "items": 0.01 * jax.random.normal(ks[0], (cfg.item_vocab, d)),
+        "pos": 0.01 * jax.random.normal(ks[1], (seq, d)),
+        "blocks": blocks,
+        "mlp": mlp_init(ks[9], (seq * d,) + cfg.mlp + (1,)),
+    }
+
+
+def _block(cfg, p, x, mask):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, h, hd)
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    sc = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(jnp.float32(hd))
+    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
+    a = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", a, v).reshape(b, s, d) @ p["wo"]
+    x = layer_norm(x + o, p["ln1_s"], p["ln1_b"])  # post-LN (paper)
+    f = jax.nn.relu(x @ p["ffn_w1"] + p["ffn_b1"]) @ p["ffn_w2"] + p["ffn_b2"]
+    return layer_norm(x + f, p["ln2_s"], p["ln2_b"])
+
+
+def forward(cfg: RecsysConfig, params, hist_ids, hist_mask, target_ids):
+    b = hist_ids.shape[0]
+    seq_ids = jnp.concatenate([hist_ids, target_ids[:, None]], axis=1)
+    mask = jnp.concatenate(
+        [hist_mask > 0, jnp.ones((b, 1), bool)], axis=1
+    )
+    x = jnp.take(params["items"], seq_ids, axis=0) + params["pos"][None]
+    x = x * mask[..., None]
+    for p in params["blocks"]:
+        x = _block(cfg, p, x, mask)
+    flat = (x * mask[..., None]).reshape(b, -1)
+    return mlp_apply(params["mlp"], x=flat, act=jax.nn.leaky_relu)[:, 0]
+
+
+def loss_fn(cfg: RecsysConfig, params, batch) -> jax.Array:
+    logits = forward(cfg, params, batch["hist"], batch["mask"], batch["target"])
+    return binary_ce(logits, batch["label"])
+
+
+def score_candidates(cfg: RecsysConfig, params, hist_ids, hist_mask, cand_ids):
+    """Retrieval: the target participates in self-attention, so the block
+    re-runs per candidate (chunk-batched)."""
+    n = cand_ids.shape[0]
+    hist_n = jnp.broadcast_to(hist_ids, (n,) + hist_ids.shape[1:])
+    mask_n = jnp.broadcast_to(hist_mask, (n,) + hist_mask.shape[1:])
+    return forward(cfg, params, hist_n, mask_n, cand_ids)

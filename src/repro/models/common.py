@@ -1,0 +1,76 @@
+"""Shared NN building blocks (no flax — explicit param pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * scale + bias).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (..., seq, n_heads, head_dim), positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (1.0 / math.sqrt(fan_in)) * jax.random.normal(key, shape, dtype)
+
+
+def mlp_init(key, dims, dtype=jnp.float32, bias: bool = True):
+    """[(w, b), ...] for dims = (in, h1, ..., out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for k, din, dout in zip(keys, dims[:-1], dims[1:]):
+        w = dense_init(k, (din, dout), dtype=dtype)
+        layers.append(
+            {"w": w, "b": jnp.zeros((dout,), dtype)} if bias else {"w": w}
+        )
+    return layers
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act=None):
+    for i, layer in enumerate(layers):
+        x = x @ layer["w"].astype(x.dtype)
+        if "b" in layer:
+            x = x + layer["b"].astype(x.dtype)
+        if i < len(layers) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,68 @@
+"""DCN-v2 (Wang et al., arXiv:2008.13535), stacked cross → deep.
+
+x0 = [dense ‖ 26×16 embeddings] (B, 429);
+cross layer: x_{l+1} = x0 ⊙ (W_l x_l + b_l) + x_l (full-rank W, the paper's
+strongest variant); deep MLP on top → logit.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.common import dense_init, mlp_apply, mlp_init
+from repro.models.recsys_common import binary_ce, init_tables, lookup, table_offsets
+
+
+def _x0_dim(cfg: RecsysConfig) -> int:
+    return cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+
+
+def init_params(key, cfg: RecsysConfig) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    table = init_tables(k1, cfg.table_vocabs, cfg.embed_dim)
+    d0 = _x0_dim(cfg)
+    cross_keys = jax.random.split(k2, cfg.n_cross_layers)
+    return {
+        "table": table,
+        "cross": [
+            {"w": dense_init(k, (d0, d0)), "b": jnp.zeros((d0,))}
+            for k in cross_keys
+        ],
+        "deep": mlp_init(k3, (d0,) + cfg.mlp + (1,)),
+    }
+
+
+def forward(cfg: RecsysConfig, params, dense: jax.Array, sparse_ids: jax.Array):
+    emb = lookup(params["table"], table_offsets(cfg.table_vocabs), sparse_ids)
+    x0 = jnp.concatenate([dense, emb.reshape(emb.shape[0], -1)], axis=1)
+    x = x0
+    for layer in params["cross"]:
+        x = x0 * (x @ layer["w"] + layer["b"]) + x
+    return mlp_apply(params["deep"], x)[:, 0]
+
+
+def loss_fn(cfg: RecsysConfig, params, batch) -> jax.Array:
+    logits = forward(cfg, params, batch["dense"], batch["sparse"])
+    return binary_ce(logits, batch["label"])
+
+
+def score_candidates(cfg: RecsysConfig, params, dense, user_sparse, cand_ids):
+    """Retrieval: broadcast the 1-row user features over N candidate ids
+    (candidate feature = table 0) and run the cross+deep stack batched."""
+    n = cand_ids.shape[0]
+    emb = lookup(params["table"], table_offsets(cfg.table_vocabs), user_sparse)
+    cand_emb = jnp.take(params["table"], cand_ids + table_offsets(cfg.table_vocabs)[0], axis=0)
+    emb_n = jnp.concatenate(
+        [cand_emb[:, None, :], jnp.broadcast_to(emb[:, 1:], (n, cfg.n_sparse - 1, cfg.embed_dim))],
+        axis=1,
+    )
+    x0 = jnp.concatenate(
+        [jnp.broadcast_to(dense, (n, cfg.n_dense)), emb_n.reshape(n, -1)], axis=1
+    )
+    x = x0
+    for layer in params["cross"]:
+        x = x0 * (x @ layer["w"] + layer["b"]) + x
+    return mlp_apply(params["deep"], x)[:, 0]

@@ -1,0 +1,72 @@
+"""DLRM (Naumov et al., arXiv:1906.00091), RM2-scale configuration.
+
+dense (B,13) → bottom MLP → (B,64); 26 sparse features → 26 embeddings
+(B,26,64); dot-interaction over the 27 vectors (upper triangle, 351 pairs)
+concat bottom → top MLP → logit.
+
+The embedding lookup is the hot path (DESIGN.md §4: DLRM's top-MLP breaks
+k-separability, so the paper's iCD does not train this ranker; the optional
+retrieval twin is an iCD-MF/FM over the same tables).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.common import mlp_apply, mlp_init
+from repro.models.recsys_common import binary_ce, init_tables, lookup, table_offsets
+
+
+def init_params(key, cfg: RecsysConfig) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    table = init_tables(k1, cfg.table_vocabs, cfg.embed_dim)
+    n_vec = cfg.n_sparse + 1
+    n_pairs = n_vec * (n_vec - 1) // 2
+    top_in = n_pairs + cfg.bot_mlp[-1]
+    return {
+        "table": table,
+        "bot": mlp_init(k2, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": mlp_init(k3, (top_in,) + cfg.top_mlp),
+    }
+
+
+def forward(cfg: RecsysConfig, params, dense: jax.Array, sparse_ids: jax.Array):
+    """dense (B, 13) f32, sparse_ids (B, 26) int32 → logits (B,)."""
+    bot = mlp_apply(params["bot"], dense, final_act=jax.nn.relu)  # (B, 64)
+    emb = lookup(params["table"], table_offsets(cfg.table_vocabs), sparse_ids)
+    vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)        # (B, 27, 64)
+    inter = jnp.einsum("bnd,bmd->bnm", vecs, vecs)                # (B, 27, 27)
+    iu, ju = jnp.triu_indices(vecs.shape[1], k=1)
+    flat = inter[:, iu, ju]                                       # (B, 351)
+    top_in = jnp.concatenate([bot, flat], axis=1)
+    return mlp_apply(params["top"], top_in)[:, 0]
+
+
+def loss_fn(cfg: RecsysConfig, params, batch) -> jax.Array:
+    logits = forward(cfg, params, batch["dense"], batch["sparse"])
+    return binary_ce(logits, batch["label"])
+
+
+def score_candidates(cfg: RecsysConfig, params, dense: jax.Array,
+                     user_sparse: jax.Array, cand_ids: jax.Array):
+    """Retrieval cell: one context vs N candidates. The user-side bottom MLP
+    and user-feature embeddings are computed ONCE; the candidate feature
+    (table 0 by convention) is swept over ``cand_ids`` (N,)."""
+    n = cand_ids.shape[0]
+    bot = mlp_apply(params["bot"], dense, final_act=jax.nn.relu)        # (1, 64)
+    user_emb = lookup(params["table"], table_offsets(cfg.table_vocabs), user_sparse)
+    cand_emb = jnp.take(params["table"], cand_ids + table_offsets(cfg.table_vocabs)[0], axis=0)
+    vecs = jnp.concatenate(
+        [jnp.broadcast_to(bot[:, None], (n, 1, cfg.embed_dim)),
+         cand_emb[:, None, :],
+         jnp.broadcast_to(user_emb[:, 1:], (n, cfg.n_sparse - 1, cfg.embed_dim))],
+        axis=1,
+    )
+    inter = jnp.einsum("bnd,bmd->bnm", vecs, vecs)
+    iu, ju = jnp.triu_indices(vecs.shape[1], k=1)
+    flat = inter[:, iu, ju]
+    top_in = jnp.concatenate([jnp.broadcast_to(bot, (n, cfg.bot_mlp[-1])), flat], 1)
+    return mlp_apply(params["top"], top_in)[:, 0]

@@ -1,0 +1,114 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216) — mean aggregator.
+
+Three execution modes matching the assigned shapes:
+  * ``full``      — full-batch message passing over an edge list via
+                    ``segment_sum`` (full_graph_sm, ogb_products)
+  * ``minibatch`` — sampled fanout frontiers from ``repro.sparse.sampler``
+                    (minibatch_lg: Reddit, fanout 15-10)
+  * ``batched``   — dense small graphs (molecule: (B, 30, F) + adjacency)
+
+Layer: h' = ReLU(W_self·h + W_neigh·mean_N(h))  (+ optional l2-normalize),
+final linear classifier. The unsupervised ⟨z_u,z_v⟩ objective is
+128-separable — see ``icd_link_loss`` (DESIGN.md §4: the one assigned arch
+where the paper's technique applies directly).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.core.gram import gram
+from repro.models.common import dense_init
+from repro.sparse.segment import segment_mean
+
+
+def init_params(key, cfg: GNNConfig, d_feat: int) -> Dict:
+    dims = [d_feat] + [cfg.d_hidden] * cfg.n_layers
+    layers = []
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(keys[i])
+        layers.append({
+            "w_self": dense_init(k1, (dims[i], dims[i + 1])),
+            "w_neigh": dense_init(k2, (dims[i], dims[i + 1])),
+            "b": jnp.zeros((dims[i + 1],)),
+        })
+    return {
+        "layers": layers,
+        "cls": dense_init(keys[-1], (cfg.d_hidden, cfg.n_classes)),
+    }
+
+
+def _layer(p, h_self, h_neigh_mean, final: bool):
+    out = h_self @ p["w_self"] + h_neigh_mean @ p["w_neigh"] + p["b"]
+    return out if final else jax.nn.relu(out)
+
+
+# --------------------------------------------------------------- full ----
+def forward_full(cfg: GNNConfig, params, feats: jax.Array, edges: jax.Array):
+    """feats (N, F); edges (E, 2) [src → dst messages]."""
+    n = feats.shape[0]
+    h = feats
+    for i, p in enumerate(params["layers"]):
+        msgs = jnp.take(h, edges[:, 0], axis=0)
+        neigh = segment_mean(msgs, edges[:, 1], n)
+        h = _layer(p, h, neigh, final=False)
+    return h @ params["cls"], h
+
+
+# ---------------------------------------------------------- minibatch ----
+def forward_minibatch(cfg: GNNConfig, params, frontier_feats: Sequence[jax.Array]):
+    """frontier_feats[h]: features of the h-hop frontier, shapes
+    (B·Πf_i, F) per ``repro.sparse.sampler.neighbor_sampler``."""
+    hs = list(frontier_feats)
+    n_layers = cfg.n_layers
+    for i, p in enumerate(params["layers"]):
+        new_hs = []
+        for depth in range(n_layers - i):
+            parent = hs[depth]
+            child = hs[depth + 1]
+            fanout = child.shape[0] // parent.shape[0]
+            neigh = jnp.mean(
+                child.reshape(parent.shape[0], fanout, child.shape[-1]), axis=1
+            )
+            new_hs.append(_layer(p, parent, neigh, final=False))
+        hs = new_hs
+    return hs[0] @ params["cls"], hs[0]
+
+
+# ------------------------------------------------------------- batched ----
+def forward_batched(cfg: GNNConfig, params, feats: jax.Array, adj: jax.Array):
+    """feats (B, n, F), adj (B, n, n) row-normalized → logits per graph."""
+    h = feats
+    for p in params["layers"]:
+        neigh = jnp.einsum("bnm,bmf->bnf", adj, h)
+        h = _layer(p, h, neigh, final=False)
+    pooled = jnp.mean(h, axis=1)
+    return pooled @ params["cls"], pooled
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+# -------------------------------------------------- iCD link prediction ----
+def icd_link_loss(z: jax.Array, pos_edges: jax.Array, alpha0: float = 0.1):
+    """Unsupervised GraphSAGE objective with the paper's EXACT implicit
+    negative term instead of negative sampling:
+
+        Σ_{(u,v)∈E} (⟨z_u,z_v⟩ − 1)² + α₀ Σ_{u,v∈V×V} ⟨z_u,z_v⟩²
+
+    The all-pairs term is Lemma 2 applied with Φ = Ψ = Z: Σ (JᵀJ-style)
+    = Σ_{f,f'} J(f,f')² with J = ZᵀZ — O(N k²) instead of O(N²k)."""
+    zu = jnp.take(z, pos_edges[:, 0], axis=0)
+    zv = jnp.take(z, pos_edges[:, 1], axis=0)
+    pos = jnp.sum((jnp.sum(zu * zv, -1) - 1.0) ** 2)
+    j = gram(z)
+    return pos + alpha0 * jnp.sum(j * j)

@@ -1,0 +1,48 @@
+"""Logical-axis sharding hints for model internals.
+
+Model code stays mesh-agnostic: it annotates intermediates with LOGICAL axes
+(``constrain(x, ("expert", "tokens", None))``); the launch layer activates a
+mapping from logical axes to mesh axes for the duration of a trace. With no
+active mapping every call is a no-op, so tests/CPU paths are unaffected.
+
+This is the mechanism behind the MoE-dispatch hillclimb (EXPERIMENTS.md
+§Perf #3): GSPMD fails to propagate a useful sharding through the
+scatter-built (E, C, D) dispatch buffer and replicates the expert GEMMs;
+one constraint on the buffer fixes it.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+def _current() -> Optional[Dict[str, Axis]]:
+    return getattr(_state, "mapping", None)
+
+
+@contextlib.contextmanager
+def sharding_hints(**mapping: Axis):
+    """Activate logical→mesh axis mapping, e.g.
+    ``sharding_hints(expert="model", tokens=("data",))``."""
+    prev = _current()
+    _state.mapping = dict(mapping)
+    try:
+        yield
+    finally:
+        _state.mapping = prev
+
+
+def constrain(x: jax.Array, logical_axes: Tuple[Optional[str], ...]) -> jax.Array:
+    mapping = _current()
+    if mapping is None:
+        return x
+    spec = P(*[mapping.get(a) if a is not None else None for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,40 @@
+"""Shared recsys machinery: stacked embedding tables + lookup paths.
+
+Tables are stacked into one (total_rows, dim) matrix with per-feature
+offsets so the whole embedding state is a single row-shardable array
+(`P("model", None)` on pods). Lookup = jnp.take (+ segment-sum for bags);
+the Pallas ``embedding_bag`` kernel covers the dense-formulation hot path
+for small/mid vocab fields.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+
+
+def init_tables(key, vocabs: Sequence[int], dim: int) -> jax.Array:
+    """Stacked embedding table (Σvocab, dim)."""
+    total = int(sum(vocabs))
+    return 0.01 * jax.random.normal(key, (total, dim), jnp.float32)
+
+
+def table_offsets(vocabs: Sequence[int]) -> jax.Array:
+    """Row offset per feature in the stacked table — config-derived constant
+    (NOT a parameter: int arrays must stay out of the grad tree)."""
+    return jnp.asarray(np.concatenate([[0], np.cumsum(vocabs)[:-1]]), jnp.int32)
+
+
+def lookup(table: jax.Array, offsets: jax.Array, ids: jax.Array) -> jax.Array:
+    """ids (B, n_features) local per-feature ids → (B, n_features, dim)."""
+    return jnp.take(table, ids + offsets[None, :], axis=0)
+
+
+def binary_ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(
+        jax.nn.softplus(-logits) * labels + jax.nn.softplus(logits) * (1 - labels)
+    )

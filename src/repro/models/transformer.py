@@ -1,0 +1,455 @@
+"""Decoder-only transformer LM covering the 5 assigned LM architectures.
+
+Config-driven features:
+  * GQA (any n_kv_heads | n_heads), separate head_dim (Gemma-2's 256)
+  * RoPE, configurable theta
+  * QKV bias (Qwen1.5)
+  * sliding-window local attention + local/global ALTERNATION (Gemma-2):
+    layers are scanned in groups of two (local, global) so every window is
+    static inside the scan body
+  * attention & final logit soft-capping (Gemma-2)
+  * pre+post block RMSNorms (Gemma-2) or plain pre-norm (LLaMA-family)
+  * MoE FFN: top-k routing with capacity, shared experts and leading dense
+    layers (OLMoE, DeepSeekMoE)
+  * scan-over-layers with optional remat — keeps the 95-layer deepseek-67b
+    HLO compact for the multi-pod dry-run
+  * KV-cache decode step (one token) for the decode_32k / long_500k cells
+
+Pure functions over explicit param pytrees; dtype policy: parameters are
+stored in ``param_dtype`` (fp32 masters in the trainer) and cast to
+``compute_dtype`` (bf16) inside the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, MoEConfig
+from repro.models.common import dense_init, rms_norm, rope, softcap
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+def _init_block(key, cfg: LMConfig, moe_layer: bool) -> Dict[str, Any]:
+    ks = jax.random.split(key, 12)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p: Dict[str, Any] = {
+        "wq": dense_init(ks[0], (d, qd)),
+        "wk": dense_init(ks[1], (d, kvd)),
+        "wv": dense_init(ks[2], (d, kvd)),
+        "wo": dense_init(ks[3], (qd, d), fan_in=qd),
+        "pre_attn": jnp.zeros((d,)),
+        "pre_ffn": jnp.zeros((d,)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,))
+        p["bk"] = jnp.zeros((kvd,))
+        p["bv"] = jnp.zeros((kvd,))
+    if cfg.post_norms:
+        p["post_attn"] = jnp.zeros((d,))
+        p["post_ffn"] = jnp.zeros((d,))
+    if moe_layer:
+        m = cfg.moe
+        p["router"] = dense_init(ks[4], (d, m.n_experts))
+        p["e_gate"] = dense_init(ks[5], (m.n_experts, d, m.d_expert), fan_in=d)
+        p["e_up"] = dense_init(ks[6], (m.n_experts, d, m.d_expert), fan_in=d)
+        p["e_down"] = dense_init(ks[7], (m.n_experts, m.d_expert, d), fan_in=m.d_expert)
+        if m.n_shared:
+            fs = m.n_shared * m.d_expert
+            p["s_gate"] = dense_init(ks[8], (d, fs))
+            p["s_up"] = dense_init(ks[9], (d, fs))
+            p["s_down"] = dense_init(ks[10], (fs, d), fan_in=fs)
+    else:
+        ff = cfg.d_ff if cfg.moe is None else cfg.moe.d_ff_dense
+        p["w_gate"] = dense_init(ks[4], (d, ff))
+        p["w_up"] = dense_init(ks[5], (d, ff))
+        p["w_down"] = dense_init(ks[6], (ff, d), fan_in=ff)
+    return p
+
+
+def group_size(cfg: LMConfig) -> int:
+    return 2 if cfg.local_global_alternating else 1
+
+
+def n_dense_head_layers(cfg: LMConfig) -> int:
+    return cfg.moe.first_k_dense if cfg.moe else 0
+
+
+def init_params(key, cfg: LMConfig) -> Dict[str, Any]:
+    g = group_size(cfg)
+    n_head_dense = n_dense_head_layers(cfg)
+    n_scanned = cfg.n_layers - n_head_dense
+    assert n_scanned % g == 0, "layer count must divide the scan group"
+    n_steps = n_scanned // g
+
+    keys = jax.random.split(key, 3 + n_head_dense)
+    params: Dict[str, Any] = {
+        "embed": 0.02 * jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (cfg.d_model, cfg.vocab))
+    params["head_dense"] = [
+        _init_block(keys[3 + i], cfg, moe_layer=False) for i in range(n_head_dense)
+    ]
+
+    def init_stack(key, moe_layer):
+        sub_keys = jax.random.split(key, n_steps)
+        blocks = [_init_block(k, cfg, moe_layer) for k in sub_keys]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+    stack_keys = jax.random.split(keys[2], g)
+    moe_layer = cfg.moe is not None
+    params["layers"] = tuple(init_stack(k, moe_layer) for k in stack_keys)
+    return params
+
+
+# ===========================================================================
+# blocks
+# ===========================================================================
+def _attention_xla(cfg, q, k, v, *, window, q_offset, kv_len):
+    """(B,Sq,Hq,hd) × (B,Skv,Hkv,hd) → (B,Sq,Hq,hd); fp32 softmax."""
+    b, sq, hq, hd = q.shape
+    skv = k.shape[1]
+    groups = hq // cfg.n_kv_heads
+    qg = q.reshape(b, sq, cfg.n_kv_heads, groups, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    s = softcap(s, cfg.attn_softcap)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = (q_pos >= kv_pos) & (kv_pos < kv_len)
+    if window is not None:
+        mask = mask & (kv_pos > q_pos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, hd)
+
+
+def _attn_block(cfg, p, x, *, window, positions, cache=None):
+    """Returns (out, new_cache). cache: (2, B, S_max, Hkv, hd) or None."""
+    b, s, d = x.shape
+    h = rms_norm(x, p["pre_attn"], cfg.norm_eps)
+    q = h @ p["wq"].astype(h.dtype)
+    k = h @ p["wk"].astype(h.dtype)
+    v = h @ p["wv"].astype(h.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(h.dtype)
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = _attention_xla(
+            cfg, q, k, v, window=window, q_offset=0, kv_len=s
+        )
+        new_cache = None
+    else:
+        pos0 = positions[0, 0]  # decode: single new position, same per batch
+        ck = jax.lax.dynamic_update_slice(cache[0], k, (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache[1], v, (0, pos0, 0, 0))
+        out = _attention_xla(
+            cfg, q, ck, cv, window=window, q_offset=pos0, kv_len=pos0 + s
+        )
+        new_cache = jnp.stack([ck, cv])
+    out = out.reshape(b, s, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    if cfg.post_norms:
+        out = rms_norm(out, p["post_attn"], cfg.norm_eps)
+    return x + out, new_cache
+
+
+def _act(cfg, g):
+    return jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+
+
+def _dense_ffn(cfg, p, h):
+    g = _act(cfg, h @ p["w_gate"].astype(h.dtype))
+    u = h @ p["w_up"].astype(h.dtype)
+    return (g * u) @ p["w_down"].astype(h.dtype)
+
+
+def _moe_ffn(cfg, p, h2d):
+    """Capacity-based top-k MoE over flattened tokens (T, D)."""
+    from repro.models.hints import constrain
+
+    m: MoEConfig = cfg.moe
+    t, d = h2d.shape
+    logits = (h2d @ p["router"].astype(h2d.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    gate, eid = jax.lax.top_k(probs, m.top_k)                     # (T, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    cap = max(8, int(m.capacity_factor * t * m.top_k / m.n_experts))
+    flat_e = eid.reshape(-1)                                      # (T·K,)
+    flat_g = gate.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), m.top_k)
+    onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    rank = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=1)
+    keep = (rank < cap).astype(h2d.dtype)
+    slot = jnp.minimum(rank, cap - 1)
+
+    buf = jnp.zeros((m.n_experts, cap, d), h2d.dtype)
+    buf = buf.at[flat_e, slot].add(h2d[flat_t] * keep[:, None])
+    # the dispatch buffer is scatter-built, so GSPMD cannot infer a sharding
+    # and replicates the expert GEMMs — constrain it (hillclimb #3)
+    buf = constrain(buf, ("expert", "capacity", None))
+    g = _act(cfg, jnp.einsum("ecd,edf->ecf", buf, p["e_gate"].astype(buf.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["e_up"].astype(buf.dtype))
+    eo = jnp.einsum("ecf,efd->ecd", g * u, p["e_down"].astype(buf.dtype))
+    eo = constrain(eo, ("expert", "capacity", None))
+    out = eo[flat_e, slot] * (keep * flat_g.astype(h2d.dtype))[:, None]
+    out = jax.ops.segment_sum(out, flat_t, num_segments=t)
+
+    if m.n_shared:
+        sg = _act(cfg, h2d @ p["s_gate"].astype(h2d.dtype))
+        su = h2d @ p["s_up"].astype(h2d.dtype)
+        out = out + (sg * su) @ p["s_down"].astype(h2d.dtype)
+
+    # Switch-style load-balance loss
+    top1 = jax.nn.one_hot(eid[:, 0], m.n_experts, dtype=jnp.float32)
+    frac = jnp.mean(top1, axis=0)
+    imp = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(frac * imp)
+    return out, aux
+
+
+def _ffn_block(cfg, p, x, moe_layer):
+    b, s, d = x.shape
+    h = rms_norm(x, p["pre_ffn"], cfg.norm_eps)
+    if moe_layer:
+        out2d, aux = _moe_ffn(cfg, p, h.reshape(b * s, d))
+        out = out2d.reshape(b, s, d)
+    else:
+        out, aux = _dense_ffn(cfg, p, h), 0.0
+    if cfg.post_norms:
+        out = rms_norm(out, p["post_ffn"], cfg.norm_eps)
+    return x + out, aux
+
+
+def _block(cfg, p, x, *, window, positions, moe_layer, cache=None):
+    x, new_cache = _attn_block(cfg, p, x, window=window, positions=positions,
+                               cache=cache)
+    if cfg.wire_barriers:
+        x = jax.lax.optimization_barrier(x)
+    x, aux = _ffn_block(cfg, p, x, moe_layer)
+    if cfg.wire_barriers:
+        x = jax.lax.optimization_barrier(x)
+    return x, aux, new_cache
+
+
+def _windows(cfg) -> Tuple[Optional[int], ...]:
+    """Per-sublayer static windows inside one scan group."""
+    if cfg.local_global_alternating:
+        return (cfg.attn_window, None)   # Gemma-2: local, then global
+    return (cfg.attn_window,)
+
+
+# ===========================================================================
+# forward / loss
+# ===========================================================================
+def forward(cfg: LMConfig, params, tokens: jax.Array,
+            compute_dtype=jnp.bfloat16,
+            last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) → logits (B, S, V), aux_loss (scalar).
+
+    ``last_only`` slices the residual stream to the final position BEFORE
+    the unembedding — the prefill serving path (a (B,S,V) logits tensor at
+    vocab 256k would be absurd; only the next-token logits are needed)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    windows = _windows(cfg)
+    moe_layer = cfg.moe is not None
+
+    for p_dense in params["head_dense"]:
+        x, _, _ = _block(cfg, p_dense, x, window=windows[-1],
+                         positions=positions, moe_layer=False)
+
+    def step(carry, layer_group):
+        x, aux = carry
+        for sub, window in zip(layer_group, windows):
+            x, a, _ = _block(cfg, sub, x, window=window, positions=positions,
+                             moe_layer=moe_layer)
+            aux = aux + a
+        return (x, aux), None
+
+    step_fn = jax.checkpoint(step) if cfg.remat else step
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(step_fn, (x, jnp.float32(0.0)), params["layers"])
+    else:
+        n_steps = jax.tree_util.tree_leaves(params["layers"][0])[0].shape[0]
+        carry = (x, jnp.float32(0.0))
+        for i in range(n_steps):
+            group = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            carry, _ = step_fn(carry, group)
+        x, aux = carry
+
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(compute_dtype)
+    logits = x @ unembed
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux
+
+
+def loss_fn(cfg: LMConfig, params, tokens, targets,
+            compute_dtype=jnp.bfloat16) -> jax.Array:
+    logits, aux = forward(cfg, params, tokens, compute_dtype)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss
+
+
+# ===========================================================================
+# decode (KV cache)
+# ===========================================================================
+def init_cache(cfg: LMConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    g = group_size(cfg)
+    n_head_dense = n_dense_head_layers(cfg)
+    n_steps = (cfg.n_layers - n_head_dense) // g
+
+    def one(length):
+        return jnp.zeros((2, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype)
+
+    def stack(length):
+        return jnp.zeros(
+            (n_steps, 2, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype
+        )
+
+    # local layers only ever need `window` cache rows — exploited by the
+    # long_500k cell (half of Gemma-2's cache is window-bounded)
+    lengths = [
+        min(max_seq, cfg.attn_window) if w is not None else max_seq
+        for w in _windows(cfg)
+    ]
+    return {
+        "head_dense": [one(max_seq) for _ in range(n_head_dense)],
+        "layers": tuple(stack(l) for l in lengths),
+        "max_seq": max_seq,
+    }
+
+
+def decode_step(cfg: LMConfig, params, cache, tokens: jax.Array,
+                position: jax.Array, compute_dtype=jnp.bfloat16):
+    """One-token decode: tokens (B, 1), position scalar → (logits, cache).
+
+    Local-window layers use a rolling cache of size `window` (position taken
+    modulo window); RoPE phases stay correct because positions are absolute.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), compute_dtype)
+    positions = jnp.broadcast_to(position[None, None], (b, s)).astype(jnp.int32)
+    windows = _windows(cfg)
+    moe_layer = cfg.moe is not None
+
+    new_head = []
+    for p_dense, c in zip(params["head_dense"], cache["head_dense"]):
+        x, _, nc = _block(cfg, p_dense, x, window=windows[-1],
+                          positions=positions, moe_layer=False, cache=c)
+        new_head.append(nc)
+
+    def step(x, scanned):
+        layer_group, cache_group = scanned
+        new_caches = []
+        for sub, c, window in zip(layer_group, cache_group, windows):
+            if window is not None and c.shape[2] <= window:
+                # rolling local cache: write at absolute position mod window
+                roll_pos = jnp.broadcast_to(
+                    (position % c.shape[2])[None, None], (b, s)
+                ).astype(jnp.int32)
+                h = rms_norm(x, sub["pre_attn"], cfg.norm_eps)
+                q = h @ sub["wq"].astype(h.dtype)
+                k = h @ sub["wk"].astype(h.dtype)
+                v = h @ sub["wv"].astype(h.dtype)
+                if cfg.qkv_bias:
+                    q = q + sub["bq"].astype(h.dtype)
+                    k = k + sub["bk"].astype(h.dtype)
+                    v = v + sub["bv"].astype(h.dtype)
+                q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+                k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+                v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+                ck = jax.lax.dynamic_update_slice(c[0], k, (0, roll_pos[0, 0], 0, 0))
+                cv = jax.lax.dynamic_update_slice(c[1], v, (0, roll_pos[0, 0], 0, 0))
+                # all cache rows < window behind the current position are valid
+                valid = jnp.minimum(position + 1, c.shape[2])
+                out = _attention_rolling(cfg, q, ck, cv, valid)
+                out = out.reshape(b, s, cfg.q_dim) @ sub["wo"].astype(x.dtype)
+                if cfg.post_norms:
+                    out = rms_norm(out, sub["post_attn"], cfg.norm_eps)
+                x2 = x + out
+                x2, _ = _ffn_block(cfg, sub, x2, moe_layer)
+                x = x2
+                new_caches.append(jnp.stack([ck, cv]))
+            else:
+                x, _, nc = _block(cfg, sub, x, window=window,
+                                  positions=positions, moe_layer=moe_layer,
+                                  cache=c)
+                new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if cfg.scan_layers:
+        x, new_layer_caches = jax.lax.scan(
+            step, x, (params["layers"], cache["layers"])
+        )
+    else:  # unrolled (cost-probe path: exact HLO cost accounting)
+        n_steps = jax.tree_util.tree_leaves(params["layers"][0])[0].shape[0]
+        caches = []
+        for i in range(n_steps):
+            group = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            cgroup = tuple(c[i] for c in cache["layers"])
+            x, nc = step(x, (group, cgroup))
+            caches.append(nc)
+        new_layer_caches = tuple(
+            jnp.stack([c[g] for c in caches]) for g in range(len(windows))
+        )
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(compute_dtype)
+    logits = softcap((x @ unembed).astype(jnp.float32), cfg.final_softcap)
+    new_cache = {
+        "head_dense": new_head,
+        "layers": new_layer_caches,
+        "max_seq": cache["max_seq"],
+    }
+    return logits, new_cache
+
+
+def _attention_rolling(cfg, q, ck, cv, valid):
+    """Decode attention over a rolling window cache: every populated row is
+    attendable (positions are within the window by construction)."""
+    b, s, hq, hd = q.shape
+    groups = hq // cfg.n_kv_heads
+    qg = q.reshape(b, s, cfg.n_kv_heads, groups, hd)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, ck).astype(jnp.float32)
+    sc = sc / jnp.sqrt(jnp.float32(hd))
+    sc = softcap(sc, cfg.attn_softcap)
+    kv_pos = jnp.arange(ck.shape[1])[None, :]
+    mask = kv_pos < valid
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(cv.dtype), cv)
+    return out.reshape(b, s, hq, hd)

@@ -1,0 +1,24 @@
+"""Optimizers & distributed-optimization utilities (no optax dependency).
+
+Functional design: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``. Includes AdamW, Adafactor (the memory-frugal choice for
+the 67B config), SGD+momentum, LR schedules, global-norm clipping, and the
+int8 error-feedback gradient compressor for the DP all-reduce.
+"""
+
+from repro.optim.base import OptimizerDef, apply_updates, global_norm
+from repro.optim.sgd import sgd
+from repro.optim.adam import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.compression import int8_compress, int8_decompress, ef_compress_update
+
+__all__ = [
+    "OptimizerDef", "apply_updates", "global_norm",
+    "sgd", "adamw", "adafactor",
+    "constant", "cosine_decay", "linear_warmup_cosine",
+    "clip_by_global_norm",
+    "int8_compress", "int8_decompress", "ef_compress_update",
+]

@@ -1,0 +1,86 @@
+"""Adafactor (Shazeer & Stern) — factored second moments.
+
+Matrices keep row/col RMS statistics instead of the full (shape)-sized v,
+cutting optimizer memory from 2× to ~1.01× of the parameters — the default
+for the 67B dry-run configuration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import OptimizerDef
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(lr=None, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              eps_scale=1e-3) -> OptimizerDef:
+    """lr=None ⇒ canonical relative step sizing
+    ``max(eps_scale, RMS(param)) · min(1e-2, 1/√t)`` (Shazeer & Stern §9) —
+    Adafactor's normalized updates stay O(1) near the optimum, so a constant
+    lr oscillates; the 1/√t decay is part of the algorithm."""
+    if lr is None:
+        lr_fn = None
+    else:
+        lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        def state_for(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "v": jax.tree_util.tree_map(
+                state_for, params, is_leaf=lambda x: isinstance(x, jax.Array)
+            ),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** (-decay)
+
+        def lr_for(p):
+            if lr_fn is not None:
+                return lr_fn(step)
+            rms_p = jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32))))
+            rel = jnp.minimum(1e-2, 1.0 / jnp.sqrt(step.astype(jnp.float32)))
+            return jnp.maximum(eps_scale, rms_p) * rel
+
+        def upd(g, s, p):
+            lr_t = lr_for(p)
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                v_est = (
+                    vr[..., None] * vc[..., None, :] / denom[..., None]
+                )
+                u = g * jax.lax.rsqrt(v_est + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return -lr_t * u, new_s
+
+        flat_g, tree = jax.tree_util.tree_flatten(grads)
+        flat_s = tree.flatten_up_to(state["v"])
+        flat_p = jax.tree_util.tree_leaves(params)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = tree.unflatten([o[0] for o in outs])
+        new_v = tree.unflatten([o[1] for o in outs])
+        return updates, {"step": step, "v": new_v}
+
+    return OptimizerDef(init, update)

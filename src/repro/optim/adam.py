@@ -1,0 +1,46 @@
+"""AdamW with decoupled weight decay and bias correction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import OptimizerDef
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0) -> OptimizerDef:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -(lr_t * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        return (
+            jax.tree_util.tree_map(upd, m, v, params),
+            {"step": step, "m": m, "v": v},
+        )
+
+    return OptimizerDef(init, update)

@@ -1,0 +1,30 @@
+"""Functional optimizer core."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+State = Any
+Updates = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerDef:
+    init: Callable[[Params], State]
+    update: Callable[[Updates, State, Params], Tuple[Updates, State]]
+
+
+def apply_updates(params: Params, updates: Updates) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates,
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

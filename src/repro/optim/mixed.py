@@ -1,0 +1,38 @@
+"""Mixed-precision optimizer wrapper — the ZeRO-1 building block.
+
+Live parameters stay bf16 (replicated over the data axis); the fp32 master
+copy lives INSIDE the optimizer state, which the launch layer shards over
+(data × model). One step:
+
+    grads(bf16) ──clip──► inner.update on fp32 master (data-sharded math)
+    master += updates;  params_delta = master.astype(bf16) − params
+
+GSPMD then emits exactly the ZeRO-1 schedule: a single gradient all-reduce,
+sharded optimizer math, and one all-gather of the updated bf16 parameters —
+replacing ZeRO-3's per-layer-per-microbatch parameter all-gathers
+(hillclimb #2, EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import OptimizerDef, apply_updates
+
+
+def mixed_precision(inner: OptimizerDef) -> OptimizerDef:
+    def init(params):
+        master = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params
+        )
+        return {"master": master, "inner": inner.init(master)}
+
+    def update(grads, state, params):
+        upd, inner_state = inner.update(grads, state["inner"], state["master"])
+        master = apply_updates(state["master"], upd)
+        delta = jax.tree_util.tree_map(
+            lambda m, p: m.astype(p.dtype) - p, master, params
+        )
+        return delta, {"master": master, "inner": inner_state}
+
+    return OptimizerDef(init, update)

@@ -1,0 +1,39 @@
+"""SGD with (Nesterov) momentum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import OptimizerDef
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> OptimizerDef:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        mom = (
+            jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            if momentum else None
+        )
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads,
+            )
+            if nesterov:
+                upd = jax.tree_util.tree_map(
+                    lambda m, g: -(lr_t * (momentum * m + g.astype(jnp.float32))),
+                    mom, grads,
+                )
+            else:
+                upd = jax.tree_util.tree_map(lambda m: -lr_t * m, mom)
+            return upd, {"step": step, "mom": mom}
+        upd = jax.tree_util.tree_map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, {"step": step, "mom": None}
+
+    return OptimizerDef(init, update)

@@ -1,0 +1,2 @@
+from repro.runtime.elastic import ElasticMeshManager  # noqa: F401
+from repro.runtime.health import StragglerWatchdog  # noqa: F401

@@ -1,0 +1,49 @@
+"""Straggler detection: per-step timing watchdog.
+
+On a pod each host reports step wall-times through the coordinator; hosts
+whose p50 exceeds the fleet p50 by ``threshold``× for ``patience``
+consecutive windows are flagged, triggering either (a) checkpoint + elastic
+re-mesh without them, or (b) scheduler eviction. In this container the same
+logic runs over injected timings (tests) and the trainer's real step times.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List
+
+
+class StragglerWatchdog:
+    def __init__(self, threshold: float = 2.0, patience: int = 3, window: int = 16):
+        self.threshold = threshold
+        self.patience = patience
+        self.histories: Dict[int, collections.deque] = {}
+        self.strikes: Dict[int, int] = collections.defaultdict(int)
+        self.window = window
+
+    def report(self, host_id: int, step_time: float) -> None:
+        self.histories.setdefault(
+            host_id, collections.deque(maxlen=self.window)
+        ).append(step_time)
+
+    def _median(self, xs: List[float]) -> float:
+        s = sorted(xs)
+        return s[len(s) // 2]
+
+    def check(self) -> List[int]:
+        """Returns host ids currently flagged as stragglers."""
+        if len(self.histories) < 2:
+            return []
+        medians = {h: self._median(list(v)) for h, v in self.histories.items()
+                   if len(v) >= 3}
+        if len(medians) < 2:
+            return []
+        fleet = self._median(list(medians.values()))
+        flagged = []
+        for h, m in medians.items():
+            if m > self.threshold * fleet:
+                self.strikes[h] += 1
+            else:
+                self.strikes[h] = 0
+            if self.strikes[h] >= self.patience:
+                flagged.append(h)
+        return flagged

@@ -1,0 +1,2 @@
+from repro.serve.decode import generate  # noqa: F401
+from repro.serve.recsys_serve import bulk_score, retrieval_topk  # noqa: F401

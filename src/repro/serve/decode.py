@@ -1,0 +1,50 @@
+"""LM serving: greedy/temperature decode over the KV cache."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+def generate(
+    cfg,
+    params,
+    prompt: jax.Array,          # (B, S_prompt)
+    max_new_tokens: int,
+    max_seq: Optional[int] = None,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+    compute_dtype=jnp.bfloat16,
+):
+    """Prefill token-by-token then decode ``max_new_tokens`` greedily (or
+    sampled). Small-scale serving driver used by the examples; the
+    production decode path is the jitted ``decode_step`` itself."""
+    b, s_prompt = prompt.shape
+    max_seq = max_seq or (s_prompt + max_new_tokens)
+    cache = T.init_cache(cfg, b, max_seq, dtype=compute_dtype)
+
+    step = jax.jit(
+        partial(T.decode_step, cfg, compute_dtype=compute_dtype),
+        static_argnames=(),
+    )
+
+    logits = None
+    for t in range(s_prompt):
+        logits, cache = step(params, cache, prompt[:, t : t + 1], jnp.int32(t))
+
+    tokens = [prompt]
+    cur = None
+    for i in range(max_new_tokens):
+        last = logits[:, -1]
+        if temperature > 0 and key is not None:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(sub, last / temperature)[:, None]
+        else:
+            cur = jnp.argmax(last, axis=-1)[:, None]
+        tokens.append(cur)
+        logits, cache = step(params, cache, cur, jnp.int32(s_prompt + i))
+    return jnp.concatenate(tokens, axis=1)

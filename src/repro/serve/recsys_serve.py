@@ -1,0 +1,50 @@
+"""RecSys serving paths: p99 online batches, offline bulk, retrieval top-k.
+
+``retrieval_topk`` covers the retrieval_cand cell: 10⁶ candidates scored in
+chunks (batched-dot for separable scorers, chunked forward for rankers) and
+reduced with a running top-k — never materializing all scores when chunked.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bulk_score(forward: Callable, batch, chunk: int = 65536):
+    """Offline scoring of a huge batch in fixed-size chunks (serve_bulk)."""
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    outs = []
+    for lo in range(0, n, chunk):
+        piece = jax.tree_util.tree_map(lambda x: x[lo : lo + chunk], batch)
+        outs.append(forward(piece))
+    return jnp.concatenate(outs, axis=0)
+
+
+def retrieval_topk(
+    score_fn: Callable[[jax.Array], jax.Array],  # cand_ids → scores
+    n_candidates: int,
+    k: int = 100,
+    chunk: int = 262144,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k over ``n_candidates`` scored in chunks with a running reduce."""
+    best_scores = jnp.full((k,), -jnp.inf)
+    best_ids = jnp.zeros((k,), jnp.int32)
+    for lo in range(0, n_candidates, chunk):
+        ids = jnp.arange(lo, min(lo + chunk, n_candidates), dtype=jnp.int32)
+        scores = score_fn(ids)
+        merged_s = jnp.concatenate([best_scores, scores])
+        merged_i = jnp.concatenate([best_ids, ids])
+        best_scores, idx = jax.lax.top_k(merged_s, k)
+        best_ids = jnp.take(merged_i, idx)
+    return best_scores, best_ids
+
+
+def mf_retrieval_score_fn(user_vec: jax.Array, item_table: jax.Array):
+    """The paper-native separable retrieval: one (k)·(k,N) matvec."""
+
+    def score(ids):
+        return jnp.take(item_table, ids, axis=0) @ user_vec
+
+    return score

@@ -1,0 +1,32 @@
+"""Sparse substrate: CSR structures, segment ops, EmbeddingBag, samplers.
+
+JAX has no native EmbeddingBag or CSR/CSC sparse support (BCOO only) — the
+gather + ``jax.ops.segment_sum`` implementations here ARE part of the system,
+used by the iCD core, the recsys zoo and the GNN message passing.
+"""
+
+from repro.sparse.csr import CSR, coo_to_csr, csr_row_ids
+from repro.sparse.segment import (
+    segment_sum,
+    segment_mean,
+    segment_max,
+    embedding_bag,
+    multi_hot_lookup,
+)
+from repro.sparse.interactions import Interactions, build_interactions
+from repro.sparse.sampler import neighbor_sampler, build_adjacency
+
+__all__ = [
+    "CSR",
+    "coo_to_csr",
+    "csr_row_ids",
+    "segment_sum",
+    "segment_mean",
+    "segment_max",
+    "embedding_bag",
+    "multi_hot_lookup",
+    "Interactions",
+    "build_interactions",
+    "neighbor_sampler",
+    "build_adjacency",
+]

@@ -1,0 +1,94 @@
+"""CSR sparse-matrix pytree.
+
+JAX only ships BCOO (``jax.experimental.sparse``); production recsys/GNN
+pipelines want CSR for row-major traversal (per-context interaction lists,
+per-node adjacency). This module provides a minimal, jit-compatible CSR
+container plus converters. Values are optional (pattern-only CSR is used for
+adjacency structure).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row matrix.
+
+    Attributes:
+      indptr:  (n_rows + 1,) int32 — row start offsets into ``indices``.
+      indices: (nnz,) int32 — column ids, row-major sorted.
+      data:    (nnz,) float — values; may be None for pattern-only matrices.
+      n_rows:  static int.
+      n_cols:  static int.
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    data: Optional[jax.Array]
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+    n_cols: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def row_degrees(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def with_data(self, data: jax.Array) -> "CSR":
+        return dataclasses.replace(self, data=data)
+
+
+def coo_to_csr(
+    row: np.ndarray,
+    col: np.ndarray,
+    data: Optional[np.ndarray],
+    n_rows: int,
+    n_cols: int,
+) -> CSR:
+    """Build a CSR from (unsorted) COO triplets. Host-side (numpy) — this is
+    data-pipeline code, not a traced op."""
+    row = np.asarray(row, dtype=np.int64)
+    col = np.asarray(col, dtype=np.int64)
+    order = np.argsort(row, kind="stable")
+    row, col = row[order], col[order]
+    if data is not None:
+        data = np.asarray(data)[order]
+    counts = np.bincount(row, minlength=n_rows)
+    indptr = np.zeros(n_rows + 1, dtype=np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    return CSR(
+        indptr=jnp.asarray(indptr, dtype=jnp.int32),
+        indices=jnp.asarray(col, dtype=jnp.int32),
+        data=None if data is None else jnp.asarray(data),
+        n_rows=int(n_rows),
+        n_cols=int(n_cols),
+    )
+
+
+def csr_row_ids(csr: CSR) -> jax.Array:
+    """Expand indptr to per-nnz row ids: the COO row vector.
+
+    Implemented with a searchsorted over indptr so it stays O(nnz log rows)
+    and jit-friendly (no data-dependent shapes).
+    """
+    positions = jnp.arange(csr.indices.shape[0], dtype=jnp.int32)
+    # row r owns positions [indptr[r], indptr[r+1]) — find r per position.
+    return (
+        jnp.searchsorted(csr.indptr, positions, side="right").astype(jnp.int32) - 1
+    )
+
+
+def transpose_csr_host(csr: CSR) -> CSR:
+    """Host-side CSR transpose (CSC view of the same matrix as CSR)."""
+    row_ids = np.asarray(csr_row_ids(csr))
+    col_ids = np.asarray(csr.indices)
+    data = None if csr.data is None else np.asarray(csr.data)
+    return coo_to_csr(col_ids, row_ids, data, csr.n_cols, csr.n_rows)

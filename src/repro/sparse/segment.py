@@ -1,0 +1,101 @@
+"""Segment reductions and EmbeddingBag built from JAX primitives.
+
+``jax.ops.segment_sum`` is the TPU-native scatter-reduce; EmbeddingBag is a
+ragged gather over a (vocab, dim) table followed by a segment reduce. These
+are the hot primitives of both the iCD solver (column sweeps reduce over the
+observed-interaction CSR) and the recsys zoo (multi-hot feature lookup).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    total = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+    counts = jax.ops.segment_sum(
+        jnp.ones(segment_ids.shape, dtype=data.dtype), segment_ids, num_segments=num_segments
+    )
+    counts = jnp.maximum(counts, 1)
+    if data.ndim > 1:
+        counts = counts.reshape(counts.shape + (1,) * (data.ndim - 1))
+    return total / counts
+
+
+def segment_max(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def embedding_bag(
+    table: jax.Array,
+    ids: jax.Array,
+    rows: jax.Array,
+    n_rows: int,
+    weights: Optional[jax.Array] = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Ragged EmbeddingBag: ``out[r] = combine_{j: rows[j]==r} w_j * table[ids[j]]``.
+
+    Args:
+      table:   (vocab, dim) embedding table.
+      ids:     (nnz,) int32 feature ids (gather indices into ``table``).
+      rows:    (nnz,) int32 output row per lookup, sorted or not.
+      n_rows:  static number of output rows (batch).
+      weights: optional (nnz,) per-lookup weights.
+      combiner: 'sum' | 'mean' | 'max'.
+
+    Returns:
+      (n_rows, dim).
+
+    This is the pure-JAX path; ``repro.kernels.embedding_bag`` provides the
+    Pallas TPU kernel with the same contract.
+    """
+    gathered = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        gathered = gathered * weights[:, None].astype(gathered.dtype)
+    if combiner == "sum":
+        return segment_sum(gathered, rows, n_rows)
+    if combiner == "mean":
+        return segment_mean(gathered, rows, n_rows)
+    if combiner == "max":
+        return segment_max(gathered, rows, n_rows)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def multi_hot_lookup(
+    table: jax.Array,
+    ids: jax.Array,
+    mask: Optional[jax.Array] = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Fixed-shape EmbeddingBag for padded multi-hot batches.
+
+    Args:
+      table: (vocab, dim).
+      ids:   (batch, bag) int32, padded with arbitrary ids where masked.
+      mask:  (batch, bag) bool/float — 1 for valid entries; None = all valid.
+      combiner: 'sum' | 'mean'.
+
+    Returns:
+      (batch, dim).
+    """
+    gathered = jnp.take(table, ids, axis=0)  # (batch, bag, dim)
+    if mask is not None:
+        gathered = gathered * mask[..., None].astype(gathered.dtype)
+    summed = jnp.sum(gathered, axis=1)
+    if combiner == "sum":
+        return summed
+    if combiner == "mean":
+        denom = (
+            jnp.sum(mask.astype(gathered.dtype), axis=1, keepdims=True)
+            if mask is not None
+            else jnp.full((ids.shape[0], 1), ids.shape[1], dtype=gathered.dtype)
+        )
+        return summed / jnp.maximum(denom, 1)
+    raise ValueError(f"unknown combiner {combiner!r}")

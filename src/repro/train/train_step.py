@@ -1,0 +1,94 @@
+"""Train-step builders: grads (+microbatch accumulation), clip, optimizer.
+
+The returned step is a pure function (state, batch) → (state, metrics),
+jit/pjit-able with the shardings supplied by the launch layer. Microbatch
+accumulation is a ``lax.scan`` over leading batch splits — the standard way
+to fit the train_4k activation footprint (remat happens inside the model's
+layer scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import apply_updates, clip_by_global_norm
+from repro.optim.base import OptimizerDef
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def init_state(params, optimizer: OptimizerDef) -> TrainState:
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def build_train_step(
+    loss_fn: Callable[[Any, Dict], jax.Array],
+    optimizer: OptimizerDef,
+    num_microbatches: int = 1,
+    clip_norm: float = 1.0,
+    unroll_microbatches: bool = False,
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """loss_fn(params, batch) → scalar. Batch leaves have leading dim B,
+    split into ``num_microbatches`` equal chunks when > 1.
+    ``unroll_microbatches`` replaces the accumulation scan with a python
+    loop (cost-probe path: exact HLO cost accounting)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state.params
+        if num_microbatches > 1:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((num_microbatches, -1) + x.shape[1:]), batch
+            )
+
+            def mb_body(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grads_of(params, mb)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads
+                )
+                return (loss_acc + loss, grad_acc), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            carry = (jnp.float32(0.0), zero)
+            if unroll_microbatches:
+                for i in range(num_microbatches):
+                    mb = jax.tree_util.tree_map(lambda x: x[i], mbs)
+                    carry, _ = mb_body(carry, mb)
+                loss, grads = carry
+            else:
+                (loss, grads), _ = jax.lax.scan(mb_body, carry, mbs)
+            loss = loss / num_microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / num_microbatches, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt = optimizer.update(grads, state.opt, params)
+        params = apply_updates(params, updates)
+        new_state = TrainState(params, opt, state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def build_lm_train_step(cfg, optimizer: OptimizerDef, compute_dtype=jnp.bfloat16):
+    from repro.models import transformer as T
+
+    def loss(params, batch):
+        return T.loss_fn(cfg, params, batch["tokens"], batch["targets"],
+                         compute_dtype=compute_dtype)
+
+    return build_train_step(
+        loss, optimizer, num_microbatches=cfg.num_microbatches
+    )

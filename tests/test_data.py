@@ -1,0 +1,79 @@
+"""Data pipeline: synthetic generator structure + hosted loaders + design."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.design import design_matmul, make_design, to_dense
+from repro.data.loader import lm_token_batches
+from repro.data.synthetic import make_implicit_dataset
+
+
+def test_synthetic_dataset_structure():
+    ds = make_implicit_dataset(n_users=50, n_items=40, seed=3)
+    assert ds.events.shape[1] == 3
+    assert ds.events[:, 0].max() < 50 and ds.events[:, 1].max() < 40
+    # time-ordered
+    assert np.all(np.diff(ds.events[:, 2]) > 0)
+    # every user has events within the configured range
+    hists = ds.user_histories()
+    assert len(hists) == 50
+    assert all(len(h) >= 1 for h in hists)
+    # attributes in range
+    assert ds.age.max() < ds.n_age and ds.country.max() < ds.n_country
+
+
+def test_attribute_signal_exists():
+    """Users sharing attributes must have more similar item distributions
+    than random pairs — the mechanism behind the Figure-7 reproduction."""
+    ds = make_implicit_dataset(n_users=300, n_items=200, attr_strength=0.95,
+                               pop_strength=0.3, taste_strength=2.5, seed=0)
+    hists = ds.user_histories()
+
+    def dist(u):
+        v = np.bincount(hists[u], minlength=200).astype(float)
+        return v / max(v.sum(), 1)
+
+    key = [(a, c) for a, c in zip(ds.age, ds.country)]
+    same, diff = [], []
+    rng = np.random.default_rng(0)
+    for _ in range(3000):
+        u, v = rng.integers(0, 300, 2)
+        if u == v:
+            continue
+        sim = float(dist(u) @ dist(v))
+        (same if key[u] == key[v] else diff).append(sim)
+    if len(same) > 10:
+        assert np.mean(same) > np.mean(diff)
+
+
+def test_lm_token_batches_learnable_structure():
+    it = lm_token_batches(vocab=64, global_batch=8, seq_len=32, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(b["targets"][:, :-1], b["tokens"][:, 1:])
+    # bigram structure: next-token entropy given current token is reduced
+    tok, tgt = b["tokens"].ravel(), b["targets"].ravel()
+    pairs = {}
+    for a, c in zip(tok, tgt):
+        pairs.setdefault(int(a), []).append(int(c))
+    # most contexts concentrate on ≤ 5 successors (4 choices + noise)
+    concentrated = [len(set(v)) <= 6 for v in pairs.values() if len(v) >= 4]
+    assert np.mean(concentrated) > 0.5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), n=st.integers(1, 12))
+def test_design_matmul_matches_dense(seed, n):
+    rng = np.random.default_rng(seed)
+    design = make_design(
+        [
+            dict(name="a", ids=rng.integers(0, 5, n), vocab=5),
+            dict(name="b", ids=rng.integers(0, 3, n), vocab=3,
+                 weights=rng.normal(size=n).astype(np.float32)),
+        ],
+        n,
+    )
+    w = jnp.asarray(rng.normal(size=(design.p, 4)), jnp.float32)
+    np.testing.assert_allclose(
+        design_matmul(design, w), to_dense(design) @ w, rtol=2e-4, atol=2e-5
+    )

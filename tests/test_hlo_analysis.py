@@ -1,0 +1,90 @@
+"""HLO analysis: shape/byte parsing, replica groups, collective accounting,
+and the documented XLA while-body undercount that motivates calibration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import (
+    Roofline,
+    _group_size,
+    _shape_bytes,
+    collective_bytes,
+    roofline_from_compiled,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "16,16") == 1024
+    assert _shape_bytes("bf16", "8") == 16
+    assert _shape_bytes("pred", "100") == 100
+    assert _shape_bytes("s32", "") == 4  # scalar
+    assert _shape_bytes("weird", "4") == 0
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups=[32,8]<=[256]") == 8
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("no groups here") == 1
+
+
+def test_collective_bytes_synthetic():
+    hlo = """
+  %x = f32[256,1024]{1,0} all-reduce(%a), replica_groups=[16,16]<=[256]
+  %y = bf16[512]{0} all-gather(%b), replica_groups={{0,1}}
+  %z = f32[8,16]{1,0} all-to-all(%c), replica_groups={{0,1,2,3}}
+  %not_a_collective = f32[9999999]{0} add(%p, %q)
+  %fusion.1 = f32[4]{0} fusion(%x), calls=%all_reduce_like_name
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 2.0 * 256 * 1024 * 4          # 2× ring
+    assert out["all-gather"] == 512 * 2
+    assert out["all-to-all"] == 8 * 16 * 4 * 4                # slice × group
+    assert out["collective-permute"] == 0.0
+    assert out["_counts"]["all-reduce"] == 1
+
+
+def test_roofline_terms_and_dominant():
+    r = Roofline(
+        flops=197e12, bytes_accessed=819e9 * 2, coll_bytes=50e9 * 0.5,
+        coll_breakdown={}, compute_s=1.0, memory_s=2.0, collective_s=0.5,
+    )
+    assert r.dominant == "memory"
+    assert r.bound_s == 2.0
+    np.testing.assert_allclose(r.fraction_of_roofline(), 0.5)
+
+
+def test_xla_counts_while_bodies_once():
+    """The measured behaviour that motivates launch/calibrate.py: flops of a
+    scanned body do not scale with trip count."""
+
+    def make(n):
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+
+            return jax.lax.scan(body, x, ws)[0]
+
+        return (
+            jax.jit(f)
+            .lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                   jax.ShapeDtypeStruct((n, 64, 64), jnp.float32))
+            .compile()
+            .cost_analysis()["flops"]
+        )
+
+    assert make(2) == make(8)  # trip count 2 vs 8: identical ⇒ counted once
+
+
+def test_roofline_from_compiled_smoke():
+    def f(a, b):
+        return a @ b
+
+    compiled = (
+        jax.jit(f)
+        .lower(jax.ShapeDtypeStruct((128, 128), jnp.float32),
+               jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        .compile()
+    )
+    r = roofline_from_compiled(compiled)
+    assert r.flops > 0 and r.compute_s > 0
+    assert r.coll_bytes == 0.0  # single device ⇒ no collectives

@@ -1,0 +1,141 @@
+"""Direct verification of the paper's three lemmas + property-based tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gram import gram, weighted_gram
+from repro.core.implicit import (
+    implicit_regularizer_gram,
+    implicit_regularizer_naive,
+    rescale_observed,
+)
+
+
+# --------------------------------------------------------------------------
+# Lemma 1: L(Θ|S_impl) == L(Θ|S̄) + α₀ R(Θ) + const
+# --------------------------------------------------------------------------
+def _loss_on(scores, y, alpha):
+    return np.sum(alpha * (scores - y) ** 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_ctx=st.integers(2, 8),
+    n_items=st.integers(2, 8),
+    alpha0=st.floats(0.05, 2.0),
+)
+def test_lemma1_objective_equivalence(seed, n_ctx, n_items, alpha0):
+    """The difference L_impl − (L_rescaled + α₀R) must be the SAME constant
+    for arbitrary parameter settings (the proof's additive const)."""
+    rng = np.random.default_rng(seed)
+    nnz = rng.integers(1, n_ctx * n_items + 1)
+    cells = rng.choice(n_ctx * n_items, size=nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items
+    y = rng.normal(size=nnz)
+    alpha = alpha0 + 0.5 + rng.random(nnz)
+
+    y_bar, a_bar = rescale_observed(jnp.asarray(y), jnp.asarray(alpha), alpha0)
+
+    consts = []
+    for pseed in (1, 2, 3):
+        prng = np.random.default_rng(pseed)
+        scores = prng.normal(size=(n_ctx, n_items))
+        # full implicit loss over S_impl
+        y_dense = np.zeros((n_ctx, n_items))
+        a_dense = np.full((n_ctx, n_items), alpha0)
+        y_dense[ctx, item] = y
+        a_dense[ctx, item] = alpha
+        l_impl = _loss_on(scores, y_dense, a_dense)
+        # Lemma-1 form
+        l_resc = _loss_on(scores[ctx, item], np.asarray(y_bar), np.asarray(a_bar))
+        r = np.sum(scores**2)
+        consts.append(l_impl - (l_resc + alpha0 * r))
+    np.testing.assert_allclose(consts[0], consts[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(consts[0], consts[2], rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Lemma 2: R(Θ) = Σ_{f,f'} J_C(f,f')·J_I(f,f')
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_ctx=st.integers(1, 30),
+    n_items=st.integers(1, 30),
+    k=st.integers(1, 8),
+)
+def test_lemma2_gram_decomposition(seed, n_ctx, n_items, k):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    phi = jax.random.normal(k1, (n_ctx, k))
+    psi = jax.random.normal(k2, (n_items, k))
+    np.testing.assert_allclose(
+        implicit_regularizer_gram(phi, psi),
+        implicit_regularizer_naive(phi, psi),
+        rtol=2e-5,
+    )
+
+
+# --------------------------------------------------------------------------
+# Lemma 3: R'(θ) via Gram == autodiff of the naive regularizer (MF case)
+# --------------------------------------------------------------------------
+def test_lemma3_gradients_match_autodiff():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (7, 4))
+    h = jax.random.normal(k2, (5, 4))
+
+    grad_naive = jax.grad(lambda w_: implicit_regularizer_naive(w_, h))(w)
+    # eq. (18): R'(w_{c,f}) = 2 Σ_f' J_I(f',f) w_{c,f'} = 2 · W @ J_I
+    grad_lemma = 2.0 * w @ gram(h)
+    np.testing.assert_allclose(grad_naive, grad_lemma, rtol=1e-5, atol=1e-6)
+
+    # second derivative (eq. 19): R'' = 2·J_I(f,f) — via autodiff diagonal
+    def r_coord(val, c, f):
+        return implicit_regularizer_naive(w.at[c, f].set(val), h)
+
+    for c, f in [(0, 0), (3, 2), (6, 3)]:
+        d2 = jax.grad(jax.grad(r_coord))(w[c, f], c, f)
+        np.testing.assert_allclose(d2, 2.0 * gram(h)[f, f], rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Gram op properties
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 50), k=st.integers(1, 10))
+def test_gram_matches_numpy(seed, rows, k):
+    m = jax.random.normal(jax.random.PRNGKey(seed), (rows, k))
+    np.testing.assert_allclose(gram(m), np.asarray(m).T @ np.asarray(m), rtol=2e-5, atol=1e-5)
+
+
+def test_weighted_gram():
+    m = jax.random.normal(jax.random.PRNGKey(1), (20, 5))
+    w = jax.random.uniform(jax.random.PRNGKey(2), (20,))
+    expect = np.asarray(m).T @ (np.asarray(w)[:, None] * np.asarray(m))
+    np.testing.assert_allclose(weighted_gram(m, w), expect, rtol=2e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Rescaling properties (eq. 8)
+# --------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(
+    y=st.floats(-5, 5),
+    alpha=st.floats(0.1, 10.0),
+    alpha0=st.floats(0.01, 5.0),
+)
+def test_rescale_collapses_pair(y, alpha, alpha0):
+    """ᾱ(ŷ−ȳ)² must differ from α(ŷ−y)² − α₀ŷ² by a ŷ-independent const."""
+    if alpha <= alpha0 + 1e-3:
+        return
+    y_bar, a_bar = rescale_observed(jnp.float32(y), jnp.float32(alpha), alpha0)
+    consts = []
+    for s in (-2.0, 0.3, 1.7):
+        lhs = float(a_bar) * (s - float(y_bar)) ** 2
+        rhs = alpha * (s - y) ** 2 - alpha0 * s**2
+        consts.append(lhs - rhs)
+    np.testing.assert_allclose(consts[0], consts[1], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(consts[0], consts[2], rtol=1e-3, atol=1e-3)

@@ -1,0 +1,75 @@
+"""shard_map distributed iCD-MF == reference epoch (8 forced host devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    import sys
+    sys.path.insert(0, "src")
+
+    from repro.core.models import mf, mf_dist
+    from repro.sparse.interactions import build_interactions
+
+    rng = np.random.default_rng(0)
+    n_ctx, n_items, nnz, k = 53, 37, 300, 6   # deliberately non-divisible
+    cells = rng.choice(n_ctx * n_items, nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items
+    data = build_interactions(ctx, item, rng.integers(1, 4, nnz),
+                              1.5 + rng.random(nnz), n_ctx, n_items, alpha0=0.5)
+    hp = mf.MFHyperParams(k=k, alpha0=0.5, l2=0.05)
+    params = mf.init(jax.random.PRNGKey(1), n_ctx, n_items, k)
+
+    # reference
+    e = mf.residuals(params, data)
+    ref_p, ref_e = params, e
+    for _ in range(2):
+        ref_p, ref_e = mf.epoch(ref_p, data, ref_e, hp)
+
+    # distributed — both variants must match the reference exactly (fp32
+    # wire); the bf16 wire variant must stay close
+    sd = mf_dist.shard_interactions(data, 8)
+    pb = mf_dist.shard_params(params, sd)
+    mesh = mf_dist.make_shard_mesh(8)
+    ref_obj = float(mf.objective(ref_p, data, hp))
+    for variant, wire, exact in (("gather", jnp.float32, True),
+                                 ("route", jnp.float32, True),
+                                 ("route", jnp.bfloat16, False)):
+        epoch = mf_dist.build_epoch(mesh, hp, sd, variant=variant,
+                                    wire_dtype=wire)
+        w, h, eb2 = pb.w, pb.h, mf_dist.residuals_blocked(pb, sd)
+        for _ in range(2):
+            w, h, eb2 = epoch(w, h, sd, eb2)
+        got = mf_dist.unshard_params(mf.MFParams(w, h), n_ctx, n_items)
+        if exact:  # fp32 wire: trajectory-identical to the reference
+            np.testing.assert_allclose(np.asarray(got.w), np.asarray(ref_p.w),
+                                       rtol=5e-4, atol=5e-5)
+            np.testing.assert_allclose(np.asarray(got.h), np.asarray(ref_p.h),
+                                       rtol=5e-4, atol=5e-5)
+        else:      # bf16 wire perturbs the CD trajectory (coordinates may
+                   # differ) but must reach an equally good optimum
+            obj = float(mf.objective(got, data, hp))
+            assert abs(obj - ref_obj) / ref_obj < 0.01, (obj, ref_obj)
+        print(f"variant={variant} wire={wire.__name__} OK")
+    print("MF-DIST-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_mf_dist_matches_reference():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        env={**env, "PYTHONPATH": "src"}, timeout=600,
+    )
+    assert "MF-DIST-OK" in proc.stdout, proc.stdout[-2000:] + proc.stderr[-3000:]

@@ -1,0 +1,42 @@
+"""Elastic mesh manager + straggler watchdog (single-device semantics;
+multi-device elasticity is exercised in tests/test_distributed.py via a
+subprocess with forced host devices)."""
+import jax
+import numpy as np
+
+from repro.runtime.elastic import ElasticMeshManager, largest_mesh_shape
+from repro.runtime.health import StragglerWatchdog
+
+
+def test_largest_mesh_shape():
+    assert largest_mesh_shape(256, 16) == (16, 16)
+    assert largest_mesh_shape(240, 16) == (15, 16)   # lost one host of 16
+    assert largest_mesh_shape(250, 16) == (125, 2)   # degrade TP to keep chips
+    assert largest_mesh_shape(7, 4) == (7, 1)
+    assert largest_mesh_shape(512, 16) == (32, 16)
+
+
+def test_manager_builds_mesh_single_device():
+    mgr = ElasticMeshManager(model_axis=1)
+    mesh = mgr.build()
+    assert mesh.devices.size == 1
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_watchdog_flags_persistent_straggler():
+    wd = StragglerWatchdog(threshold=1.5, patience=2)
+    for step in range(8):
+        for host in range(4):
+            wd.report(host, 1.0 if host != 2 else 3.0)
+        flagged = wd.check()
+    assert flagged == [2]
+
+
+def test_watchdog_ignores_transient_blip():
+    wd = StragglerWatchdog(threshold=1.5, patience=3)
+    for step in range(8):
+        for host in range(4):
+            slow = host == 1 and step == 3   # one-off blip
+            wd.report(host, 3.0 if slow else 1.0)
+        flagged = wd.check()
+    assert flagged == []

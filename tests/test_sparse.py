@@ -1,0 +1,95 @@
+"""Sparse substrate: CSR, segment ops, EmbeddingBag, neighbor sampler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (
+    CSR,
+    build_adjacency,
+    coo_to_csr,
+    csr_row_ids,
+    embedding_bag,
+    multi_hot_lookup,
+    neighbor_sampler,
+)
+from repro.sparse.csr import transpose_csr_host
+from repro.sparse.sampler import sample_neighbors
+
+
+def test_csr_roundtrip_and_row_ids():
+    rng = np.random.default_rng(0)
+    n_rows, n_cols, nnz = 7, 5, 12
+    cells = rng.choice(n_rows * n_cols, nnz, replace=False)
+    row, col = cells // n_cols, cells % n_cols
+    data = rng.normal(size=nnz)
+    csr = coo_to_csr(row, col, data, n_rows, n_cols)
+    assert csr.nnz == nnz
+    rid = np.asarray(csr_row_ids(csr))
+    dense = np.zeros((n_rows, n_cols))
+    dense[rid, np.asarray(csr.indices)] = np.asarray(csr.data)
+    expect = np.zeros((n_rows, n_cols))
+    expect[row, col] = data
+    np.testing.assert_allclose(dense, expect)
+    # transpose twice = identity (as dense)
+    t2 = transpose_csr_host(transpose_csr_host(csr))
+    dense2 = np.zeros((n_rows, n_cols))
+    dense2[np.asarray(csr_row_ids(t2)), np.asarray(t2.indices)] = np.asarray(t2.data)
+    np.testing.assert_allclose(dense2, expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n_rows=st.integers(1, 10), vocab=st.integers(1, 12),
+       dim=st.integers(1, 6), nnz=st.integers(1, 40))
+def test_embedding_bag_matches_loop(seed, n_rows, vocab, dim, nnz):
+    rng = np.random.default_rng(seed)
+    table = rng.normal(size=(vocab, dim)).astype(np.float32)
+    ids = rng.integers(0, vocab, nnz)
+    rows = rng.integers(0, n_rows, nnz)
+    weights = rng.normal(size=nnz).astype(np.float32)
+    got = embedding_bag(jnp.asarray(table), jnp.asarray(ids), jnp.asarray(rows),
+                        n_rows, jnp.asarray(weights))
+    expect = np.zeros((n_rows, dim), np.float32)
+    for i, r, w in zip(ids, rows, weights):
+        expect[r] += w * table[i]
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_multi_hot_lookup_mean():
+    table = jnp.asarray(np.arange(12, dtype=np.float32).reshape(6, 2))
+    ids = jnp.asarray([[0, 1, 2], [3, 3, 0]])
+    mask = jnp.asarray([[1, 1, 0], [1, 0, 0]], jnp.float32)
+    got = multi_hot_lookup(table, ids, mask, combiner="mean")
+    expect = np.stack([(np.arange(2) * 0 + table[0] + table[1]) / 2, table[3]])
+    np.testing.assert_allclose(got, np.asarray(expect))
+
+
+def test_neighbor_sampler_validity():
+    rng = np.random.default_rng(1)
+    n_nodes, n_edges = 50, 400
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    adj = build_adjacency(src, dst, n_nodes)
+    seeds = jnp.asarray(rng.integers(0, n_nodes, 16), jnp.int32)
+    frontiers = neighbor_sampler(jax.random.PRNGKey(0), adj, seeds, [5, 3])
+    assert frontiers[0].shape == (16,)
+    assert frontiers[1].shape == (16 * 5,)
+    assert frontiers[2].shape == (16 * 5 * 3,)
+    # validity: every sampled neighbor must be a true neighbor (or self-loop
+    # fallback for isolated nodes)
+    indptr, indices = np.asarray(adj.indptr), np.asarray(adj.indices)
+    neigh_sets = [set(indices[indptr[v]:indptr[v + 1]]) for v in range(n_nodes)]
+    parents = np.asarray(frontiers[0])
+    children = np.asarray(frontiers[1]).reshape(16, 5)
+    for p, kids in zip(parents, children):
+        for kid in kids:
+            assert kid in neigh_sets[p] or (len(neigh_sets[p]) == 0 and kid == p)
+
+
+def test_sampler_isolated_nodes_self_loop():
+    adj = coo_to_csr(np.array([0]), np.array([1]), None, 4, 4)  # node 2,3 isolated
+    seeds = jnp.asarray([2, 3, 0], jnp.int32)
+    neigh = sample_neighbors(jax.random.PRNGKey(0), adj, seeds, 4)
+    assert np.all(np.asarray(neigh[0]) == 2)
+    assert np.all(np.asarray(neigh[1]) == 3)
+    assert np.all(np.asarray(neigh[2]) == 1)
