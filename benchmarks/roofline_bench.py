@@ -1,12 +1,20 @@
 """Roofline table builder: joins the dry-run JSONs with analytic
 MODEL_FLOPS (6·N·D for dense LM training / 6·N_active·D for MoE; forward
 variants use the 2·N·D factor) and emits the EXPERIMENTS.md §Roofline table.
+
+Also hosts the fused-vs-per-column iCD sweep bench (``cd_sweep_bench``):
+analytic HBM-bytes model for the ``kernels/cd_sweep`` block kernel against
+the per-column ``kernels/cd_update`` baseline, plus a measured epoch
+comparison of the two ``mf_padded`` dispatch paths. Emits
+``BENCH_cd_sweep.json`` at the repo root so the perf trajectory of the hot
+sweep is tracked PR-over-PR.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import time
 from typing import Dict, Optional
 
 import jax
@@ -154,6 +162,142 @@ def markdown_table(rows, mesh="16x16") -> str:
     return "\n".join(lines)
 
 
+# ------------------------------------------------- fused cd_sweep bench ----
+def cd_sweep_sweep_bytes(c: int, d_pad: int, k: int, k_b: int) -> Dict[str, float]:
+    """Analytic HBM bytes for ONE side's k-column sweep over the padded
+    layout. Per column the per-column kernel reads ψ, α, e and writes e
+    (4 (C, D_pad) round-trips) plus (C,) w/r1 vectors; the fused kernel
+    still reads ψ once per column (irreducible) but amortizes α/e over the
+    k_b columns of a block."""
+    cd = 4.0 * c * d_pad                      # one (C, D_pad) fp32 trip
+    col = 4.0 * c
+    n_blocks = float(-(-k // k_b))
+    per_column = k * (4 * cd + 3 * col)
+    fused = k * cd + 3 * n_blocks * cd + 3 * k * col + n_blocks * 4 * k_b * k_b
+    return {
+        "per_column_bytes": per_column,
+        "fused_bytes": fused,
+        "bytes_ratio": per_column / fused,
+        "per_column_memory_s": per_column / HBM_BW,
+        "fused_memory_s": fused / HBM_BW,
+    }
+
+
+def _cd_sweep_measure(c, n_items, nnz, k, k_b, n_epochs=2):
+    """Measured CPU comparison of the two mf_padded dispatch paths (same
+    math, parity-tested): wall-clock per epoch + XLA cost-analysis bytes."""
+    import numpy as np
+
+    from repro.core.models import mf, mf_padded
+    from repro.sparse.interactions import build_interactions
+
+    rng = np.random.default_rng(0)
+    cells = rng.choice(c * n_items, size=nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items
+    y = rng.integers(1, 5, size=nnz).astype(np.float64)
+    alpha = 1.4 + rng.random(nnz)
+    data = build_interactions(ctx, item, y, alpha, c, n_items, alpha0=0.4)
+    pdata = mf_padded.pad_interactions(data)
+    params0 = mf.init(jax.random.PRNGKey(0), c, n_items, k)
+
+    out = {}
+    # per-column runs unrolled so XLA's cost analysis sees all k column
+    # bodies (a fori_loop body is counted once) — the fused block loop is
+    # a host loop and therefore always unrolled.
+    for label, block_k in (("per_column", 1), ("fused", k_b)):
+        hp = mf.MFHyperParams(k=k, alpha0=0.4, l2=0.05, block_k=block_k,
+                              unroll=(block_k == 1))
+        e0 = mf_padded.residuals(params0, pdata)
+        lowered = mf_padded.epoch.lower(params0, pdata, e0, hp)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per computation
+            ca = ca[0] if ca else {}
+        # reuse the AOT executable — re-invoking the jitted epoch would pay
+        # the (unrolled, interpret-mode) trace+compile a second time
+        params, e_pad = compiled(params0, pdata, e0)  # warmup
+        jax.block_until_ready(e_pad)
+        t0 = time.perf_counter()
+        for _ in range(n_epochs):
+            params, e_pad = compiled(params, pdata, e_pad)
+        jax.block_until_ready(e_pad)
+        out[label] = {
+            "s_per_epoch": (time.perf_counter() - t0) / n_epochs,
+            "cost_analysis_bytes": float(ca.get("bytes accessed", 0.0)),
+        }
+    out["wallclock_speedup"] = (
+        out["per_column"]["s_per_epoch"] / out["fused"]["s_per_epoch"]
+    )
+    if out["fused"]["cost_analysis_bytes"]:
+        out["measured_bytes_ratio"] = (
+            out["per_column"]["cost_analysis_bytes"]
+            / out["fused"]["cost_analysis_bytes"]
+        )
+    return out
+
+
+def cd_sweep_bench(quick: bool = True, out_path: Optional[str] = None):
+    """Fused block-sweep vs per-column baseline; writes BENCH_cd_sweep.json.
+
+    The analytic table is the acceptance tracker (≥2× fewer HBM bytes per
+    sweep at k ≥ 64); the measured section is a CPU sanity run of the real
+    ``mf_padded.epoch`` on both dispatch paths (interpret-mode kernels, so
+    wall-clock mostly reflects dispatch count + XLA memory traffic, not TPU
+    time).
+
+    The tracked repo-root ``BENCH_cd_sweep.json`` is always the quick-mode
+    (CI smoke) shape so its measured section stays comparable PR-over-PR;
+    ``--full`` runs land in ``BENCH_cd_sweep_full.json``. Paths are
+    anchored to the repo root, not the process cwd."""
+    if out_path is None:
+        repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out_path = os.path.join(
+            repo_root,
+            "BENCH_cd_sweep.json" if quick else "BENCH_cd_sweep_full.json",
+        )
+    k_b = 8
+    analytic = {
+        f"k={k}": cd_sweep_sweep_bytes(c=10_000_000, d_pad=1024, k=k, k_b=k_b)
+        for k in (32, 64, 128, 256)
+    }
+    if quick:
+        shapes = dict(c=256, n_items=128, nnz=2_000, k=16, k_b=4)
+    else:
+        shapes = dict(c=1024, n_items=512, nnz=16_000, k=64, k_b=8)
+    measured = _cd_sweep_measure(**shapes)
+    # None ⇒ cost_analysis had no byte counts (jax/backend dependent):
+    # record null and gate on the analytic model alone rather than
+    # reporting a phantom regression.
+    measured_ratio = measured.get("measured_bytes_ratio")
+    results = {
+        "kernel": "kernels/cd_sweep (block) vs kernels/cd_update (per-column)",
+        "mode": "quick" if quick else "full",
+        "analytic_block_k": k_b,
+        "analytic_web_scale": {
+            "shape": "C=10M, D_pad=1024, one side sweep, fp32",
+            **analytic,
+        },
+        "measured_cpu": {"shape": shapes, **measured},
+        "acceptance": {
+            "bytes_ratio_at_k64": analytic["k=64"]["bytes_ratio"],
+            # measured floor is loose: interpret-mode emulation adds block
+            # copies to both paths, but a fused path that stopped saving
+            # traffic (ratio <= ~1) still trips the gate.
+            "measured_bytes_ratio": measured_ratio,
+            "target": ">= 2x fewer HBM bytes per sweep at k >= 64 "
+                      "(analytic) and measured XLA bytes ratio > 1.2 "
+                      "(when available)",
+            "met": analytic["k=64"]["bytes_ratio"] >= 2.0
+                   and (measured_ratio is None or measured_ratio > 1.2),
+        },
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
 if __name__ == "__main__":
     rows = load_table()
     print(markdown_table(rows))
+    print(json.dumps(cd_sweep_bench(quick=True)["acceptance"], indent=1))

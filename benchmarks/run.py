@@ -76,6 +76,14 @@ def kernels(quick):
     return out
 
 
+def cd_sweep(quick):
+    """Fused block-sweep vs per-column iCD kernel; also refreshes the
+    tracked BENCH_cd_sweep.json at the repo root."""
+    from benchmarks.roofline_bench import cd_sweep_bench
+
+    return cd_sweep_bench(quick=quick)
+
+
 def roofline(quick):
     from benchmarks.roofline_bench import load_table, markdown_table
 
@@ -95,19 +103,27 @@ FIGURES = {
     "fig6b_instant": fig6b,
     "fig8_cost": fig8,
     "kernels": kernels,
+    "cd_sweep": cd_sweep,
     "roofline": roofline,
 }
+
+# dataset-free, seconds-fast subset — the smoke gate for CI / pre-commit
+QUICK_SET = ("kernels", "cd_sweep", "roofline")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help=f"smoke subset only: {', '.join(QUICK_SET)}")
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="results/experiments")
     args = ap.parse_args()
     quick = not args.full
 
     for name, fn in FIGURES.items():
+        if args.quick and name not in QUICK_SET:
+            continue
         if args.only and args.only not in name:
             continue
         res, dt = run_figure(name, fn, args.out, quick)

@@ -202,7 +202,7 @@ def _side_sweep(
                 )
         return sweeps.put_col(table, f, table_col), self_ext, e
 
-    table, self_ext, e = jax.lax.fori_loop(0, hp.k, dim_body, (table, self_ext, e))
+    table, self_ext, e = sweeps.sweep_columns(hp.k, dim_body, (table, self_ext, e))
 
     # ---- linear weights --------------------------------------------------
     if hp.use_linear and lin is not None:

@@ -45,6 +45,8 @@ class MFHyperParams:
     implementation: str = "xla"  # 'xla' | 'pallas' gram/cd kernels
     unroll: bool = False  # unroll the k-column loop (exact HLO costs; also
     #                       lets XLA pipeline/fuse across columns on TPU)
+    block_k: int = 0  # columns per fused cd_sweep dispatch on the padded
+    #                   layout: 0 = auto (min(k, 8)), 1 = per-column kernel
 
 
 def init(key: jax.Array, n_ctx: int, n_items: int, k: int, sigma: float = 0.1) -> MFParams:
@@ -105,12 +107,7 @@ def _side_sweep(
         e = e + jnp.take(delta, rows_nnz) * o_col      # rank-1 residual patch
         return sweeps.put_col(side_m, f, s_col + delta), e
 
-    if hp.unroll:
-        carry = (side, e)
-        for f in range(side.shape[1]):
-            carry = body(f, carry)
-        return carry
-    return jax.lax.fori_loop(0, side.shape[1], body, (side, e))
+    return sweeps.sweep_columns(side.shape[1], body, (side, e), unroll=hp.unroll)
 
 
 @partial(jax.jit, static_argnames=("hp",))

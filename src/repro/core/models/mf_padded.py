@@ -6,7 +6,18 @@ sweep order) but laid out for the Pallas kernels:
   * observations padded per row to the max degree (α=0 on padding) so the
     explicit reductions become dense (bc, D_pad) VPU tiles — no segment ops;
   * J via the ``gram`` MXU kernel;
-  * the whole column update (+ residual patch) fused in ``cd_update``.
+  * the dimension sweep dispatched through ``sweeps.sweep_columns``: blocks
+    of ``hp.block_k`` columns run in the fused ``cd_sweep`` kernel (e/α
+    VMEM-resident across the block, ⌈k/k_b⌉ HBM round-trips per sweep
+    instead of k); ``hp.block_k=1`` falls back to the per-column
+    ``cd_update`` kernel.
+
+CAPACITY trade of the fused path: each block dispatch pre-gathers a
+(C, k_b, D_pad) Ψ tile — k_b× the residual grid — so peak HBM footprint
+grows ~k_b× versus the per-column path's (C, D_pad) ψ column. ``block_k``
+is the bandwidth↔capacity knob; drop it (or set 1) when the grids are near
+the per-device memory budget. Removing the intermediate entirely needs the
+in-kernel-gather variant (ROADMAP follow-up).
 
 This is the "beyond-paper optimized" §Perf variant; the equivalence test
 (tests/test_mf_padded.py) pins it to the reference epoch. Degree-skewed data
@@ -25,6 +36,7 @@ import numpy as np
 
 from repro.core import sweeps
 from repro.core.models.mf import MFHyperParams, MFParams
+from repro.kernels.cd_sweep.ops import cd_block_sweep
 from repro.kernels.cd_update.ops import cd_column_update
 from repro.kernels.gram.ops import gram as gram_kernel
 from repro.sparse.interactions import Interactions
@@ -102,7 +114,29 @@ def pad_interactions(data: Interactions, lane: int = 128) -> PaddedInteractions:
     )
 
 
+_SWEEP_BLOCK_CTX = 128  # row tile of the cd_sweep kernel dispatches
+
+
 def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
+    k = side.shape[1]
+    k_b = min(k, 8) if hp.block_k == 0 else min(hp.block_k, k)
+    n = side.shape[0]
+    use_block = k_b > 1 and not hp.unroll  # unroll = explicit per-column ask
+
+    if use_block:
+        # Pad rows to the kernel tile ONCE per sweep — otherwise every block
+        # dispatch would pad/slice the full (C, D_pad) grids itself,
+        # re-introducing the per-dispatch HBM copies the fused kernel
+        # removes (and breaking the e→e_out alias, which would then point
+        # at a padded temp). Padding rows have α=0 ⇒ Δ=0, so they are inert.
+        n_pad = -(-n // _SWEEP_BLOCK_CTX) * _SWEEP_BLOCK_CTX
+        if n_pad != n:
+            rows = ((0, n_pad - n), (0, 0))
+            ids_pad = jnp.pad(ids_pad, rows)
+            alpha_pad = jnp.pad(alpha_pad, rows)
+            e_pad = jnp.pad(e_pad, rows)
+            side = jnp.pad(side, rows)
+
     def body(f, carry):
         side_m, e_pad = carry
         psi_pad = jnp.take(sweeps.take_col(other, f), ids_pad)   # (n, d_pad)
@@ -113,14 +147,40 @@ def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
         )
         return sweeps.put_col(side_m, f, w_new), e_pad
 
-    return jax.lax.fori_loop(0, side.shape[1], body, (side, e_pad))
+    def block_body(f0, kb, carry):
+        side_m, e_pad = carry
+        # Ψ tile for the whole block: (n, kb, d_pad), gathered once
+        psi_blk = jnp.moveaxis(jnp.take(other[:, f0:f0 + kb], ids_pad, axis=0),
+                               -1, 1)
+        r1_blk = side_m @ other_j[:, f0:f0 + kb]                 # R'/2 slab
+        w_new, e_pad = cd_block_sweep(
+            psi_blk, alpha_pad, e_pad, side_m[:, f0:f0 + kb], r1_blk,
+            other_j[f0:f0 + kb, f0:f0 + kb],
+            alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+            block_ctx=_SWEEP_BLOCK_CTX,
+        )
+        return side_m.at[:, f0:f0 + kb].set(w_new), e_pad
+
+    side, e_pad = sweeps.sweep_columns(
+        k, body, (side, e_pad), unroll=hp.unroll,
+        block=k_b, block_body=block_body if use_block else None,
+    )
+    return side[:n], e_pad[:n]
 
 
-@partial(jax.jit, static_argnames=("hp",))
+@partial(jax.jit, static_argnames=("hp",), donate_argnums=(2,))
 def epoch(
     params: MFParams, pdata: PaddedInteractions, e_pad: jax.Array, hp: MFHyperParams
 ) -> Tuple[MFParams, jax.Array]:
-    """Kernel-fused iCD epoch; carries the ctx-major padded residual grid."""
+    """Kernel-fused iCD epoch; carries the ctx-major padded residual grid.
+
+    ``e_pad`` is donated — it is the largest tensor carried ACROSS epochs
+    and is replaced every call, so on donation-capable backends the
+    caller's buffer is reused instead of holding a second (C, D_pad) fp32
+    grid across the call. (Within an epoch the fused path's Ψ tile is
+    bigger — see the module docstring's capacity note.) Callers must
+    rebind (``params, e_pad = epoch(...)``), which every sweep/fit loop
+    already does."""
     w, h = params
 
     j_i = gram_kernel(h)

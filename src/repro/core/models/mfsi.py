@@ -166,7 +166,7 @@ def _side_sweep(
         phi_m = sweeps.put_col(phi_m, f, phi_col)
         return table, phi_m, e
 
-    table, phi_m, e = jax.lax.fori_loop(0, hp.k, dim_body, (table, phi_m, e))
+    table, phi_m, e = sweeps.sweep_columns(hp.k, dim_body, (table, phi_m, e))
     return table, phi_m, e
 
 

@@ -10,12 +10,16 @@ column update:
     fused Newton step  θ ← θ − η·(L'/2 + α₀R'/2 + λθ)/(L''/2 + α₀R''/2 + λ)
     rank-1 residual patch
 
-All helpers are jit-friendly; the f* loop is a ``lax.fori_loop`` with the
-parameter matrix as carry.
+All helpers are jit-friendly; the f* loop goes through
+:func:`sweep_columns`, which runs either the per-column path (a
+``lax.fori_loop`` / unrolled host loop with the parameter matrix as carry)
+or, when the model provides one, a fused multi-column block body backed by
+the ``kernels/cd_sweep`` Pallas kernel that keeps the residual cache
+VMEM-resident across the columns of a block.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +37,52 @@ def newton_delta(
     parts: NewtonParts, theta: jax.Array, l2: float, eta: float
 ) -> jax.Array:
     """η-damped Newton step on the 1-D quadratic (exact at η=1 for
-    multilinear models, paper §3.2). Returns Δθ."""
+    multilinear models, paper §3.2). Returns Δθ.
+
+    The denominator is clamped like the Pallas kernels do: with l2=0 an
+    empty context has L''=R''=0 and the unguarded ratio NaNs."""
     num = parts.grad + l2 * theta
     den = parts.hess + l2
-    return -eta * num / den
+    return -eta * num / jnp.maximum(den, 1e-12)
+
+
+def sweep_columns(
+    n_dims: int,
+    body: Callable,
+    carry,
+    *,
+    unroll: bool = False,
+    block: int = 1,
+    block_body: Optional[Callable] = None,
+):
+    """Single entry point for the f*-sweep of Algorithms 2/3.
+
+    ``body(f, carry) -> carry`` is the per-column Newton update (any model).
+    ``block_body(f0, size, carry) -> carry`` is an optional fused update
+    covering columns ``[f0, f0+size)`` in one dispatch (the
+    ``kernels/cd_sweep`` path). Dispatch rule: when a block body is supplied
+    and ``block > 1``, full blocks of ``block`` columns run fused with a
+    shorter fused tail for non-divisible ``n_dims``; otherwise the
+    per-column path runs (``lax.fori_loop``, or a host loop when ``unroll``
+    — exact HLO costs / cross-column XLA fusion). ``unroll=True`` is an
+    explicit request for the per-column unrolled program, so it takes
+    precedence over the fused path.
+
+    ``n_dims`` and ``block`` are static, so the fused loop is a host loop of
+    ⌈n_dims/block⌉ dispatches with static slab sizes.
+    """
+    if block_body is not None and block > 1 and not unroll:
+        f0 = 0
+        while f0 < n_dims:
+            size = min(block, n_dims - f0)
+            carry = block_body(f0, size, carry)
+            f0 += size
+        return carry
+    if unroll:
+        for f in range(n_dims):
+            carry = body(f, carry)
+        return carry
+    return jax.lax.fori_loop(0, n_dims, body, carry)
 
 
 def take_col(m: jax.Array, f) -> jax.Array:

@@ -11,20 +11,74 @@ Kernels:
   cd_update       — fused iCD Newton column update over the padded-CSR
                     observation layout (explicit+implicit parts + residual
                     patch in one VMEM pass).
+  cd_sweep        — block-sweep generalization of cd_update: k_b embedding
+                    dimensions per grid step with the residual cache and α
+                    VMEM-resident across the block (Gauss–Seidel R' patch
+                    between columns). Cuts the sweep's (C, D_pad) HBM
+                    traffic from k round-trips to ⌈k/k_b⌉.
   embedding_bag   — multi-hot EmbeddingBag as one-hot×table MXU matmuls,
                     vocab-block streamed (recsys hot path).
   flash_attention — online-softmax attention (causal / sliding-window /
                     logit-softcap) for the LM zoo's prefill shapes.
 
-This container is CPU-only: kernels are validated with ``interpret=True``
-(the Pallas interpreter executes the same BlockSpec program in Python).
-On TPU the same code path sets ``interpret=False``.
+On CPU (CI) kernels are validated with ``interpret=True`` (the Pallas
+interpreter executes the same BlockSpec program in Python); on TPU/GPU the
+same code path compiles for real. ``REPRO_PALLAS_INTERPRET=0/1`` overrides
+the backend detection either way.
 """
+import os
 
-INTERPRET = True  # flipped to False on real TPU backends by launch/mesh.py
+_COMPILED_BACKENDS = ("tpu", "gpu")
 
 
 def use_interpret() -> bool:
+    """Interpret-mode policy for every Pallas kernel wrapper.
+
+    Priority: the ``REPRO_PALLAS_INTERPRET`` env var ("1"/"true" forces the
+    interpreter, "0"/"false" forces compiled kernels), then backend
+    detection — compiled on TPU/GPU, interpret elsewhere (CPU CI).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in ("0", "false", "no"):
+        return False
+    if env in ("1", "true", "yes"):
+        return True
     import jax
 
-    return jax.default_backend() != "tpu"
+    return jax.default_backend() not in _COMPILED_BACKENDS
+
+
+def kernel_jit(*, static_argnames=(), donate_argnums=()):
+    """Shared jit wrapper for the kernel ops layer.
+
+    The decorated function must accept a keyword-only ``interpret`` arg and
+    forward it to its ``pallas_call`` wrapper. When the caller leaves it
+    ``None``, it is resolved via :func:`use_interpret` OUTSIDE the jit
+    boundary on every call and passed as a static arg, so the jit cache is
+    keyed on it and — for direct eager kernel calls — a mid-process
+    ``REPRO_PALLAS_INTERPRET`` change takes effect instead of silently
+    hitting a stale trace. (Composed entry points that jit over these
+    wrappers, e.g. ``mf_padded.epoch``, bake the flag at their own trace
+    time; restart the process or clear their caches to re-key.) An explicit
+    ``interpret=True/False`` from the caller always wins.
+    """
+    import functools
+
+    def deco(fn):
+        import jax
+
+        jitted = jax.jit(
+            fn,
+            static_argnames=tuple(static_argnames) + ("interpret",),
+            donate_argnums=donate_argnums,
+        )
+
+        @functools.wraps(fn)
+        def call(*args, **kwargs):
+            if kwargs.get("interpret") is None:
+                kwargs["interpret"] = use_interpret()
+            return jitted(*args, **kwargs)
+
+        return call
+
+    return deco

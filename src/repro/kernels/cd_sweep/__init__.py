@@ -1,0 +1,1 @@
+from repro.kernels.cd_sweep.ops import cd_block_sweep  # noqa: F401

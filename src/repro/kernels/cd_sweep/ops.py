@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the fused multi-column CD block-sweep.
+
+``e`` is donated: the residual cache is the largest carried tensor in the
+sweep and is consumed/replaced on every dispatch, so an eager caller's
+buffer is reused in place on backends that support donation. Inside an
+outer jit (the ``mf_padded.epoch`` path) nested-jit donation is inert —
+there the in-place update comes from the kernel's e→e_out
+``input_output_aliases`` and from ``epoch`` donating ``e_pad`` at the top
+level.
+"""
+from repro.kernels import kernel_jit
+from repro.kernels.cd_sweep.kernel import cd_block_sweep_pallas
+
+
+@kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
+            donate_argnums=(2,))
+def cd_block_sweep(psi_blk, alpha, e, w_blk, r1_blk, j_blk, *, alpha0, l2,
+                   eta=1.0, block_ctx=128, interpret=None):
+    return cd_block_sweep_pallas(
+        psi_blk, alpha, e, w_blk, r1_blk, j_blk,
+        alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
+        interpret=interpret,
+    )

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused block-sweep: sequential per-column Newton
+steps with the explicit Gauss–Seidel R' patch between columns."""
+import jax.numpy as jnp
+
+
+def cd_block_sweep_ref(psi_blk, alpha, e, w_blk, r1_blk, j_blk, *, alpha0, l2,
+                       eta=1.0):
+    k_b = psi_blk.shape[1]
+    w_cols = []
+    r1 = r1_blk
+    for j in range(k_b):
+        psi_j = psi_blk[:, j, :]
+        lp = jnp.sum(alpha * e * psi_j, axis=1)
+        lpp = jnp.sum(alpha * psi_j * psi_j, axis=1)
+        num = lp + alpha0 * r1[:, j] + l2 * w_blk[:, j]
+        den = lpp + alpha0 * j_blk[j, j] + l2
+        delta = -eta * num / jnp.maximum(den, 1e-12)
+        w_cols.append(w_blk[:, j] + delta)
+        e = e + delta[:, None] * psi_j
+        r1 = r1 + delta[:, None] * j_blk[j, :][None, :]
+    return jnp.stack(w_cols, axis=1), e

@@ -16,35 +16,27 @@ D_pad, α pre-zeroed on padding) makes every tensor dense:
 
 The fusion saves 4 HBM round-trips of (C, D_pad) intermediates versus the
 XLA segment-sum path (gather → mul → reduce → newton → scatter as separate
-ops). VMEM per step: 3·bc·D_pad·4 B ≈ 3 MiB at bc=256, D_pad=1024.
+ops).
+
+Block-sweep kernel (lineage)
+----------------------------
+This per-column program still re-streams e and α from HBM once per
+embedding dimension — k round-trips per sweep. ``kernels/cd_sweep`` is the
+next step in the lineage: it processes k_b columns per grid step with e/α
+VMEM-resident across the block and a Gauss–Seidel R' patch between columns,
+cutting the sweep's (C, D_pad) traffic to ⌈k/k_b⌉ round-trips while
+reproducing the per-column semantics exactly. Since the block kernel at
+k_b=1 IS this program, the entry point below is a thin adapter over
+``cd_block_sweep_pallas`` — one kernel body to maintain (clamps, dtype
+policy, η handling live in one place). ``core/sweeps.sweep_columns``
+dispatches between the two; this remains the k_b=1 / fallback path.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-
-def _cd_kernel(alpha0, l2, eta, psi_ref, alpha_ref, e_ref, w_ref, r1_ref,
-               jff_ref, w_out_ref, e_out_ref):
-    psi = psi_ref[...].astype(jnp.float32)
-    alpha = alpha_ref[...].astype(jnp.float32)
-    e = e_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)          # (bc, 1)
-    r1 = r1_ref[...].astype(jnp.float32)        # (bc, 1)
-    jff = jff_ref[0, 0]
-
-    ae = alpha * e
-    lp = jnp.sum(ae * psi, axis=1, keepdims=True)            # L'/2
-    lpp = jnp.sum(alpha * psi * psi, axis=1, keepdims=True)  # L''/2
-    num = lp + alpha0 * r1 + l2 * w
-    den = lpp + alpha0 * jff + l2
-    delta = -eta * num / jnp.maximum(den, 1e-12)
-
-    w_out_ref[...] = w + delta
-    e_out_ref[...] = e + delta * psi
+from repro.kernels.cd_sweep.kernel import cd_block_sweep_pallas
 
 
 def cd_column_update_pallas(
@@ -61,38 +53,10 @@ def cd_column_update_pallas(
     block_ctx: int = 256,
     interpret: bool = True,
 ):
-    c, d_pad = psi.shape
-    c_pad = -(-c // block_ctx) * block_ctx
-    if c_pad != c:
-        pad = ((0, c_pad - c), (0, 0))
-        psi, alpha, e = (jnp.pad(a, pad) for a in (psi, alpha, e))
-        w_col = jnp.pad(w_col, (0, c_pad - c))
-        r1 = jnp.pad(r1, (0, c_pad - c))
-
-    w2 = w_col[:, None]
-    r2 = r1[:, None]
-    jff2 = jnp.reshape(jff.astype(jnp.float32), (1, 1))
-
-    grid = (c_pad // block_ctx,)
-    w_new, e_new = pl.pallas_call(
-        partial(_cd_kernel, alpha0, l2, eta),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
-            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
-            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
-            pl.BlockSpec((block_ctx, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_ctx, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_ctx, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((c_pad, 1), jnp.float32),
-            jax.ShapeDtypeStruct((c_pad, d_pad), jnp.float32),
-        ],
+    w_new, e_new = cd_block_sweep_pallas(
+        psi[:, None, :], alpha, e, w_col[:, None], r1[:, None],
+        jnp.reshape(jnp.asarray(jff, jnp.float32), (1, 1)),
+        alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
         interpret=interpret,
-    )(psi, alpha, e, w2, r2, jff2)
-    return w_new[:c, 0], e_new[:c]
+    )
+    return w_new[:, 0], e_new

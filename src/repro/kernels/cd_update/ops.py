@@ -1,17 +1,22 @@
-"""Jit'd public wrapper for the fused CD column update."""
-from functools import partial
+"""Jit'd public wrapper for the fused CD column update.
 
-import jax
-
-from repro.kernels import use_interpret
+``e`` is donated: the (C, D_pad) fp32 residual cache is consumed and
+replaced on every column, so an eager caller's buffer is reused instead of
+copied. (Inside an outer jit — the ``mf_padded.epoch`` path — nested-jit
+donation is inert; there the copy elimination comes from the kernel's
+e→e_out ``input_output_aliases`` plus ``epoch`` donating ``e_pad`` at the
+top level.) Callers must treat their ``e`` as dead after the call.
+"""
+from repro.kernels import kernel_jit
 from repro.kernels.cd_update.kernel import cd_column_update_pallas
 
 
-@partial(jax.jit, static_argnames=("alpha0", "l2", "eta", "block_ctx"))
+@kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
+            donate_argnums=(2,))
 def cd_column_update(psi, alpha, e, w_col, r1, jff, *, alpha0, l2, eta=1.0,
-                     block_ctx=256):
+                     block_ctx=256, interpret=None):
     return cd_column_update_pallas(
         psi, alpha, e, w_col, r1, jff,
         alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
-        interpret=use_interpret(),
+        interpret=interpret,
     )

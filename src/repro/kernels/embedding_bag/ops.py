@@ -1,22 +1,19 @@
 """Jit'd wrapper: Pallas dense path for small/mid vocab, XLA gather path for
 huge tables (which belong to SparseCore / row-sharded lookup on real pods)."""
-from functools import partial
-
-import jax
-
-from repro.kernels import use_interpret
+from repro.kernels import kernel_jit
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
 DENSE_VOCAB_LIMIT = 131_072
 
 
-@partial(jax.jit, static_argnames=("block_batch", "block_vocab"))
-def embedding_bag_dense(table, ids, weights, block_batch=256, block_vocab=512):
+@kernel_jit(static_argnames=("block_batch", "block_vocab"))
+def embedding_bag_dense(table, ids, weights, block_batch=256, block_vocab=512,
+                        *, interpret=None):
     if table.shape[0] > DENSE_VOCAB_LIMIT:
         return embedding_bag_ref(table, ids, weights)
     return embedding_bag_pallas(
         table, ids, weights,
         block_batch=block_batch, block_vocab=block_vocab,
-        interpret=use_interpret(),
+        interpret=interpret,
     )

@@ -1,15 +1,11 @@
 """Jit'd public wrapper: batched multi-head (GQA) flash attention."""
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import use_interpret
+from repro.kernels import kernel_jit
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
 
-@partial(
-    jax.jit,
+@kernel_jit(
     static_argnames=("causal", "window", "softcap", "q_offset", "kv_len",
                      "block_q", "block_kv"),
 )
@@ -25,6 +21,7 @@ def flash_attention(
     kv_len: int | None = None,
     block_q: int = 512,
     block_kv: int = 512,
+    interpret: bool | None = None,
 ) -> jax.Array:
     b, hq, sq, d = q.shape
     hkv = k.shape[1]
@@ -37,7 +34,7 @@ def flash_attention(
             causal=causal, window=window, softcap=softcap,
             q_offset=q_offset, kv_len=kv_len,
             block_q=block_q, block_kv=block_kv,
-            interpret=use_interpret(),
+            interpret=interpret,
         )
 
     q5 = q.reshape(b, hkv, groups, sq, d)

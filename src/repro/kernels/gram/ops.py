@@ -1,12 +1,10 @@
 """Jit'd public wrapper for the gram kernel."""
-from functools import partial
-
 import jax
 
-from repro.kernels import use_interpret
+from repro.kernels import kernel_jit
 from repro.kernels.gram.kernel import gram_pallas
 
 
-@partial(jax.jit, static_argnames=("block_rows",))
-def gram(x: jax.Array, block_rows: int = 1024) -> jax.Array:
-    return gram_pallas(x, block_rows=block_rows, interpret=use_interpret())
+@kernel_jit(static_argnames=("block_rows",))
+def gram(x: jax.Array, block_rows: int = 1024, *, interpret=None) -> jax.Array:
+    return gram_pallas(x, block_rows=block_rows, interpret=interpret)

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.cd_sweep.kernel import cd_block_sweep_pallas
+from repro.kernels.cd_sweep.ref import cd_block_sweep_ref
 from repro.kernels.cd_update.kernel import cd_column_update_pallas
 from repro.kernels.cd_update.ref import cd_column_update_ref
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
@@ -47,6 +49,99 @@ def test_cd_update_kernel_sweep(c, d_pad):
     )
     np.testing.assert_allclose(got_w, exp_w, rtol=2e-4, atol=1e-5)
     np.testing.assert_allclose(got_e, exp_e, rtol=2e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------ cd_sweep ----
+def _sweep_problem(c, d_pad, k, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    psi_cols = jax.random.normal(ks[0], (c, k, d_pad))     # ψ tile per column
+    alpha = jax.random.uniform(ks[1], (c, d_pad))
+    alpha = alpha * (jax.random.uniform(ks[5], (c, d_pad)) > 0.3)
+    e = jax.random.normal(ks[2], (c, d_pad))
+    w = jax.random.normal(ks[3], (c, k))
+    j_full = jax.random.normal(ks[4], (k, k))
+    j_full = j_full @ j_full.T + k * jnp.eye(k)            # SPD like a Gram
+    return psi_cols, alpha, e, w, j_full
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("c,d_pad,k", [(100, 128, 8), (37, 64, 5)])
+@pytest.mark.parametrize("k_b", [1, 2, 0])  # 0 → k_b = k (whole sweep fused)
+def test_cd_sweep_matches_per_column(c, d_pad, k, k_b):
+    """Full k-column sweep: fused block kernel ≡ the per-column cd_update
+    path (R' recomputed from W before every column), any block size, and
+    non-divisible C / k shapes."""
+    psi_cols, alpha, e0, w0, j_full = _sweep_problem(c, d_pad, k)
+    k_b = k_b or k
+    args = dict(alpha0=0.4, l2=0.05, eta=1.0)
+
+    # --- per-column baseline (existing kernel, fresh R' each column) ------
+    w_ref, e_ref = w0, e0
+    for f in range(k):
+        r1 = w_ref @ j_full[:, f]
+        w_col, e_ref = cd_column_update_pallas(
+            psi_cols[:, f], alpha, e_ref, w_ref[:, f], r1, j_full[f, f],
+            block_ctx=32, interpret=True, **args,
+        )
+        w_ref = w_ref.at[:, f].set(w_col)
+
+    # --- fused block sweep (+ jnp oracle per block) ------------------------
+    w_got, e_got = w0, e0
+    w_orc, e_orc = w0, e0
+    for f0 in range(0, k, k_b):
+        kb = min(k_b, k - f0)
+        r1_blk = w_got @ j_full[:, f0:f0 + kb]
+        j_blk = j_full[f0:f0 + kb, f0:f0 + kb]
+        w_blk, e_got = cd_block_sweep_pallas(
+            psi_cols[:, f0:f0 + kb], alpha, e_got, w_got[:, f0:f0 + kb],
+            r1_blk, j_blk, block_ctx=32, interpret=True, **args,
+        )
+        w_got = w_got.at[:, f0:f0 + kb].set(w_blk)
+        w_oblk, e_orc = cd_block_sweep_ref(
+            psi_cols[:, f0:f0 + kb], alpha, e_orc, w_orc[:, f0:f0 + kb],
+            w_orc @ j_full[:, f0:f0 + kb], j_blk, **args,
+        )
+        w_orc = w_orc.at[:, f0:f0 + kb].set(w_oblk)
+
+    np.testing.assert_allclose(w_got, w_ref, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(e_got, e_ref, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(w_got, w_orc, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(e_got, e_orc, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("block_k", [1, 2, 3, 8])
+def test_cd_sweep_epoch_matches_naive(block_k):
+    """mf_padded with the fused sweep ≡ conventional CD on the full implicit
+    matrix (core/naive_cd.py), trajectory-level, for divisible and
+    non-divisible k/block splits."""
+    from repro.core import naive_cd
+    from repro.core.models import mf, mf_padded
+    from repro.sparse.interactions import build_interactions
+
+    rng = np.random.default_rng(5)
+    n_ctx, n_items, nnz, k = 13, 9, 37, 8
+    cells = rng.choice(n_ctx * n_items, size=nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items
+    y = rng.integers(1, 5, size=nnz).astype(np.float64)
+    alpha = 0.4 + 1.0 + rng.random(nnz)
+    data = build_interactions(ctx, item, y, alpha, n_ctx, n_items, alpha0=0.4)
+    y_dense, a_dense = naive_cd.dense_from_observed(
+        jnp.asarray(ctx), jnp.asarray(item), jnp.asarray(y, jnp.float32),
+        jnp.asarray(alpha, jnp.float32), n_ctx, n_items, 0.4,
+    )
+
+    hp = mf.MFHyperParams(k=k, alpha0=0.4, l2=0.05, block_k=block_k)
+    params = mf.init(jax.random.PRNGKey(1), n_ctx, n_items, k)
+    p_naive = params
+    pdata = mf_padded.pad_interactions(data)
+    e_pad = mf_padded.residuals(params, pdata)
+    for _ in range(3):
+        params, e_pad = mf_padded.epoch(params, pdata, e_pad, hp)
+        p_naive = naive_cd.epoch_dense(p_naive, y_dense, a_dense, hp)
+        np.testing.assert_allclose(params.w, p_naive.w, rtol=3e-4, atol=3e-5)
+        np.testing.assert_allclose(params.h, p_naive.h, rtol=3e-4, atol=3e-5)
 
 
 # ------------------------------------------------------- embedding_bag ----
