@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.design import Design, make_design
 from repro.core.metrics import recall_ndcg_multi
 from repro.core.models import fm, mf
-from repro.data.synthetic import SyntheticImplicitDataset, make_implicit_dataset
+from repro.data.synthetic import make_implicit_dataset
 from repro.sparse.interactions import build_interactions
 
 K_EVAL = 100

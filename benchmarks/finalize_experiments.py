@@ -8,7 +8,6 @@ Replaces the marker lines:
 from __future__ import annotations
 
 import json
-import re
 
 from benchmarks.roofline_bench import load_table, markdown_table
 
@@ -30,7 +29,8 @@ def _hillclimb_block(path: str, baseline_note: str) -> str:
             f"| {base.get('memory_s', 0):.2e} | {base_coll:.2e} | 1.0× |"
         )
     for it in r["iterations"]:
-        rel = f"{base_coll / it['collective_s']:.1f}×" if base_coll and it["collective_s"] else "—"
+        rel = (f"{base_coll / it['collective_s']:.1f}×"
+               if base_coll and it["collective_s"] else "—")
         lines.append(
             f"| {it['variant']} | {it['compute_s']:.2e} | {it['memory_s']:.2e} "
             f"| {it['collective_s']:.2e} | {rel} |"

@@ -11,6 +11,7 @@ sweep is tracked PR-over-PR.
 """
 from __future__ import annotations
 
+import dataclasses
 import glob
 import json
 import os
@@ -18,9 +19,10 @@ import time
 from typing import Dict, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config, get_shapes
-from repro.launch.hlo_analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.launch.hlo_analysis import HBM_BW
 
 
 def _lm_param_counts(cfg) -> Dict[str, float]:
@@ -183,6 +185,225 @@ def cd_sweep_sweep_bytes(c: int, d_pad: int, k: int, k_b: int) -> Dict[str, floa
     }
 
 
+def rowpatch_sweep_bytes(c: int, d_pad: int, k: int, k_b: int) -> Dict[str, float]:
+    """Analytic HBM bytes for one mode's k-column sweep of a TENSOR model
+    (PARAFAC/Tucker) on the padded layout: like the MF model but the fused
+    kernel additionally streams the per-row patch tensor P (C, k_b, k_b)
+    and the r1/w slabs per block (the per-column path reads per-row r1/r''
+    vectors per column instead)."""
+    cd = 4.0 * c * d_pad
+    col = 4.0 * c
+    n_blocks = float(-(-k // k_b))
+    per_column = k * (4 * cd + 4 * col)          # ψ,α,e×2 + w,r1,r'',w_out
+    fused = (
+        k * cd + 3 * n_blocks * cd               # ψ per column; α + 2·e per block
+        + 3 * k * col                            # w, r1, w_out slabs
+        + n_blocks * c * k_b * k_b * 4.0         # per-row patch tensor P
+    )
+    return {
+        "per_column_bytes": per_column,
+        "fused_bytes": fused,
+        "bytes_ratio": per_column / fused,
+        "per_column_memory_s": per_column / HBM_BW,
+        "fused_memory_s": fused / HBM_BW,
+    }
+
+
+def slab_sweep_bytes(c: int, d_pad: int, k: int, k_b: int) -> Dict[str, float]:
+    """Analytic HBM bytes for one side's k-dimension sweep of a FIELD model
+    (MFSI/FM) on the padded layout. Per dimension the per-column path
+    streams ψ, α and e twice (q/p2 slab compute + residual patch); the
+    fused path still reads ψ once per dimension but amortizes α and the two
+    e streams over the k_b dimensions of a block (one ``cd_slab_reduce`` +
+    one ``cd_resid_patch``)."""
+    cd = 4.0 * c * d_pad
+    n_blocks = float(-(-k // k_b))
+    per_column = k * 5.0 * cd            # ψ + α + e_read + (e_read + e_write)
+    fused = k * cd + 4.0 * n_blocks * cd  # ψ per column; α + 3·e per block
+    return {
+        "per_column_bytes": per_column,
+        "fused_bytes": fused,
+        "bytes_ratio": per_column / fused,
+        "per_column_memory_s": per_column / HBM_BW,
+        "fused_memory_s": fused / HBM_BW,
+    }
+
+
+def _time_epochs(step, state, n_epochs):
+    state = step(state)  # warmup (trace+compile)
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for _ in range(n_epochs):
+        state = step(state)
+    jax.block_until_ready(state)
+    return (time.perf_counter() - t0) / n_epochs, state
+
+
+def _assert_parity(name, got, ref, rtol=5e-4, atol=5e-5):
+    import numpy as np
+
+    got, ref = np.asarray(got), np.asarray(ref)
+    if not np.allclose(got, ref, rtol=rtol, atol=atol):
+        gap = float(np.max(np.abs(got - ref)))
+        raise AssertionError(
+            f"cd_sweep bench parity FAILED for {name}: fused vs per-column "
+            f"max|Δ|={gap:.3e} (rtol={rtol}, atol={atol})"
+        )
+
+
+def _fused_tensor_measure(model_name, quick, n_epochs=2):
+    """Fused-vs-per-column epoch comparison for PARAFAC / Tucker, with a
+    hard parity assertion (the CI bench-smoke gate)."""
+    import numpy as np
+
+    from repro.core.models import parafac, tucker
+    from repro.core.models.parafac import TensorContext
+    from repro.sparse.interactions import build_interactions
+
+    rng = np.random.default_rng(0)
+    if quick:
+        n_c1, n_c2, n_items, n_pairs, nnz, k, k_b = 16, 12, 20, 48, 320, 6, 3
+    else:
+        n_c1, n_c2, n_items, n_pairs, nnz, k, k_b = 64, 48, 96, 512, 4096, 16, 8
+    chosen = rng.choice(n_c1 * n_c2, size=n_pairs, replace=False)
+    tc = TensorContext(
+        c1=jnp.asarray(chosen // n_c2, jnp.int32),
+        c2=jnp.asarray(chosen % n_c2, jnp.int32),
+        n_c1=n_c1, n_c2=n_c2,
+    )
+    cells = rng.choice(n_pairs * n_items, size=nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items
+    y = rng.integers(1, 5, size=nnz).astype(np.float64)
+    alpha = 1.4 + rng.random(nnz)
+    data = build_interactions(ctx, item, y, alpha, n_pairs, n_items, alpha0=0.4)
+
+    if model_name == "parafac":
+        mod = parafac
+        hp_pc = parafac.PARAFACHyperParams(k=k, alpha0=0.4, l2=0.05, block_k=1)
+        hp_f = dataclasses.replace(hp_pc, block_k=k_b)
+        params0 = parafac.init(jax.random.PRNGKey(0), n_c1, n_c2, n_items, k)
+    else:
+        mod = tucker
+        hp_pc = tucker.TuckerHyperParams(k1=k, k2=max(2, k // 2), k3=k,
+                                         alpha0=0.4, l2=0.05, block_k=1)
+        hp_f = dataclasses.replace(hp_pc, block_k=k_b)
+        params0 = tucker.init(jax.random.PRNGKey(0), n_c1, n_c2, n_items,
+                              hp_pc.k1, hp_pc.k2, hp_pc.k3)
+    padded = mod.pad_tensor_groups(tc, data)
+
+    out = {}
+    finals = {}
+    for label, hp in (("per_column", hp_pc), ("fused", hp_f)):
+        if label == "per_column":
+            def step(state, hp=hp):
+                p, e = state
+                return mod.epoch(p, tc, data, e, hp)
+        else:
+            def step(state, hp=hp):
+                p, e = state
+                return mod.epoch_padded(p, tc, data, padded, e, hp)
+        s, (p_fin, _) = _time_epochs(
+            step, (params0, mod.residuals(params0, tc, data)), n_epochs
+        )
+        out[label] = {"s_per_epoch": s}
+        finals[label] = p_fin
+    for field in finals["fused"]._fields:
+        _assert_parity(f"{model_name}.{field}",
+                       getattr(finals["fused"], field),
+                       getattr(finals["per_column"], field))
+    out["parity_ok"] = True
+    out["wallclock_speedup"] = (
+        out["per_column"]["s_per_epoch"] / out["fused"]["s_per_epoch"]
+    )
+    d_pad = max(padded.g1.d_pad, padded.gi.d_pad)
+    out["analytic_web_scale"] = rowpatch_sweep_bytes(
+        c=10_000_000, d_pad=1024, k=max(k, 64), k_b=8
+    )
+    out["shape"] = dict(n_c1=n_c1, n_c2=n_c2, n_items=n_items,
+                        n_pairs=n_pairs, nnz=nnz, k=k, k_b=k_b, d_pad=d_pad)
+    return out
+
+
+def _fused_field_measure(model_name, quick, n_epochs=2):
+    """Fused-vs-per-column epoch comparison for MFSI / FM (hard parity)."""
+    import numpy as np
+
+    from repro.core.design import make_design
+    from repro.core.models import fm, mfsi
+    from repro.sparse.interactions import build_interactions
+
+    rng = np.random.default_rng(1)
+    if quick:
+        n_ctx, n_items, nnz, k, k_b = 48, 32, 480, 6, 3
+    else:
+        n_ctx, n_items, nnz, k, k_b = 256, 128, 8192, 16, 8
+    x = make_design(
+        [
+            dict(name="id", ids=np.arange(n_ctx) % 11, vocab=11),
+            dict(name="grp", ids=rng.integers(0, 5, n_ctx), vocab=5),
+        ],
+        n_ctx,
+    )
+    z = make_design(
+        [
+            dict(name="item_id", ids=np.arange(n_items), vocab=n_items),
+            dict(name="genre", ids=rng.integers(0, 7, n_items), vocab=7),
+        ],
+        n_items,
+    )
+    cells = rng.choice(n_ctx * n_items, size=nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items
+    y = rng.integers(1, 5, size=nnz).astype(np.float64)
+    alpha = 1.4 + rng.random(nnz)
+    data = build_interactions(ctx, item, y, alpha, n_ctx, n_items, alpha0=0.4)
+
+    mod = mfsi if model_name == "mfsi" else fm
+    if model_name == "mfsi":
+        hp_pc = mfsi.MFSIHyperParams(k=k, alpha0=0.4, l2=0.05, block_k=1)
+    else:
+        hp_pc = fm.FMHyperParams(k=k, alpha0=0.4, l2=0.05, block_k=1)
+    hp_f = dataclasses.replace(hp_pc, block_k=k_b)
+    params0 = mod.init(jax.random.PRNGKey(1), x.p, z.p, k)
+    pdata = mod.pad_interactions(data)
+
+    out = {}
+    finals = {}
+    for label, hp in (("per_column", hp_pc), ("fused", hp_f)):
+        if model_name == "mfsi":
+            e0 = mod.residuals(params0, x, z, data)
+        else:
+            e0 = mod.residuals(params0, x, z, data, hp)
+        if label == "per_column":
+            def step(state, hp=hp):
+                p, e = state
+                return mod.epoch(p, x, z, data, e, hp)
+            state0 = (params0, e0)
+        else:
+            from repro.core.models.mf_padded import scatter_ctx_major
+
+            def step(state, hp=hp):
+                p, e = state
+                return mod.epoch_padded(p, x, z, pdata, e, hp)
+            state0 = (params0, scatter_ctx_major(pdata, e0))
+        s, (p_fin, _) = _time_epochs(step, state0, n_epochs)
+        out[label] = {"s_per_epoch": s}
+        finals[label] = p_fin
+    for field in finals["fused"]._fields:
+        _assert_parity(f"{model_name}.{field}",
+                       getattr(finals["fused"], field),
+                       getattr(finals["per_column"], field))
+    out["parity_ok"] = True
+    out["wallclock_speedup"] = (
+        out["per_column"]["s_per_epoch"] / out["fused"]["s_per_epoch"]
+    )
+    out["analytic_web_scale"] = slab_sweep_bytes(
+        c=10_000_000, d_pad=1024, k=max(k, 64), k_b=8
+    )
+    out["shape"] = dict(n_ctx=n_ctx, n_items=n_items, nnz=nnz, k=k, k_b=k_b,
+                        d_pad=pdata.alpha_c.shape[1])
+    return out
+
+
 def _cd_sweep_measure(c, n_items, nnz, k, k_b, n_epochs=2):
     """Measured CPU comparison of the two mf_padded dispatch paths (same
     math, parity-tested): wall-clock per epoch + XLA cost-analysis bytes."""
@@ -255,6 +476,8 @@ def cd_sweep_bench(quick: bool = True, out_path: Optional[str] = None):
             repo_root,
             "BENCH_cd_sweep.json" if quick else "BENCH_cd_sweep_full.json",
         )
+    from repro.kernels import use_interpret
+
     k_b = 8
     analytic = {
         f"k={k}": cd_sweep_sweep_bytes(c=10_000_000, d_pad=1024, k=k, k_b=k_b)
@@ -265,6 +488,14 @@ def cd_sweep_bench(quick: bool = True, out_path: Optional[str] = None):
     else:
         shapes = dict(c=1024, n_items=512, nnz=16_000, k=64, k_b=8)
     measured = _cd_sweep_measure(**shapes)
+    # per-model fused-vs-per-column sections — each carries a HARD parity
+    # assertion, so a broken kernel path fails the whole bench (CI gate)
+    models = {
+        "parafac": _fused_tensor_measure("parafac", quick),
+        "tucker": _fused_tensor_measure("tucker", quick),
+        "mfsi": _fused_field_measure("mfsi", quick),
+        "fm": _fused_field_measure("fm", quick),
+    }
     # None ⇒ cost_analysis had no byte counts (jax/backend dependent):
     # record null and gate on the analytic model alone rather than
     # reporting a phantom regression.
@@ -272,23 +503,32 @@ def cd_sweep_bench(quick: bool = True, out_path: Optional[str] = None):
     results = {
         "kernel": "kernels/cd_sweep (block) vs kernels/cd_update (per-column)",
         "mode": "quick" if quick else "full",
+        "backend": "interpret" if use_interpret() else "compiled",
         "analytic_block_k": k_b,
         "analytic_web_scale": {
             "shape": "C=10M, D_pad=1024, one side sweep, fp32",
             **analytic,
         },
         "measured_cpu": {"shape": shapes, **measured},
+        "models": models,
         "acceptance": {
             "bytes_ratio_at_k64": analytic["k=64"]["bytes_ratio"],
             # measured floor is loose: interpret-mode emulation adds block
             # copies to both paths, but a fused path that stopped saving
             # traffic (ratio <= ~1) still trips the gate.
             "measured_bytes_ratio": measured_ratio,
+            "model_parity": {m: r["parity_ok"] for m, r in models.items()},
+            "model_analytic_bytes_ratio": {
+                m: r["analytic_web_scale"]["bytes_ratio"]
+                for m, r in models.items()
+            },
             "target": ">= 2x fewer HBM bytes per sweep at k >= 64 "
                       "(analytic) and measured XLA bytes ratio > 1.2 "
-                      "(when available)",
+                      "(when available); every model's fused path "
+                      "parity-checked against its per-column path",
             "met": analytic["k=64"]["bytes_ratio"] >= 2.0
-                   and (measured_ratio is None or measured_ratio > 1.2),
+                   and (measured_ratio is None or measured_ratio > 1.2)
+                   and all(r["parity_ok"] for r in models.values()),
         },
     }
     if out_path:

@@ -60,7 +60,6 @@ def kernels(quick):
     """Micro-bench the Pallas kernels (interpret mode ⇒ timing is not
     meaningful on CPU; we report the oracle-XLA timings + shapes covered)."""
     import jax
-    import jax.numpy as jnp
 
     from repro.kernels.gram.ref import gram_ref
 
@@ -120,6 +119,16 @@ def main() -> None:
     ap.add_argument("--out", default="results/experiments")
     args = ap.parse_args()
     quick = not args.full
+
+    # surface the Pallas backend so CI logs show what produced the numbers
+    from repro.kernels import use_interpret
+
+    interp = use_interpret()
+    import jax
+
+    print(f"# pallas_backend={'interpret' if interp else 'compiled'} "
+          f"(use_interpret()={interp}) jax_default_backend={jax.default_backend()}")
+    print("# name,seconds_us,derived")
 
     for name, fn in FIGURES.items():
         if args.quick and name not in QUICK_SET:

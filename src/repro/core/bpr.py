@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

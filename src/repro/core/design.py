@@ -20,7 +20,7 @@ with per-field row offsets, matching the paper's flat W ∈ R^{p×k}.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

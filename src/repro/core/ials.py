@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -22,6 +22,16 @@ fields are exact; multi-hot fields use damped Jacobi (DESIGN.md §3) and the
 second-order cross-slot residual drift is bounded by refreshing caches every
 epoch. Runtime matches the paper: same flow/complexity as MFSI,
 O(k² N_Z(X)) per epoch for the implicit part.
+
+Fused padded path (``epoch_padded`` over ``mf_padded.PaddedInteractions``,
+dispatched by ``hp.block_k``): per block of k_b dimensions one
+``cd_slab_reduce`` over the k_b ψ columns PLUS the ψ_spec column yields
+every per-context cache the layer updates need — q/u from Q, p2/p1/p0 from
+the moment slab P — and the cross-dimension coupling that patches q for
+later block columns (Δe = Δφ_j·ψ_j + Δφ_s·ψ_spec ⇒ Δq_f =
+Δφ_j·P[·,j,f] + Δφ_s·P[·,s,f]); one rank-(k_b+1) ``cd_resid_patch``
+closes the block. The linear-weight and bias stages run on the padded grid
+with the same formulas.
 """
 from __future__ import annotations
 
@@ -36,8 +46,21 @@ from repro.core import sweeps
 from repro.core.design import Design, design_matmul
 from repro.core.gram import gram
 from repro.core.implicit import implicit_objective
+from repro.core.models.mf_padded import (
+    PaddedInteractions,
+    pad_interactions,
+    scatter_ctx_major,
+    transfer_ctx_to_item,
+    transfer_item_to_ctx,
+)
+from repro.core.models.mfsi import _field_layers
+from repro.kernels.cd_sweep.ops import cd_resid_patch, cd_slab_reduce
 from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
+
+__all__ = ["FMParams", "FMHyperParams", "pad_interactions", "init",
+           "phi_ext", "psi_ext", "predict", "epoch", "epoch_padded",
+           "residuals", "residuals_padded", "objective", "fit"]
 
 
 class FMParams(NamedTuple):
@@ -60,6 +83,9 @@ class FMHyperParams:
     multi_hot_mode: str = "jacobi"  # 'jacobi' | 'slot'
     jacobi_eta: float = 0.5
     implementation: str = "xla"
+    block_k: int = 0  # dims per fused slab-reduce/resid-patch dispatch on
+    #                   the padded layout (epoch_padded): 0 = auto
+    #                   (min(k, 8)), 1 = per-dimension baseline
 
 
 def init(key: jax.Array, p_ctx: int, p_item: int, k: int, sigma: float = 0.1) -> FMParams:
@@ -112,11 +138,15 @@ def predict(params: FMParams, x: Design, z: Design, ctx, item, hp: FMHyperParams
 
 
 def _embed_layer_update(
-    table_col, self_ext, e, q, u, r_a, r_b, p2, p1, p0, j_ff, j_fs, j_ss,
-    ids_g, xw, rows, vocab, offset, f, spec_col,
-    other_f_nnz, other_s_nnz, rows_nnz, hp, eta,
+    table_col, self_ext, q, u, r_a, r_b, p2, p1, p0, j_ff, j_fs, j_ss,
+    ids_g, xw, rows, vocab, offset, f, spec_col, hp, eta,
 ):
-    """Vectorized Newton update of one embedding layer (field × dim f*)."""
+    """Vectorized Newton update of one embedding layer (field × dim f*).
+
+    Patches the per-context caches but NOT the residual cache — the caller
+    owns the e layout and applies (Δφ_{f*}, Δφ_spec) there (per layer on
+    the flat path, one fused rank-(k_b+1) ``cd_resid_patch`` per block on
+    the padded path)."""
     local = ids_g - offset
     w_rows = jnp.take(table_col, ids_g)                      # w_{l,f*} per entry
     g = jnp.take(sweeps.take_col(self_ext, f), rows) - xw * w_rows
@@ -139,12 +169,11 @@ def _embed_layer_update(
     dphi_s = segment_sum(d_entry * g, rows, n_rows)          # Δφ_spec (linear patch)
     self_ext = sweeps.put_col(self_ext, f, sweeps.take_col(self_ext, f) + dphi_f)
     self_ext = self_ext.at[:, spec_col].add(dphi_s)
-    e = e + jnp.take(dphi_f, rows_nnz) * other_f_nnz + jnp.take(dphi_s, rows_nnz) * other_s_nnz
     q = q + dphi_f * p2 + dphi_s * p1
     u = u + dphi_f * p1 + dphi_s * p0
     r_a = r_a + dphi_f * j_ff + dphi_s * j_fs
     r_b = r_b + dphi_f * j_fs + dphi_s * j_ss
-    return table_col, self_ext, e, q, u, r_a, r_b
+    return table_col, self_ext, q, u, r_a, r_b, dphi_f, dphi_s
 
 
 def _side_sweep(
@@ -163,7 +192,7 @@ def _side_sweep(
     hp: FMHyperParams,
 ):
     n_rows = design.n_rows
-    row_idx = jnp.arange(n_rows, dtype=jnp.int32)
+    layers = _field_layers(design, hp)
     o_spec_nnz = jnp.take(other_ext[:, spec_col], other_nnz_ids)  # ones, kept generic
     p0 = segment_sum(alpha * o_spec_nnz * o_spec_nnz, rows_nnz, n_rows)
     j_ss = other_j[spec_col, spec_col]
@@ -182,24 +211,19 @@ def _side_sweep(
         j_fs = other_j[f, spec_col]
         table_col = sweeps.take_col(table, f)
 
-        for field in design.fields:
-            gids = design.global_ids(field)
-            if field.one_hot or hp.multi_hot_mode == "slot":
-                for j in range(field.bag):
-                    table_col, self_ext, e, q, u, r_a, r_b = _embed_layer_update(
-                        table_col, self_ext, e, q, u, r_a, r_b, p2, p1, p0,
-                        j_ff, j_fs, j_ss, gids[:, j], field.weights[:, j],
-                        row_idx, field.vocab, field.offset, f, spec_col,
-                        other_f_nnz, o_spec_nnz, rows_nnz, hp, hp.eta,
-                    )
-            else:
-                flat_rows = jnp.repeat(row_idx, field.bag)
-                table_col, self_ext, e, q, u, r_a, r_b = _embed_layer_update(
-                    table_col, self_ext, e, q, u, r_a, r_b, p2, p1, p0,
-                    j_ff, j_fs, j_ss, gids.reshape(-1), field.weights.reshape(-1),
-                    flat_rows, field.vocab, field.offset, f, spec_col,
-                    other_f_nnz, o_spec_nnz, rows_nnz, hp, hp.jacobi_eta,
+        for ids_g, xw, rows, vocab, offset, eta in layers:
+            table_col, self_ext, q, u, r_a, r_b, dphi_f, dphi_s = (
+                _embed_layer_update(
+                    table_col, self_ext, q, u, r_a, r_b, p2, p1, p0,
+                    j_ff, j_fs, j_ss, ids_g, xw, rows, vocab, offset,
+                    f, spec_col, hp, eta,
                 )
+            )
+            e = (
+                e
+                + jnp.take(dphi_f, rows_nnz) * other_f_nnz
+                + jnp.take(dphi_s, rows_nnz) * o_spec_nnz
+            )
         return sweeps.put_col(table, f, table_col), self_ext, e
 
     table, self_ext, e = sweeps.sweep_columns(hp.k, dim_body, (table, self_ext, e))
@@ -208,45 +232,160 @@ def _side_sweep(
     if hp.use_linear and lin is not None:
         u = segment_sum(alpha * e * o_spec_nnz, rows_nnz, n_rows)
         r_b = self_ext @ other_j[:, spec_col]
-        for field in design.fields:
-            gids = design.global_ids(field)
-            slots = (
-                [(gids[:, j], field.weights[:, j], row_idx) for j in range(field.bag)]
-                if (field.one_hot or hp.multi_hot_mode == "slot")
-                else [(gids.reshape(-1), field.weights.reshape(-1), jnp.repeat(row_idx, field.bag))]
+        for ids_g, xw, rows, vocab, offset, eta in layers:
+            lin, self_ext, u, r_b, dspec = _linear_layer_update(
+                lin, self_ext, u, r_b, p0, j_ss,
+                ids_g, xw, rows, vocab, offset, spec_col, hp, eta,
             )
-            eta = hp.eta if (field.one_hot or hp.multi_hot_mode == "slot") else hp.jacobi_eta
-            for ids_g, xw, rows in slots:
-                local = ids_g - field.offset
-                lp = segment_sum(xw * jnp.take(u, rows), local, field.vocab)
-                lpp = segment_sum(xw * xw * jnp.take(p0, rows), local, field.vocab)
-                rp = segment_sum(xw * jnp.take(r_b, rows), local, field.vocab)
-                rpp = j_ss * segment_sum(xw * xw, local, field.vocab)
-                lin_layer = lin[field.offset : field.offset + field.vocab]
-                num = lp + hp.alpha0 * rp + hp.l2_lin * lin_layer
-                den = lpp + hp.alpha0 * rpp + hp.l2_lin
-                delta = -eta * num / jnp.maximum(den, 1e-12)
-                lin = lin.at[field.offset : field.offset + field.vocab].add(delta)
-                dspec = segment_sum(xw * jnp.take(delta, local), rows, n_rows)
-                self_ext = self_ext.at[:, spec_col].add(dspec)
-                e = e + jnp.take(dspec, rows_nnz) * o_spec_nnz
-                u = u + dspec * p0
-                r_b = r_b + dspec * j_ss
+            e = e + jnp.take(dspec, rows_nnz) * o_spec_nnz
 
     # ---- global bias (context side only) ----------------------------------
     if hp.use_bias and bias is not None:
         u = segment_sum(alpha * e * o_spec_nnz, rows_nnz, n_rows)
         r_b = self_ext @ other_j[:, spec_col]
-        lp = jnp.sum(u)
-        lpp = jnp.sum(p0)
-        rp = jnp.sum(r_b)
-        rpp = j_ss * n_rows
-        delta = -hp.eta * (lp + hp.alpha0 * rp) / jnp.maximum(lpp + hp.alpha0 * rpp, 1e-12)
-        bias = bias + delta
-        self_ext = self_ext.at[:, spec_col].add(delta)
+        bias, self_ext, delta = _bias_update(
+            bias, self_ext, u, r_b, p0, j_ss, n_rows, spec_col, hp
+        )
         e = e + delta * o_spec_nnz
 
     return table, lin, bias, self_ext, e
+
+
+def _linear_layer_update(
+    lin, self_ext, u, r_b, p0, j_ss, ids_g, xw, rows, vocab, offset,
+    spec_col, hp, eta,
+):
+    """Newton step of one linear-weight layer; e patch left to the caller."""
+    n_rows = self_ext.shape[0]
+    local = ids_g - offset
+    lp = segment_sum(xw * jnp.take(u, rows), local, vocab)
+    lpp = segment_sum(xw * xw * jnp.take(p0, rows), local, vocab)
+    rp = segment_sum(xw * jnp.take(r_b, rows), local, vocab)
+    rpp = j_ss * segment_sum(xw * xw, local, vocab)
+    lin_layer = lin[offset : offset + vocab]
+    num = lp + hp.alpha0 * rp + hp.l2_lin * lin_layer
+    den = lpp + hp.alpha0 * rpp + hp.l2_lin
+    delta = -eta * num / jnp.maximum(den, 1e-12)
+    lin = lin.at[offset : offset + vocab].add(delta)
+    dspec = segment_sum(xw * jnp.take(delta, local), rows, n_rows)
+    self_ext = self_ext.at[:, spec_col].add(dspec)
+    u = u + dspec * p0
+    r_b = r_b + dspec * j_ss
+    return lin, self_ext, u, r_b, dspec
+
+
+def _bias_update(bias, self_ext, u, r_b, p0, j_ss, n_rows, spec_col, hp):
+    """Global-bias Newton step; e patch left to the caller."""
+    lp = jnp.sum(u)
+    lpp = jnp.sum(p0)
+    rp = jnp.sum(r_b)
+    rpp = j_ss * n_rows
+    delta = -hp.eta * (lp + hp.alpha0 * rp) / jnp.maximum(lpp + hp.alpha0 * rpp, 1e-12)
+    bias = bias + delta
+    self_ext = self_ext.at[:, spec_col].add(delta)
+    return bias, self_ext, delta
+
+
+def _side_sweep_padded(
+    table: jax.Array,
+    lin: Optional[jax.Array],
+    bias: Optional[jax.Array],
+    self_ext: jax.Array,     # (n, k+2), kept in sync
+    other_ext: jax.Array,    # (m, k+2), fixed
+    other_j: jax.Array,      # (k+2, k+2) Gram of other_ext
+    design: Design,
+    ids_pad: jax.Array,      # (n, d_pad) opposite-side row ids
+    alpha_pad: jax.Array,    # (n, d_pad), 0 on padding
+    e_pad: jax.Array,        # (n, d_pad) residual grid
+    spec_col: int,
+    hp: FMHyperParams,
+    k_b: int,
+):
+    """Fused FM side sweep on the padded grid: per block one
+    ``cd_slab_reduce`` over [ψ_{f0..f0+k_b} | ψ_spec] feeds all per-context
+    caches (q, u, p2, p1 and the cross-dim coupling), the field-level
+    Newton steps run in XLA, one rank-(k_b+1) ``cd_resid_patch`` closes the
+    block. Same fixed point as :func:`_side_sweep` (parity-tested)."""
+    n_rows = design.n_rows
+    layers = _field_layers(design, hp)
+    psi_spec_pad = jnp.take(other_ext[:, spec_col], ids_pad)   # (n, d_pad)
+    p0 = jnp.sum(alpha_pad * psi_spec_pad * psi_spec_pad, axis=1)
+    j_ss = other_j[spec_col, spec_col]
+
+    # ---- embedding dims, blocked ----------------------------------------
+    def block_body(f0, kb, carry):
+        table, self_ext, e_pad = carry
+        blk = slice(f0, f0 + kb)
+        psi_blk = jnp.concatenate(
+            [
+                jnp.moveaxis(jnp.take(other_ext[:, blk], ids_pad, axis=0), -1, 1),
+                psi_spec_pad[:, None, :],
+            ],
+            axis=1,
+        )                                                      # (n, kb+1, d_pad)
+        q_slab, p_slab = cd_slab_reduce(psi_blk, alpha_pad, e_pad)
+        u = q_slab[:, -1]
+        dphi_cols = []
+        dphi_s_tot = jnp.zeros((n_rows,), jnp.float32)
+        for j in range(kb):
+            f = f0 + j
+            q = q_slab[:, j]
+            p2 = p_slab[:, j, j]
+            p1 = p_slab[:, j, -1]
+            r_a = self_ext @ other_j[:, f]
+            r_b = self_ext @ other_j[:, spec_col]
+            j_ff = other_j[f, f]
+            j_fs = other_j[f, spec_col]
+            table_col = table[:, f]
+            dphi_f_tot = jnp.zeros((n_rows,), jnp.float32)
+            dphi_s_dim = jnp.zeros((n_rows,), jnp.float32)
+            for ids_g, xw, rows, vocab, offset, eta in layers:
+                table_col, self_ext, q, u, r_a, r_b, dphi_f, dphi_s = (
+                    _embed_layer_update(
+                        table_col, self_ext, q, u, r_a, r_b, p2, p1, p0,
+                        j_ff, j_fs, j_ss, ids_g, xw, rows, vocab, offset,
+                        f, spec_col, hp, eta,
+                    )
+                )
+                dphi_f_tot = dphi_f_tot + dphi_f
+                dphi_s_dim = dphi_s_dim + dphi_s
+            table = table.at[:, f].set(table_col)
+            if j + 1 < kb:  # Δe = Δφ_j·ψ_j + Δφ_s·ψ_spec moves later q's
+                q_slab = q_slab.at[:, j + 1:kb].add(
+                    dphi_f_tot[:, None] * p_slab[:, j, j + 1:kb]
+                    + dphi_s_dim[:, None] * p_slab[:, -1, j + 1:kb]
+                )
+            dphi_cols.append(dphi_f_tot)
+            dphi_s_tot = dphi_s_tot + dphi_s_dim
+        dphi_blk = jnp.stack(dphi_cols + [dphi_s_tot], axis=1)  # (n, kb+1)
+        e_pad = cd_resid_patch(psi_blk, e_pad, dphi_blk)
+        return table, self_ext, e_pad
+
+    table, self_ext, e_pad = sweeps.sweep_columns(
+        hp.k, None, (table, self_ext, e_pad), block=k_b, block_body=block_body
+    )
+
+    # ---- linear weights --------------------------------------------------
+    if hp.use_linear and lin is not None:
+        u = jnp.sum(alpha_pad * e_pad * psi_spec_pad, axis=1)
+        r_b = self_ext @ other_j[:, spec_col]
+        for ids_g, xw, rows, vocab, offset, eta in layers:
+            lin, self_ext, u, r_b, dspec = _linear_layer_update(
+                lin, self_ext, u, r_b, p0, j_ss,
+                ids_g, xw, rows, vocab, offset, spec_col, hp, eta,
+            )
+            e_pad = e_pad + dspec[:, None] * psi_spec_pad
+
+    # ---- global bias (context side only) ----------------------------------
+    if hp.use_bias and bias is not None:
+        u = jnp.sum(alpha_pad * e_pad * psi_spec_pad, axis=1)
+        r_b = self_ext @ other_j[:, spec_col]
+        bias, self_ext, delta = _bias_update(
+            bias, self_ext, u, r_b, p0, j_ss, n_rows, spec_col, hp
+        )
+        e_pad = e_pad + delta * psi_spec_pad
+
+    return table, lin, bias, self_ext, e_pad
 
 
 @partial(jax.jit, static_argnames=("hp",))
@@ -281,13 +420,59 @@ def epoch(
     return FMParams(b, w_lin, w, h_lin, h), e
 
 
-def residuals(params: FMParams, x: Design, z: Design, data: Interactions, hp: FMHyperParams) -> jax.Array:
+@partial(jax.jit, static_argnames=("hp",), donate_argnums=(4,))
+def epoch_padded(
+    params: FMParams,
+    x: Design,
+    z: Design,
+    pdata: PaddedInteractions,
+    e_pad: jax.Array,
+    hp: FMHyperParams,
+) -> Tuple[FMParams, jax.Array]:
+    """Fused iCD epoch over the dual padded layout; carries the ctx-major
+    padded residual grid. Same sweep order and fixed point as :func:`epoch`
+    (parity-tested)."""
+    b, w_lin, w, h_lin, h = params
+    k_b = sweeps.resolve_block_k(hp.block_k, hp.k)
+    pe = phi_ext(params, x, hp)
+    se = psi_ext(params, z, hp)
+
+    j_i = gram(se, implementation=hp.implementation)
+    w, w_lin, b, pe, e_pad = _side_sweep_padded(
+        w, w_lin if hp.use_linear else None, b if hp.use_bias else None,
+        pe, se, j_i, x, pdata.item_ids, pdata.alpha_c, e_pad,
+        spec_col=hp.k, hp=hp, k_b=k_b,
+    )
+
+    e_pad_i = transfer_ctx_to_item(pdata, e_pad)
+
+    j_c = gram(pe, implementation=hp.implementation)
+    h, h_lin, _, se, e_pad_i = _side_sweep_padded(
+        h, h_lin if hp.use_linear else None, None,
+        se, pe, j_c, z, pdata.ctx_ids, pdata.alpha_i, e_pad_i,
+        spec_col=hp.k + 1, hp=hp, k_b=k_b,
+    )
+    e_pad = transfer_item_to_ctx(pdata, e_pad_i)
+    return FMParams(b, w_lin, w, h_lin, h), e_pad
+
+
+def residuals_padded(
+    params: FMParams, x: Design, z: Design, data: Interactions,
+    pdata: PaddedInteractions, hp: FMHyperParams,
+) -> jax.Array:
+    """ŷ−ȳ on the ctx-major padded grid (0 on padding)."""
+    return scatter_ctx_major(pdata, residuals(params, x, z, data, hp))
+
+
+def residuals(params: FMParams, x: Design, z: Design, data: Interactions,
+              hp: FMHyperParams) -> jax.Array:
     return sweeps.residuals_from_factors(
         phi_ext(params, x, hp), psi_ext(params, z, hp), data.ctx, data.item, data.y
     )
 
 
-def objective(params: FMParams, x: Design, z: Design, data: Interactions, hp: FMHyperParams) -> jax.Array:
+def objective(params: FMParams, x: Design, z: Design, data: Interactions,
+              hp: FMHyperParams) -> jax.Array:
     e = residuals(params, x, z, data, hp)
     sq = jnp.sum(params.w**2) + jnp.sum(params.h**2)
     sq_lin = jnp.sum(params.w_lin**2) + jnp.sum(params.h_lin**2)

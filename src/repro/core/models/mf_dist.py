@@ -26,8 +26,6 @@ Per-epoch wire traffic per device (C contexts, I items, nnz observations):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -114,12 +114,29 @@ def pad_interactions(data: Interactions, lane: int = 128) -> PaddedInteractions:
     )
 
 
+def scatter_ctx_major(pdata: PaddedInteractions, e_flat: jax.Array) -> jax.Array:
+    """Flat per-nnz vector (ctx-major order) → ctx-major padded grid."""
+    return jnp.zeros_like(pdata.alpha_c).at[pdata.c_rows, pdata.c_cols].set(e_flat)
+
+
+def transfer_ctx_to_item(pdata: PaddedInteractions, e_pad: jax.Array) -> jax.Array:
+    """Residual grid ctx-major → item-major through the flat nnz order."""
+    e_flat = e_pad[pdata.c_rows, pdata.c_cols]
+    return jnp.zeros_like(pdata.alpha_i).at[pdata.i_rows, pdata.i_cols].set(e_flat)
+
+
+def transfer_item_to_ctx(pdata: PaddedInteractions, e_pad_i: jax.Array) -> jax.Array:
+    """Inverse of :func:`transfer_ctx_to_item`."""
+    e_flat = e_pad_i[pdata.i_rows, pdata.i_cols]
+    return jnp.zeros_like(pdata.alpha_c).at[pdata.c_rows, pdata.c_cols].set(e_flat)
+
+
 _SWEEP_BLOCK_CTX = 128  # row tile of the cd_sweep kernel dispatches
 
 
 def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
     k = side.shape[1]
-    k_b = min(k, 8) if hp.block_k == 0 else min(hp.block_k, k)
+    k_b = sweeps.resolve_block_k(hp.block_k, k)
     n = side.shape[0]
     use_block = k_b > 1 and not hp.unroll  # unroll = explicit per-column ask
 
@@ -186,15 +203,12 @@ def epoch(
     j_i = gram_kernel(h)
     w, e_pad = _padded_side_sweep(w, h, j_i, pdata.item_ids, pdata.alpha_c, e_pad, hp)
 
-    # transfer residual grid ctx-major → item-major through flat nnz order
-    e_flat = e_pad[pdata.c_rows, pdata.c_cols]
-    e_pad_i = jnp.zeros_like(pdata.alpha_i).at[pdata.i_rows, pdata.i_cols].set(e_flat)
+    e_pad_i = transfer_ctx_to_item(pdata, e_pad)
 
     j_c = gram_kernel(w)
     h, e_pad_i = _padded_side_sweep(h, w, j_c, pdata.ctx_ids, pdata.alpha_i, e_pad_i, hp)
 
-    e_flat = e_pad_i[pdata.i_rows, pdata.i_cols]
-    e_pad = jnp.zeros_like(pdata.alpha_c).at[pdata.c_rows, pdata.c_cols].set(e_flat)
+    e_pad = transfer_item_to_ctx(pdata, e_pad_i)
     return MFParams(w, h), e_pad
 
 

@@ -31,6 +31,15 @@ paper, forced by TPU parallelism — DESIGN.md §3):
   - ``slot``: sequential over bag slots; each slot update uses only the rows
     where the feature occupies that slot (fresh residuals between slots) —
     a mini-batched CD flavour that tolerates η=1.
+
+Fused padded path (``epoch_padded`` over ``mf_padded.PaddedInteractions``,
+dispatched by ``hp.block_k``): per block of ``k_b`` dimensions ONE
+``cd_slab_reduce`` pass streams e/α and yields the q/p2 caches for every
+block column plus the cross-dimension coupling slab P (q_f' moves by
+Δφ_j·P[·,j,f'] when dimension j's features step — the same linearity as the
+eq. 25 within-dimension patch), the field-level Newton steps run in XLA on
+those slabs, and ONE ``cd_resid_patch`` applies the rank-k_b residual
+patch. e-traffic per sweep drops from 2k streams to 2⌈k/k_b⌉.
 """
 from __future__ import annotations
 
@@ -45,8 +54,20 @@ from repro.core import sweeps
 from repro.core.design import Design, design_matmul
 from repro.core.gram import gram
 from repro.core.implicit import implicit_objective
+from repro.core.models.mf_padded import (
+    PaddedInteractions,
+    pad_interactions,
+    scatter_ctx_major,
+    transfer_ctx_to_item,
+    transfer_item_to_ctx,
+)
+from repro.kernels.cd_sweep.ops import cd_resid_patch, cd_slab_reduce
 from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
+
+__all__ = ["MFSIParams", "MFSIHyperParams", "pad_interactions", "init",
+           "phi", "psi", "predict", "epoch", "epoch_padded", "residuals",
+           "residuals_padded", "objective", "fit"]
 
 
 class MFSIParams(NamedTuple):
@@ -63,6 +84,9 @@ class MFSIHyperParams:
     multi_hot_mode: str = "jacobi"  # 'jacobi' | 'slot'
     jacobi_eta: float = 0.5
     implementation: str = "xla"
+    block_k: int = 0  # dims per fused slab-reduce/resid-patch dispatch on
+    #                   the padded layout (epoch_padded): 0 = auto
+    #                   (min(k, 8)), 1 = per-dimension baseline
 
 
 def init(key: jax.Array, p_ctx: int, p_item: int, k: int, sigma: float = 0.1) -> MFSIParams:
@@ -87,14 +111,19 @@ def predict(params: MFSIParams, x: Design, z: Design, ctx, item) -> jax.Array:
 
 
 def _field_layer_update(
-    table_col, phi_col, e, q, r_vec, p2, jff,
-    ids_g, xw, rows, vocab, offset, other_nnz, rows_nnz, alpha, n_rows, hp, eta,
+    table_col, phi_col, q, r_vec, p2, jff,
+    ids_g, xw, rows, vocab, offset, hp, eta,
 ):
     """One vectorized Newton update of a one-hot layer (field or bag slot).
 
     ids_g:  (n,) global feature ids for this layer (offset applied)
     xw:     (n,) feature values x_{c,l} (0 ⇒ row inactive in this layer)
     rows:   (n,) context row per entry (identity for bag=1 fields)
+
+    Patches the per-context caches (eq. 25 and DESIGN.md §3) but NOT the
+    residual cache — the caller owns the e layout (flat per-nnz vs padded
+    grid) and applies ``dphi_rows`` there (per layer on the flat path, one
+    fused rank-k_b ``cd_resid_patch`` per block on the padded path).
     """
     w_layer = table_col[offset : offset + vocab]
     lp = segment_sum(xw * jnp.take(q, rows), ids_g - offset, vocab)
@@ -111,8 +140,27 @@ def _field_layer_update(
     phi_col = phi_col + dphi_rows
     q = q + dphi_rows * p2
     r_vec = r_vec + dphi_rows * jff
-    e = e + jnp.take(dphi_rows, rows_nnz) * other_nnz
-    return table_col, phi_col, e, q, r_vec
+    return table_col, phi_col, q, r_vec, dphi_rows
+
+
+def _field_layers(design: Design, hp) -> list:
+    """Flatten the field loop into (ids, weights, rows, vocab, offset, eta)
+    layers: one-hot fields (and 'slot' mode bags) update per slot — exact
+    CD; 'jacobi' bags update whole-bag in one damped parallel step."""
+    n_rows = design.n_rows
+    row_idx = jnp.arange(n_rows, dtype=jnp.int32)
+    layers = []
+    for field in design.fields:
+        gids = design.global_ids(field)
+        if field.one_hot or hp.multi_hot_mode == "slot":
+            for j in range(field.bag):
+                layers.append((gids[:, j], field.weights[:, j], row_idx,
+                               field.vocab, field.offset, hp.eta))
+        else:
+            layers.append((gids.reshape(-1), field.weights.reshape(-1),
+                           jnp.repeat(row_idx, field.bag),
+                           field.vocab, field.offset, hp.jacobi_eta))
+    return layers
 
 
 def _side_sweep(
@@ -128,7 +176,7 @@ def _side_sweep(
     hp: MFSIHyperParams,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     n_rows = design.n_rows
-    row_idx = jnp.arange(n_rows, dtype=jnp.int32)
+    layers = _field_layers(design, hp)
 
     def dim_body(f, carry):
         table, phi_m, e = carry
@@ -141,26 +189,15 @@ def _side_sweep(
         table_col = sweeps.take_col(table, f)
         phi_col = sweeps.take_col(phi_m, f)
 
-        for field in design.fields:
-            gids = design.global_ids(field)
-            if field.one_hot or hp.multi_hot_mode == "slot":
-                # one-hot: EXACT (features never share a row); multi-hot
-                # 'slot': sequential slot layers with fresh residuals.
-                for j in range(field.bag):
-                    table_col, phi_col, e, q, r_vec = _field_layer_update(
-                        table_col, phi_col, e, q, r_vec, p2, jff,
-                        gids[:, j], field.weights[:, j], row_idx,
-                        field.vocab, field.offset,
-                        psi_nnz, rows_nnz, alpha, n_rows, hp, hp.eta,
-                    )
-            else:  # jacobi: whole bag in one damped parallel step
-                flat_rows = jnp.repeat(row_idx, field.bag)
-                table_col, phi_col, e, q, r_vec = _field_layer_update(
-                    table_col, phi_col, e, q, r_vec, p2, jff,
-                    gids.reshape(-1), field.weights.reshape(-1), flat_rows,
-                    field.vocab, field.offset,
-                    psi_nnz, rows_nnz, alpha, n_rows, hp, hp.jacobi_eta,
-                )
+        # one-hot layers are EXACT (features never share a row); multi-hot
+        # bags run either sequential 'slot' layers (fresh residuals) or one
+        # damped 'jacobi' parallel step — see _field_layers.
+        for ids_g, xw, rows, vocab, offset, eta in layers:
+            table_col, phi_col, q, r_vec, dphi_rows = _field_layer_update(
+                table_col, phi_col, q, r_vec, p2, jff,
+                ids_g, xw, rows, vocab, offset, hp, eta,
+            )
+            e = e + jnp.take(dphi_rows, rows_nnz) * psi_nnz
 
         table = sweeps.put_col(table, f, table_col)
         phi_m = sweeps.put_col(phi_m, f, phi_col)
@@ -168,6 +205,63 @@ def _side_sweep(
 
     table, phi_m, e = sweeps.sweep_columns(hp.k, dim_body, (table, phi_m, e))
     return table, phi_m, e
+
+
+def _side_sweep_padded(
+    table: jax.Array,       # (p, k) this side's feature embeddings
+    phi_m: jax.Array,       # (n_rows, k) this side's Φ (kept in sync)
+    other_psi: jax.Array,   # (n_other, k) opposite side's Ψ (fixed)
+    other_j: jax.Array,     # (k, k) Gram of Ψ
+    design: Design,
+    ids_pad: jax.Array,     # (n_rows, d_pad) opposite-side row ids
+    alpha_pad: jax.Array,   # (n_rows, d_pad), 0 on padding
+    e_pad: jax.Array,       # (n_rows, d_pad) residual grid
+    hp: MFSIHyperParams,
+    k_b: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused side sweep: one ``cd_slab_reduce`` per block feeds the
+    field-level Newton steps of all k_b dimensions (q patched across block
+    columns through the coupling slab P), one ``cd_resid_patch`` closes the
+    block. Same fixed point as :func:`_side_sweep` (parity-tested)."""
+    n_rows = design.n_rows
+    layers = _field_layers(design, hp)
+
+    def block_body(f0, kb, carry):
+        table, phi_m, e_pad = carry
+        blk = slice(f0, f0 + kb)
+        psi_blk = jnp.moveaxis(
+            jnp.take(other_psi[:, blk], ids_pad, axis=0), -1, 1
+        )                                                  # (n, kb, d_pad)
+        q_slab, p_slab = cd_slab_reduce(psi_blk, alpha_pad, e_pad)
+        dphi_cols = []
+        for j in range(kb):
+            f = f0 + j
+            q = q_slab[:, j]
+            p2 = p_slab[:, j, j]
+            r_vec = phi_m @ other_j[:, f]
+            jff = other_j[f, f]
+            table_col = table[:, f]
+            phi_col = phi_m[:, f]
+            dphi_tot = jnp.zeros((n_rows,), jnp.float32)
+            for ids_g, xw, rows, vocab, offset, eta in layers:
+                table_col, phi_col, q, r_vec, dphi_rows = _field_layer_update(
+                    table_col, phi_col, q, r_vec, p2, jff,
+                    ids_g, xw, rows, vocab, offset, hp, eta,
+                )
+                dphi_tot = dphi_tot + dphi_rows
+            table = table.at[:, f].set(table_col)
+            phi_m = phi_m.at[:, f].set(phi_col)
+            if j + 1 < kb:  # Δe = Δφ_j·ψ_j moves later columns' q caches
+                q_slab = q_slab.at[:, j + 1:kb].add(
+                    dphi_tot[:, None] * p_slab[:, j, j + 1:kb]
+                )
+            dphi_cols.append(dphi_tot)
+        e_pad = cd_resid_patch(psi_blk, e_pad, jnp.stack(dphi_cols, axis=1))
+        return table, phi_m, e_pad
+
+    return sweeps.sweep_columns(
+        hp.k, None, (table, phi_m, e_pad), block=k_b, block_body=block_body
+    )
 
 
 @partial(jax.jit, static_argnames=("hp",))
@@ -199,13 +293,54 @@ def epoch(
     return MFSIParams(w, h), e
 
 
+@partial(jax.jit, static_argnames=("hp",), donate_argnums=(4,))
+def epoch_padded(
+    params: MFSIParams,
+    x: Design,
+    z: Design,
+    pdata: PaddedInteractions,
+    e_pad: jax.Array,
+    hp: MFSIHyperParams,
+) -> Tuple[MFSIParams, jax.Array]:
+    """Fused iCD epoch over the dual padded layout (``mf_padded``'s
+    ``PaddedInteractions``); carries the ctx-major padded residual grid.
+    Same sweep order and fixed point as :func:`epoch` (parity-tested)."""
+    w, h = params
+    k_b = sweeps.resolve_block_k(hp.block_k, hp.k)
+    phi_m = design_matmul(x, w)
+    psi_m = design_matmul(z, h)
+
+    j_i = gram(psi_m, implementation=hp.implementation)
+    w, phi_m, e_pad = _side_sweep_padded(
+        w, phi_m, psi_m, j_i, x, pdata.item_ids, pdata.alpha_c, e_pad, hp, k_b
+    )
+
+    e_pad_i = transfer_ctx_to_item(pdata, e_pad)
+
+    j_c = gram(phi_m, implementation=hp.implementation)
+    h, psi_m, e_pad_i = _side_sweep_padded(
+        h, psi_m, phi_m, j_c, z, pdata.ctx_ids, pdata.alpha_i, e_pad_i, hp, k_b
+    )
+    e_pad = transfer_item_to_ctx(pdata, e_pad_i)
+    return MFSIParams(w, h), e_pad
+
+
+def residuals_padded(
+    params: MFSIParams, x: Design, z: Design, data: Interactions,
+    pdata: PaddedInteractions,
+) -> jax.Array:
+    """ŷ−ȳ on the ctx-major padded grid (0 on padding)."""
+    return scatter_ctx_major(pdata, residuals(params, x, z, data))
+
+
 def residuals(params: MFSIParams, x: Design, z: Design, data: Interactions) -> jax.Array:
     return sweeps.residuals_from_factors(
         phi(params, x), psi(params, z), data.ctx, data.item, data.y
     )
 
 
-def objective(params: MFSIParams, x: Design, z: Design, data: Interactions, hp: MFSIHyperParams) -> jax.Array:
+def objective(params: MFSIParams, x: Design, z: Design, data: Interactions,
+              hp: MFSIHyperParams) -> jax.Array:
     e = residuals(params, x, z, data)
     sq = jnp.sum(params.w**2) + jnp.sum(params.h**2)
     return implicit_objective(phi(params, x), psi(params, z), e, data, hp.alpha0, hp.l2, sq)

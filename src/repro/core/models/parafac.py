@@ -18,6 +18,15 @@ Context modes (paper's distinction):
 
 The item sweep is exactly MF's (§5.1): "The item side is equivalent to
 matrix factorization."
+
+Fused padded path (``epoch_padded``, dispatched by ``hp.block_k`` exactly
+like ``mf_padded``): each side's sweep runs on a :class:`PaddedGroup` grid
+(nnz grouped by c1 / c2 / item) through ``sweeps.sweep_columns`` block
+bodies. The context modes use the ``cd_block_sweep_rowpatch`` kernel —
+their R'/R'' coupling is ROW-dependent (P[r, j, f] = J(j,f)·K_r(j,f),
+eqs. 37–38) so the Gauss–Seidel patch slab rides per row; the item sweep is
+MF-like and reuses the shared-Gram ``cd_block_sweep``. The residual cache
+and α stay VMEM-resident across the ``k_b`` columns of each block.
 """
 from __future__ import annotations
 
@@ -27,10 +36,13 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import sweeps
 from repro.core.gram import gram
 from repro.core.implicit import explicit_loss
+from repro.core.padded import PaddedGroup, build_group
+from repro.kernels.cd_sweep.ops import cd_block_sweep, cd_block_sweep_rowpatch
 from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
 
@@ -65,6 +77,35 @@ class PARAFACHyperParams:
     eta: float = 1.0
     dense_context: bool = False  # True ⇒ regularizer universe is C1×C2
     implementation: str = "xla"
+    block_k: int = 0  # columns per fused cd_sweep dispatch on the padded
+    #                   layout (epoch_padded): 0 = auto (min(k, 8)),
+    #                   1 = per-column baseline through the block path
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TensorPadded:
+    """Padded layouts for the fused tensor-model sweeps: the flat nnz list
+    grouped by c1, by c2, and by item, plus the item-major pair-id grid the
+    MF-like item sweep gathers Φ columns through."""
+
+    g1: PaddedGroup
+    g2: PaddedGroup
+    gi: PaddedGroup
+    pair_ids_item: jax.Array  # (n_items, gi.d_pad) int32; garbage on padding
+
+
+def pad_tensor_groups(tc: TensorContext, data: Interactions, lane: int = 128) -> TensorPadded:
+    """Host-side: build the three padded groupings of the observed set."""
+    pair_of_nnz = np.asarray(data.ctx)
+    alpha = np.asarray(data.alpha)
+    g1 = build_group(np.asarray(tc.c1)[pair_of_nnz], alpha, tc.n_c1, lane)
+    g2 = build_group(np.asarray(tc.c2)[pair_of_nnz], alpha, tc.n_c2, lane)
+    gi = build_group(np.asarray(data.item), alpha, data.n_items, lane)
+    pair_ids_item = np.zeros((data.n_items, gi.d_pad), np.int32)
+    pair_ids_item[np.asarray(gi.rows), np.asarray(gi.cols)] = pair_of_nnz
+    return TensorPadded(g1=g1, g2=g2, gi=gi,
+                        pair_ids_item=jnp.asarray(pair_ids_item))
 
 
 def init(key, n_c1: int, n_c2: int, n_items: int, k: int, sigma: float = 0.1) -> PARAFACParams:
@@ -138,7 +179,7 @@ def _context_mode_sweep(
         e = e + jnp.take(delta, grp_nnz) * other_nnz
         return sweeps.put_col(side_m, f, s_col + delta), e
 
-    return jax.lax.fori_loop(0, hp.k, body, (side, e))
+    return sweeps.sweep_columns(hp.k, body, (side, e))
 
 
 def _item_sweep(params_w, j_c, phi_cols_nnz, data, e_t, alpha_t, hp):
@@ -159,7 +200,96 @@ def _item_sweep(params_w, j_c, phi_cols_nnz, data, e_t, alpha_t, hp):
         e_t = e_t + jnp.take(delta, data.t_item) * o_col
         return sweeps.put_col(w_m, f, w_col + delta), e_t
 
-    return jax.lax.fori_loop(0, hp.k, body, (params_w, e_t))
+    return sweeps.sweep_columns(hp.k, body, (params_w, e_t))
+
+
+def _context_mode_sweep_padded(
+    side: jax.Array,          # (n_side, k): U or V
+    partner: jax.Array,       # (n_partner, k): V or U (fixed this sweep)
+    group_of_pair: jax.Array,
+    partner_of_pair: jax.Array,
+    j_i: jax.Array,
+    data: Interactions,
+    w_items: jax.Array,
+    pg: PaddedGroup,          # nnz grouped by this side's context mode
+    e_pad: jax.Array,         # (n_side, d_pad) residual grid
+    n_side: int,
+    hp: PARAFACHyperParams,
+    k_b: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused context-mode sweep: ``k_b`` columns per ``cd_block_sweep_rowpatch``
+    dispatch. Slab state per block — R'/2 ``(n, k_b)`` via Φ·J over pairs and
+    the per-row patch tensor P = J ⊙ K (diag = R''/2, eqs. 37–38); the
+    kernel's Gauss–Seidel r1 patch keeps later block columns exact."""
+    pair_of_nnz = data.ctx
+    w_nnz = jnp.take(w_items, data.item, axis=0)               # (nnz, k)
+
+    j_p = partner.T @ partner if hp.dense_context else None  # eq. 39 K
+
+    def block_body(f0, kb, carry):
+        side_m, e_pad = carry
+        blk = slice(f0, f0 + kb)
+        v_pair = jnp.take(partner[:, blk], partner_of_pair, axis=0)  # (n_pairs, kb)
+        if hp.dense_context:
+            # K = J_partner for EVERY row (regularizer universe C1×C2, even
+            # when the observed pair list is sparse): R'_f = Σ_f' J(f',f)
+            # K(f',f) θ_{·,f'} collapses to a dense matmul, matching the
+            # flat path's broadcast kmat.
+            r1_blk = side_m @ (j_p[:, blk] * j_i[:, blk])            # R'/2 slab
+            k_blk = jnp.broadcast_to(j_p[blk, blk][None], (n_side, kb, kb))
+        else:
+            phi_full = jnp.take(side_m, group_of_pair, axis=0) * jnp.take(
+                partner, partner_of_pair, axis=0
+            )                                                        # (n_pairs, k)
+            r1_blk = segment_sum(
+                v_pair * (phi_full @ j_i[:, blk]), group_of_pair, n_side
+            )                                                        # R'/2 slab
+            k_blk = segment_sum(
+                v_pair[:, :, None] * v_pair[:, None, :], group_of_pair, n_side
+            )
+        p_blk = k_blk * j_i[blk, blk][None, :, :]                    # J ⊙ K
+        s_nnz = jnp.take(v_pair, pair_of_nnz, axis=0) * w_nnz[:, blk]
+        psi_blk = pg.scatter_blk(s_nnz)                              # (n, kb, d_pad)
+        w_new, e_pad = cd_block_sweep_rowpatch(
+            psi_blk, pg.alpha_pad, e_pad, side_m[:, blk], r1_blk, p_blk,
+            alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+        )
+        return side_m.at[:, blk].set(w_new), e_pad
+
+    return sweeps.sweep_columns(
+        hp.k, None, (side, e_pad), block=k_b, block_body=block_body
+    )
+
+
+def _item_sweep_padded(
+    w_m: jax.Array,
+    j_c: jax.Array,
+    phi_pairs: jax.Array,     # (n_pairs, k) materialized Φ over the pair list
+    padded: TensorPadded,
+    e_pad: jax.Array,         # (n_items, d_pad) item-major residual grid
+    hp,
+    k_b: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """MF-like fused item sweep (shared-Gram ``cd_block_sweep``): ψ columns
+    gathered from Φ through the item-major pair-id grid."""
+
+    def block_body(f0, kb, carry):
+        w_m, e_pad = carry
+        blk = slice(f0, f0 + kb)
+        psi_blk = jnp.moveaxis(
+            jnp.take(phi_pairs[:, blk], padded.pair_ids_item, axis=0), -1, 1
+        )                                                            # (n, kb, d_pad)
+        r1_blk = w_m @ j_c[:, blk]
+        w_new, e_pad = cd_block_sweep(
+            psi_blk, padded.gi.alpha_pad, e_pad, w_m[:, blk], r1_blk,
+            j_c[blk, blk],
+            alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+        )
+        return w_m.at[:, blk].set(w_new), e_pad
+
+    return sweeps.sweep_columns(
+        hp.k, None, (w_m, e_pad), block=k_b, block_body=block_body
+    )
 
 
 @partial(jax.jit, static_argnames=("hp",))
@@ -196,13 +326,54 @@ def epoch(
     return PARAFACParams(u, v, w), e
 
 
+@partial(jax.jit, static_argnames=("hp",), donate_argnums=(4,))
+def epoch_padded(
+    params: PARAFACParams,
+    tc: TensorContext,
+    data: Interactions,
+    padded: TensorPadded,
+    e: jax.Array,
+    hp: PARAFACHyperParams,
+) -> Tuple[PARAFACParams, jax.Array]:
+    """Fused-kernel iCD epoch on the padded layouts; same sweep order and
+    fixed point as :func:`epoch` (parity-tested). The flat residual cache is
+    re-grouped per sweep (scatter in, gather out — O(nnz), amortized over
+    the ⌈k/k_b⌉ VMEM-resident block dispatches of the sweep)."""
+    u, v, w = params
+    k_b = sweeps.resolve_block_k(hp.block_k, hp.k)
+    j_i = gram(w, implementation=hp.implementation)
+
+    e_g = padded.g1.scatter(e)
+    u, e_g = _context_mode_sweep_padded(
+        u, v, tc.c1, tc.c2, j_i, data, w, padded.g1, e_g, u.shape[0], hp, k_b
+    )
+    e = padded.g1.gather(e_g)
+
+    e_g = padded.g2.scatter(e)
+    v, e_g = _context_mode_sweep_padded(
+        v, u, tc.c2, tc.c1, j_i, data, w, padded.g2, e_g, v.shape[0], hp, k_b
+    )
+    e = padded.g2.gather(e_g)
+
+    phi_pairs = jnp.take(u, tc.c1, axis=0) * jnp.take(v, tc.c2, axis=0)
+    if hp.dense_context:
+        j_c = gram(u) * gram(v)  # eq. (39): J_C = J_{C1} ⊙ J_{C2}
+    else:
+        j_c = gram(phi_pairs)
+    e_g = padded.gi.scatter(e)
+    w, e_g = _item_sweep_padded(w, j_c, phi_pairs, padded, e_g, hp, k_b)
+    e = padded.gi.gather(e_g)
+    return PARAFACParams(u, v, w), e
+
+
 def residuals(params: PARAFACParams, tc: TensorContext, data: Interactions) -> jax.Array:
     return sweeps.residuals_from_factors(
         phi(params, tc), params.w, data.ctx, data.item, data.y
     )
 
 
-def objective(params: PARAFACParams, tc: TensorContext, data: Interactions, hp: PARAFACHyperParams) -> jax.Array:
+def objective(params: PARAFACParams, tc: TensorContext, data: Interactions,
+              hp: PARAFACHyperParams) -> jax.Array:
     e = residuals(params, tc, data)
     if hp.dense_context:
         reg = jnp.sum(gram(params.u) * gram(params.v) * gram(params.w))

@@ -21,6 +21,17 @@ reduction; the paper gives the same O(k1²k2²k3²·…) regime).
 Context universe: the observed pair list (the paper's sparse-context case —
 its dense-context einsum shortcut changes constants, not semantics; see
 DESIGN.md). Item sweep is MF-like via materialized Φ.
+
+Fused padded path (``epoch_padded``, dispatched by ``hp.block_k`` like
+``mf_padded``): the U/V mode sweeps run blocked through
+``sweeps.sweep_columns`` on :class:`~repro.core.models.parafac.TensorPadded`
+grids with the ``cd_block_sweep_rowpatch`` kernel — the per-row patch
+tensor P[r, j, f] = segment_r(Σ_g D^f_g (D^j J_I)_g) is exactly how R'
+moves when mode coordinate j takes a Newton step (Φ += Δ·D^j), so the
+in-kernel Gauss–Seidel patch reproduces the per-column path; Φ itself is
+patched between blocks from the returned deltas. The core sweep stays
+strictly sequential (flat path); the item sweep reuses PARAFAC's fused
+MF-like sweep.
 """
 from __future__ import annotations
 
@@ -34,9 +45,20 @@ import jax.numpy as jnp
 from repro.core import sweeps
 from repro.core.gram import gram
 from repro.core.implicit import explicit_loss
-from repro.core.models.parafac import TensorContext, _item_sweep
+from repro.core.models.parafac import (
+    TensorContext,
+    TensorPadded,
+    _item_sweep,
+    _item_sweep_padded,
+    pad_tensor_groups,
+)
+from repro.kernels.cd_sweep.ops import cd_block_sweep_rowpatch
 from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
+
+__all__ = ["TuckerParams", "TuckerHyperParams", "pad_tensor_groups",
+           "init", "phi", "predict", "epoch", "epoch_padded", "residuals",
+           "objective", "fit"]
 
 
 class TuckerParams(NamedTuple):
@@ -56,6 +78,8 @@ class TuckerHyperParams:
     l2_core: float = 0.1
     eta: float = 1.0
     implementation: str = "xla"
+    block_k: int = 0  # columns per fused cd_sweep dispatch (epoch_padded):
+    #                   0 = auto (min(mode k, 8)), 1 = per-column baseline
 
     # _item_sweep compatibility (it reads hp.k and hp.alpha0/l2/eta)
     @property
@@ -121,7 +145,58 @@ def _mode_sweep(
         e = e + jnp.take(delta, grp_nnz) * s
         return sweeps.put_col(side_m, fs, s_col + delta), phi_m, e
 
-    return jax.lax.fori_loop(0, k_side, body, (side, phi_m, e))
+    return sweeps.sweep_columns(k_side, body, (side, phi_m, e))
+
+
+def _mode_sweep_padded(
+    side,            # U (n_c1,k1) or V (n_c2,k2)
+    b_blk_fn,        # (f0, kb) -> (kb, k_other, k3) static core slab
+    partner_of_pair, # c2 (U mode) or c1 (V mode) per pair
+    partner,         # V or U
+    group_of_pair,   # c1 or c2 per pair
+    n_side, k_side,
+    phi_m, j_i, data, w_items, pg, e_pad, hp, k_b,
+):
+    """Fused Tucker mode sweep: k_b columns per ``cd_block_sweep_rowpatch``
+    dispatch. Per block the pseudo-ψ s^f = Σ_g D^f_g w_{i,g} is scattered
+    onto the padded grid; slab state is R'/2 = segment(Σ_g D^f_g (Φ J)_g)
+    and the per-row patch P[r, j, f] = segment(Σ_g D^f_g (D^j J)_g) (diag =
+    R''/2). D^f is constant during the sweep (partner/core/items fixed), so
+    only Φ — patched from the returned deltas — and the in-kernel e/R'
+    state move."""
+    pair_of_nnz = data.ctx
+    w_nnz = jnp.take(w_items, data.item, axis=0)                 # (nnz, k3)
+
+    def block_body(f0, kb, carry):
+        side_m, phi_m, e_pad = carry
+        blk = slice(f0, f0 + kb)
+        bsl = b_blk_fn(f0, kb)                                   # (kb, k_other, k3)
+        pp = jnp.take(partner, partner_of_pair, axis=0)          # (n_pairs, k_other)
+        d_blk = jnp.einsum("no,jof->njf", pp, bsl)               # (n_pairs, kb, k3)
+        r1_blk = segment_sum(
+            jnp.einsum("njf,nf->nj", d_blk, phi_m @ j_i), group_of_pair, n_side
+        )
+        dj = jnp.einsum("njf,fg->njg", d_blk, j_i)
+        p_blk = segment_sum(
+            jnp.einsum("njg,nig->nji", dj, d_blk), group_of_pair, n_side
+        )
+        s_nnz = jnp.einsum(
+            "njf,nf->nj", jnp.take(d_blk, pair_of_nnz, axis=0), w_nnz
+        )
+        psi_blk = pg.scatter_blk(s_nnz)
+        w_new, e_pad = cd_block_sweep_rowpatch(
+            psi_blk, pg.alpha_pad, e_pad, side_m[:, blk], r1_blk, p_blk,
+            alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+        )
+        delta = w_new - side_m[:, blk]
+        phi_m = phi_m + jnp.einsum(
+            "nj,njf->nf", jnp.take(delta, group_of_pair, axis=0), d_blk
+        )
+        return side_m.at[:, blk].set(w_new), phi_m, e_pad
+
+    return sweeps.sweep_columns(
+        k_side, None, (side, phi_m, e_pad), block=k_b, block_body=block_body
+    )
 
 
 def core_sweep(params, phi_m, j_i, tc, data, e, hp):
@@ -190,13 +265,60 @@ def epoch(
     return TuckerParams(u, v, w, b), e
 
 
+@partial(jax.jit, static_argnames=("hp",), donate_argnums=(4,))
+def epoch_padded(
+    params: TuckerParams,
+    tc: TensorContext,
+    data: Interactions,
+    padded: TensorPadded,
+    e: jax.Array,
+    hp: TuckerHyperParams,
+) -> Tuple[TuckerParams, jax.Array]:
+    """Fused-kernel iCD epoch on the padded layouts; same sweep order and
+    fixed point as :func:`epoch` (parity-tested). U/V mode sweeps and the
+    MF-like item sweep run blocked; the core sweep is inherently sequential
+    and stays on the flat path."""
+    u, v, w, b = params
+    j_i = gram(w, implementation=hp.implementation)
+    phi_m = phi(params, tc)
+
+    e_g = padded.g1.scatter(e)
+    u, phi_m, e_g = _mode_sweep_padded(
+        u, lambda f0, kb: b[f0:f0 + kb],
+        tc.c2, v, tc.c1, u.shape[0], hp.k1,
+        phi_m, j_i, data, w, padded.g1, e_g, hp,
+        sweeps.resolve_block_k(hp.block_k, hp.k1),
+    )
+    e = padded.g1.gather(e_g)
+
+    e_g = padded.g2.scatter(e)
+    v, phi_m, e_g = _mode_sweep_padded(
+        v, lambda f0, kb: jnp.moveaxis(b[:, f0:f0 + kb], 1, 0),
+        tc.c1, u, tc.c2, v.shape[0], hp.k2,
+        phi_m, j_i, data, w, padded.g2, e_g, hp,
+        sweeps.resolve_block_k(hp.block_k, hp.k2),
+    )
+    e = padded.g2.gather(e_g)
+
+    b, phi_m, e = core_sweep(TuckerParams(u, v, w, b), phi_m, j_i, tc, data, e, hp)
+
+    j_c = gram(phi_m)
+    e_g = padded.gi.scatter(e)
+    w, e_g = _item_sweep_padded(
+        w, j_c, phi_m, padded, e_g, hp, sweeps.resolve_block_k(hp.block_k, hp.k3)
+    )
+    e = padded.gi.gather(e_g)
+    return TuckerParams(u, v, w, b), e
+
+
 def residuals(params: TuckerParams, tc: TensorContext, data: Interactions) -> jax.Array:
     return sweeps.residuals_from_factors(
         phi(params, tc), params.w, data.ctx, data.item, data.y
     )
 
 
-def objective(params: TuckerParams, tc: TensorContext, data: Interactions, hp: TuckerHyperParams) -> jax.Array:
+def objective(params: TuckerParams, tc: TensorContext, data: Interactions,
+              hp: TuckerHyperParams) -> jax.Array:
     e = residuals(params, tc, data)
     reg = jnp.sum(gram(phi(params, tc)) * gram(params.w))
     sq = jnp.sum(params.u**2) + jnp.sum(params.v**2) + jnp.sum(params.w**2)

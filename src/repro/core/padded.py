@@ -1,0 +1,85 @@
+"""Generic padded nnz-grouping for the fused cd_sweep kernels.
+
+``mf_padded`` hard-codes the two groupings MF needs (by context and by
+item). The tensor and feature models sweep over OTHER groupings — by c1,
+by c2, by item of the pair list — so this module factors the layout out:
+a :class:`PaddedGroup` maps the flat observation list onto an
+``(n_rows, d_pad)`` grid (one row per group, slots padded to the max group
+degree rounded up to the TPU lane width), with α scattered once at build
+time (0 on padding ⇒ padded slots are inert in every kernel reduction).
+
+Scatter/gather stay in the ORIGINAL flat nnz order — no ``t_perm``
+shuffles; transferring the residual cache between two groupings is
+``g2.scatter(g1.gather(e_grid))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaddedGroup:
+    """One grouping of the flat observation list onto a padded grid."""
+
+    rows: jax.Array       # (nnz,) int32 — group row per observation
+    cols: jax.Array       # (nnz,) int32 — slot within the row
+    alpha_pad: jax.Array  # (n_rows, d_pad) f32 — confidences, 0 on padding
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+    d_pad: int = dataclasses.field(metadata=dict(static=True))
+
+    def scatter(self, vals: jax.Array, dtype=None) -> jax.Array:
+        """Flat per-nnz vector → (n_rows, d_pad) grid (0 on padding)."""
+        out = jnp.zeros((self.n_rows, self.d_pad), dtype or vals.dtype)
+        return out.at[self.rows, self.cols].set(vals)
+
+    def scatter_blk(self, vals_blk: jax.Array) -> jax.Array:
+        """Flat (nnz, m) block → (n_rows, m, d_pad) pseudo-ψ tile."""
+        m = vals_blk.shape[1]
+        out = jnp.zeros((self.n_rows, self.d_pad, m), vals_blk.dtype)
+        out = out.at[self.rows, self.cols, :].set(vals_blk)
+        return jnp.moveaxis(out, -1, 1)
+
+    def gather(self, grid: jax.Array) -> jax.Array:
+        """(n_rows, d_pad) grid → flat per-nnz vector."""
+        return grid[self.rows, self.cols]
+
+
+def build_group(
+    group_of_nnz, alpha, n_rows: int, lane: int = 128
+) -> PaddedGroup:
+    """Host-side builder: stable slot assignment per group (first
+    occurrence → slot 0), slot dim rounded up to the TPU lane width.
+
+    Vectorized cumcount — stable argsort groups equal rows into runs, the
+    slot is the index within the run — so the build is O(nnz log nnz)
+    NumPy, not a Python loop over tens of millions of observations."""
+    group_of_nnz = np.asarray(group_of_nnz)
+    alpha = np.asarray(alpha, np.float32)
+    nnz = len(group_of_nnz)
+    if nnz:
+        order = np.argsort(group_of_nnz, kind="stable")
+        sg = group_of_nnz[order]
+        new_run = np.r_[True, sg[1:] != sg[:-1]]
+        run_starts = np.flatnonzero(new_run)
+        slot_sorted = np.arange(nnz) - run_starts[np.cumsum(new_run) - 1]
+        slot = np.empty(nnz, np.int64)
+        slot[order] = slot_sorted
+        max_deg = int(slot_sorted.max()) + 1
+    else:
+        slot = np.zeros(0, np.int64)
+        max_deg = 1
+    d_pad = max(lane, int(-(-max(1, max_deg) // lane) * lane))
+    alpha_pad = np.zeros((n_rows, d_pad), np.float32)
+    alpha_pad[group_of_nnz, slot] = alpha
+    return PaddedGroup(
+        rows=jnp.asarray(group_of_nnz, jnp.int32),
+        cols=jnp.asarray(slot, jnp.int32),
+        alpha_pad=jnp.asarray(alpha_pad),
+        n_rows=int(n_rows),
+        d_pad=d_pad,
+    )

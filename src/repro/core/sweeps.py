@@ -60,18 +60,37 @@ def sweep_columns(
     ``body(f, carry) -> carry`` is the per-column Newton update (any model).
     ``block_body(f0, size, carry) -> carry`` is an optional fused update
     covering columns ``[f0, f0+size)`` in one dispatch (the
-    ``kernels/cd_sweep`` path). Dispatch rule: when a block body is supplied
-    and ``block > 1``, full blocks of ``block`` columns run fused with a
-    shorter fused tail for non-divisible ``n_dims``; otherwise the
-    per-column path runs (``lax.fori_loop``, or a host loop when ``unroll``
-    — exact HLO costs / cross-column XLA fusion). ``unroll=True`` is an
-    explicit request for the per-column unrolled program, so it takes
-    precedence over the fused path.
+    ``kernels/cd_sweep`` path). Dispatch rule: when a block body is
+    supplied (and ``block >= 1``), blocks of ``block`` columns run fused
+    with a shorter fused tail for non-divisible ``n_dims`` — ``block=1``
+    degenerates to a per-column loop THROUGH the block path (static column
+    indices; how the padded models express their per-column baseline).
+    Otherwise the per-column ``body`` runs (``lax.fori_loop``, or a host
+    loop when ``unroll`` — exact HLO costs / cross-column XLA fusion).
+    ``unroll=True`` is an explicit request for the per-column unrolled
+    program, so it takes precedence over the fused path.
+
+    Block-body contract (slab state): ``f0``/``size`` are STATIC, so the
+    body may slice parameter slabs ``θ[:, f0:f0+size]`` and build
+    model-specific R'/R'' slab state for the kernels —
+
+      * MF-style (one-hot φ-gradients): an R'/2 slab ``(n, size)`` plus the
+        SHARED Gram block ``J[f0:f0+size, f0:f0+size]`` (``cd_block_sweep``);
+      * tensor modes (PARAFAC/Tucker): an R'/2 slab plus a PER-ROW patch
+        tensor ``P (n, size, size)`` whose diagonal is R''/2 — row-dependent
+        curvature, eqs. 37–41 (``cd_block_sweep_rowpatch``);
+      * feature models (MFSI/FM): per-field slab moments Q/P from
+        ``cd_slab_reduce``, field-level Newton steps in XLA, then one
+        rank-``size`` ``cd_resid_patch``.
+
+    Everything the NEXT block needs (θ, e grid, Φ caches) must ride in
+    ``carry``; intra-block coupling is the body's own responsibility (the
+    kernels' Gauss–Seidel patches / the Q-slab cross-dim patches).
 
     ``n_dims`` and ``block`` are static, so the fused loop is a host loop of
     ⌈n_dims/block⌉ dispatches with static slab sizes.
     """
-    if block_body is not None and block > 1 and not unroll:
+    if block_body is not None and block >= 1 and not unroll:
         f0 = 0
         while f0 < n_dims:
             size = min(block, n_dims - f0)
@@ -83,6 +102,12 @@ def sweep_columns(
             carry = body(f, carry)
         return carry
     return jax.lax.fori_loop(0, n_dims, body, carry)
+
+
+def resolve_block_k(block_k: int, k: int) -> int:
+    """Shared ``hp.block_k`` policy for every padded/fused epoch:
+    0 = auto (min(k, 8)), otherwise clamp to [1, k]."""
+    return min(k, 8) if block_k == 0 else max(1, min(block_k, k))
 
 
 def take_col(m: jax.Array, f) -> jax.Array:

@@ -15,7 +15,11 @@ Kernels:
                     dimensions per grid step with the residual cache and α
                     VMEM-resident across the block (Gauss–Seidel R' patch
                     between columns). Cuts the sweep's (C, D_pad) HBM
-                    traffic from k round-trips to ⌈k/k_b⌉.
+                    traffic from k round-trips to ⌈k/k_b⌉. Four entry
+                    points cover the k-separable zoo: shared-Gram sweep
+                    (MF), per-row-patch sweep (PARAFAC/Tucker modes), and
+                    the slab-reduce + resid-patch pair (MFSI/FM field
+                    models).
   embedding_bag   — multi-hot EmbeddingBag as one-hot×table MXU matmuls,
                     vocab-block streamed (recsys hot path).
   flash_attention — online-softmax attention (causal / sliding-window /

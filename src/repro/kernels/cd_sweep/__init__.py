@@ -1,1 +1,6 @@
-from repro.kernels.cd_sweep.ops import cd_block_sweep  # noqa: F401
+from repro.kernels.cd_sweep.ops import (  # noqa: F401
+    cd_block_sweep,
+    cd_block_sweep_rowpatch,
+    cd_resid_patch,
+    cd_slab_reduce,
+)

@@ -1,4 +1,25 @@
-"""Pallas fused multi-column iCD block-sweep (Algorithm 2's f*-loop, blocked).
+"""Pallas fused multi-column iCD block-sweeps (Algorithm 2/3's f*-loop, blocked).
+
+Four entry points share the "residual cache VMEM-resident across a block of
+embedding dimensions" idea; together they cover the whole k-separable model
+zoo (paper §5):
+
+  ``cd_block_sweep_pallas``          — MF-style block sweep: the R' slab is
+        patched with a SHARED (k_b, k_b) Gram block (R'' is the scalar
+        J(f,f)). Exact for models whose φ-gradient is one-hot (MF).
+  ``cd_block_sweep_rowpatch_pallas`` — general block sweep: the R'/R''
+        coupling is a PER-ROW (bc, k_b, k_b) patch tensor P with
+        P[r, j, f] = ∂(R'_f/2)/∂θ_{r,j} and diagonal P[r, f, f] = R''_f/2.
+        Exact for PARAFAC (P = J ⊙ K_row, eqs. 37–38) and Tucker
+        (P = Σ_g D^f_g (D^j J)_g per row, eq. 41 regime).
+  ``cd_slab_reduce_pallas``          — per-field slab moments for the
+        feature-based models (MFSI/FM, Algorithm 3): one e/α stream yields
+        Q[r, j] = Σ_d α e ψ_j and P[r, i, j] = Σ_d α ψ_i ψ_j for all block
+        columns, the per-context caches (q, p2, p1, p0, cross-dim coupling)
+        the field-level Newton steps consume.
+  ``cd_resid_patch_pallas``          — rank-k_b residual patch
+        e += Σ_j Δφ_j·ψ_j closing a feature-model block: one e stream
+        instead of one per dimension.
 
 Lineage: generalizes ``kernels/cd_update`` (one embedding dimension per
 dispatch) to a block of ``k_b`` dimensions per grid step. The per-column
@@ -131,3 +152,195 @@ def cd_block_sweep_pallas(
         interpret=interpret,
     )(psi_blk, alpha, e, w_blk, r1_blk, j_blk)
     return w_new[:c], e_new[:c]
+
+
+def _sweep_rowpatch_kernel(alpha0, l2, eta, k_b, psi_ref, alpha_ref, e_ref,
+                           w_ref, r1_ref, p_ref, w_out_ref, e_out_ref):
+    """Block sweep with a per-row R' patch tensor (PARAFAC/Tucker modes)."""
+    psi = psi_ref[...].astype(jnp.float32)      # (bc, k_b, d_pad)
+    alpha = alpha_ref[...].astype(jnp.float32)  # (bc, d_pad)
+    e = e_ref[...].astype(jnp.float32)          # (bc, d_pad)
+    w = w_ref[...].astype(jnp.float32)          # (bc, k_b)
+    r1 = r1_ref[...].astype(jnp.float32)        # (bc, k_b)
+    p = p_ref[...].astype(jnp.float32)          # (bc, k_b, k_b)
+
+    def newton(j, carry):
+        w, r1, e = carry
+        psi_j = jax.lax.dynamic_index_in_dim(psi, j, axis=1, keepdims=False)
+        w_j = jax.lax.dynamic_slice_in_dim(w, j, 1, axis=1)       # (bc, 1)
+        r1_j = jax.lax.dynamic_slice_in_dim(r1, j, 1, axis=1)     # (bc, 1)
+        p_j = jax.lax.dynamic_index_in_dim(p, j, axis=1, keepdims=False)  # (bc, k_b)
+        p_jj = jax.lax.dynamic_slice_in_dim(p_j, j, 1, axis=1)    # (bc, 1) = R''/2
+
+        lp = jnp.sum(alpha * e * psi_j, axis=1, keepdims=True)            # L'/2
+        lpp = jnp.sum(alpha * psi_j * psi_j, axis=1, keepdims=True)       # L''/2
+        num = lp + alpha0 * r1_j + l2 * w_j
+        den = lpp + alpha0 * p_jj + l2
+        delta = -eta * num / jnp.maximum(den, 1e-12)
+
+        w = jax.lax.dynamic_update_slice_in_dim(w, w_j + delta, j, axis=1)
+        e = e + delta * psi_j
+        r1 = r1 + delta * p_j     # Gauss–Seidel: row-local coupling patch
+        return w, r1, e
+
+    w, r1, e = jax.lax.fori_loop(0, k_b, newton, (w, r1, e))
+    w_out_ref[...] = w
+    e_out_ref[...] = e
+
+
+def cd_block_sweep_rowpatch_pallas(
+    psi_blk: jax.Array,  # (C, k_b, D_pad) pseudo-ψ per block column
+    alpha: jax.Array,    # (C, D_pad), 0 on padding
+    e: jax.Array,        # (C, D_pad) residual cache
+    w_blk: jax.Array,    # (C, k_b) parameter slab θ[:, f0:f0+k_b]
+    r1_blk: jax.Array,   # (C, k_b) R'/2 slab
+    p_blk: jax.Array,    # (C, k_b, k_b) per-row patch tensor; diag = R''/2
+    *,
+    alpha0: float,
+    l2: float,
+    eta: float = 1.0,
+    block_ctx: int = 128,
+    interpret: bool = True,
+):
+    """General k-separable block sweep: like :func:`cd_block_sweep_pallas`
+    but the regularizer coupling between block columns is ROW-dependent —
+    P[r, j, f] is both the Gauss–Seidel R' patch coefficient and (on the
+    diagonal) the per-row R''/2 of eqs. (14/19/38)."""
+    c, k_b, d_pad = psi_blk.shape
+    c_pad = -(-c // block_ctx) * block_ctx
+    if c_pad != c:
+        rows = (0, c_pad - c)
+        psi_blk = jnp.pad(psi_blk, (rows, (0, 0), (0, 0)))
+        alpha = jnp.pad(alpha, (rows, (0, 0)))
+        e = jnp.pad(e, (rows, (0, 0)))
+        w_blk = jnp.pad(w_blk, (rows, (0, 0)))
+        r1_blk = jnp.pad(r1_blk, (rows, (0, 0)))
+        p_blk = jnp.pad(p_blk, (rows, (0, 0), (0, 0)))
+
+    e = e.astype(jnp.float32)  # exact dtype match for the e→e_out alias
+
+    grid = (c_pad // block_ctx,)
+    w_new, e_new = pl.pallas_call(
+        partial(_sweep_rowpatch_kernel, alpha0, l2, eta, k_b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_ctx, k_b, d_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, k_b, k_b), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_pad, k_b), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad, d_pad), jnp.float32),
+        ],
+        input_output_aliases={2: 1},
+        interpret=interpret,
+    )(psi_blk, alpha, e, w_blk, r1_blk, p_blk)
+    return w_new[:c], e_new[:c]
+
+
+def _slab_reduce_kernel(psi_ref, alpha_ref, e_ref, q_ref, p_ref):
+    """Per-row moment slabs over a block of m pseudo-ψ columns."""
+    psi = psi_ref[...].astype(jnp.float32)      # (bc, m, d_pad)
+    alpha = alpha_ref[...].astype(jnp.float32)  # (bc, d_pad)
+    e = e_ref[...].astype(jnp.float32)          # (bc, d_pad)
+    q_ref[...] = jnp.einsum("bmd,bd->bm", psi, alpha * e)
+    p_ref[...] = jnp.einsum("bmd,bnd->bmn", psi * alpha[:, None, :], psi)
+
+
+def cd_slab_reduce_pallas(
+    psi_blk: jax.Array,  # (C, m, D_pad) pseudo-ψ columns (incl. any special col)
+    alpha: jax.Array,    # (C, D_pad), 0 on padding
+    e: jax.Array,        # (C, D_pad) residual cache (read-only here)
+    *,
+    block_ctx: int = 128,
+    interpret: bool = True,
+):
+    """Field-model slab moments in ONE e/α stream (Algorithm 3 caches):
+
+        Q[r, j]    = Σ_d α·e·ψ_j      (q / u caches per block column)
+        P[r, i, j] = Σ_d α·ψ_i·ψ_j    (p2 on the diagonal, p1/p0 with a
+                                       special column, cross-dim coupling
+                                       for the within-block cache patches)
+
+    The per-column path recomputes q (and u for FM) from HBM once per
+    dimension; this fuses all m columns of a block into one pass."""
+    c, m, d_pad = psi_blk.shape
+    c_pad = -(-c // block_ctx) * block_ctx
+    if c_pad != c:
+        rows = (0, c_pad - c)
+        psi_blk = jnp.pad(psi_blk, (rows, (0, 0), (0, 0)))
+        alpha = jnp.pad(alpha, (rows, (0, 0)))
+        e = jnp.pad(e, (rows, (0, 0)))
+
+    grid = (c_pad // block_ctx,)
+    q, p = pl.pallas_call(
+        _slab_reduce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_ctx, m, d_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_ctx, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, m, m), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_pad, m), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad, m, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(psi_blk, alpha, e)
+    return q[:c], p[:c]
+
+
+def _resid_patch_kernel(psi_ref, e_ref, dphi_ref, e_out_ref):
+    psi = psi_ref[...].astype(jnp.float32)      # (bc, m, d_pad)
+    e = e_ref[...].astype(jnp.float32)          # (bc, d_pad)
+    dphi = dphi_ref[...].astype(jnp.float32)    # (bc, m)
+    e_out_ref[...] = e + jnp.einsum("bm,bmd->bd", dphi, psi)
+
+
+def cd_resid_patch_pallas(
+    psi_blk: jax.Array,  # (C, m, D_pad)
+    e: jax.Array,        # (C, D_pad) residual cache
+    dphi_blk: jax.Array, # (C, m) per-row Δφ of each block column
+    *,
+    block_ctx: int = 128,
+    interpret: bool = True,
+):
+    """Rank-m residual patch e += Σ_j Δφ_j·ψ_j in one e stream (the closing
+    half of a feature-model block; the per-column path pays one stream per
+    dimension)."""
+    c, m, d_pad = psi_blk.shape
+    c_pad = -(-c // block_ctx) * block_ctx
+    if c_pad != c:
+        rows = (0, c_pad - c)
+        psi_blk = jnp.pad(psi_blk, (rows, (0, 0), (0, 0)))
+        e = jnp.pad(e, (rows, (0, 0)))
+        dphi_blk = jnp.pad(dphi_blk, (rows, (0, 0)))
+
+    e = e.astype(jnp.float32)  # exact dtype match for the e→e_out alias
+
+    grid = (c_pad // block_ctx,)
+    e_new = pl.pallas_call(
+        _resid_patch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_ctx, m, d_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_pad, d_pad), jnp.float32),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(psi_blk, e, dphi_blk)
+    return e_new[:c]

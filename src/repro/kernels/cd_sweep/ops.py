@@ -1,15 +1,19 @@
-"""Jit'd public wrapper for the fused multi-column CD block-sweep.
+"""Jit'd public wrappers for the fused multi-column CD block-sweep family.
 
-``e`` is donated: the residual cache is the largest carried tensor in the
-sweep and is consumed/replaced on every dispatch, so an eager caller's
-buffer is reused in place on backends that support donation. Inside an
-outer jit (the ``mf_padded.epoch`` path) nested-jit donation is inert —
-there the in-place update comes from the kernel's e→e_out
-``input_output_aliases`` and from ``epoch`` donating ``e_pad`` at the top
-level.
+``e`` is donated wherever it is consumed/replaced (the residual cache is
+the largest carried tensor in the sweep), so an eager caller's buffer is
+reused in place on backends that support donation. Inside an outer jit
+(the ``*_padded.epoch`` paths) nested-jit donation is inert — there the
+in-place update comes from the kernels' e→e_out ``input_output_aliases``
+and from ``epoch`` donating ``e_pad`` at the top level.
 """
 from repro.kernels import kernel_jit
-from repro.kernels.cd_sweep.kernel import cd_block_sweep_pallas
+from repro.kernels.cd_sweep.kernel import (
+    cd_block_sweep_pallas,
+    cd_block_sweep_rowpatch_pallas,
+    cd_resid_patch_pallas,
+    cd_slab_reduce_pallas,
+)
 
 
 @kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
@@ -20,4 +24,30 @@ def cd_block_sweep(psi_blk, alpha, e, w_blk, r1_blk, j_blk, *, alpha0, l2,
         psi_blk, alpha, e, w_blk, r1_blk, j_blk,
         alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
         interpret=interpret,
+    )
+
+
+@kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
+            donate_argnums=(2,))
+def cd_block_sweep_rowpatch(psi_blk, alpha, e, w_blk, r1_blk, p_blk, *,
+                            alpha0, l2, eta=1.0, block_ctx=128,
+                            interpret=None):
+    return cd_block_sweep_rowpatch_pallas(
+        psi_blk, alpha, e, w_blk, r1_blk, p_blk,
+        alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
+        interpret=interpret,
+    )
+
+
+@kernel_jit(static_argnames=("block_ctx",))
+def cd_slab_reduce(psi_blk, alpha, e, *, block_ctx=128, interpret=None):
+    return cd_slab_reduce_pallas(
+        psi_blk, alpha, e, block_ctx=block_ctx, interpret=interpret,
+    )
+
+
+@kernel_jit(static_argnames=("block_ctx",), donate_argnums=(1,))
+def cd_resid_patch(psi_blk, e, dphi_blk, *, block_ctx=128, interpret=None):
+    return cd_resid_patch_pallas(
+        psi_blk, e, dphi_blk, block_ctx=block_ctx, interpret=interpret,
     )

@@ -1,5 +1,7 @@
-"""Pure-jnp oracle for the fused block-sweep: sequential per-column Newton
-steps with the explicit Gauss–Seidel R' patch between columns."""
+"""Pure-jnp oracles for the fused block-sweep kernels: sequential
+per-column Newton steps with the explicit Gauss–Seidel R' patch between
+columns (shared-Gram and per-row-patch variants), plus the slab-moment and
+rank-k_b residual-patch reductions."""
 import jax.numpy as jnp
 
 
@@ -19,3 +21,33 @@ def cd_block_sweep_ref(psi_blk, alpha, e, w_blk, r1_blk, j_blk, *, alpha0, l2,
         e = e + delta[:, None] * psi_j
         r1 = r1 + delta[:, None] * j_blk[j, :][None, :]
     return jnp.stack(w_cols, axis=1), e
+
+
+def cd_block_sweep_rowpatch_ref(psi_blk, alpha, e, w_blk, r1_blk, p_blk, *,
+                                alpha0, l2, eta=1.0):
+    """Per-row patch variant: P[r, j, f] patches R'_f after column j moves;
+    P[r, f, f] is the per-row R''/2."""
+    k_b = psi_blk.shape[1]
+    w_cols = []
+    r1 = r1_blk
+    for j in range(k_b):
+        psi_j = psi_blk[:, j, :]
+        lp = jnp.sum(alpha * e * psi_j, axis=1)
+        lpp = jnp.sum(alpha * psi_j * psi_j, axis=1)
+        num = lp + alpha0 * r1[:, j] + l2 * w_blk[:, j]
+        den = lpp + alpha0 * p_blk[:, j, j] + l2
+        delta = -eta * num / jnp.maximum(den, 1e-12)
+        w_cols.append(w_blk[:, j] + delta)
+        e = e + delta[:, None] * psi_j
+        r1 = r1 + delta[:, None] * p_blk[:, j, :]
+    return jnp.stack(w_cols, axis=1), e
+
+
+def cd_slab_reduce_ref(psi_blk, alpha, e):
+    q = jnp.einsum("cmd,cd->cm", psi_blk, alpha * e)
+    p = jnp.einsum("cmd,cnd->cmn", psi_blk * alpha[:, None, :], psi_blk)
+    return q, p
+
+
+def cd_resid_patch_ref(psi_blk, e, dphi_blk):
+    return e + jnp.einsum("cm,cmd->cd", dphi_blk, psi_blk)

@@ -85,8 +85,8 @@ def _flash_kernel(
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _finalize():
-        l = l_scr[...]
-        o_ref[...] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        denom = l_scr[...]
+        o_ref[...] = (acc_scr[...] / jnp.maximum(denom, 1e-30)).astype(o_ref.dtype)
 
 
 def flash_attention_pallas(

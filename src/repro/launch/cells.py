@@ -7,7 +7,6 @@ never allocated), and in/out PartitionSpec trees for the given mesh.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional, Tuple
 
 import jax

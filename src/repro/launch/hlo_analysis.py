@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List
+from typing import Dict
 
 PEAK_FLOPS = 197e12       # bf16 per chip
 HBM_BW = 819e9            # bytes/s per chip
@@ -134,8 +134,16 @@ class Roofline:
         }
 
 
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a dict on current jax but a
+    one-dict-per-computation list on older releases; normalize to a dict."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def roofline_from_compiled(compiled) -> Roofline:
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     flops = float(ca.get("flops", 0.0))
     bytes_accessed = float(ca.get("bytes accessed", 0.0))
     cb = collective_bytes(compiled.as_text())

@@ -53,31 +53,31 @@ def _lm_leaf_spec(cfg, name: str, stacked: bool, model_axis: int = MODEL_AXIS_SI
     f32 (S×S) score partial-sum all-reduces — catastrophic (measured in
     EXPERIMENTS.md §Dry-run notes).
     """
-    l = (None,) if stacked else ()
+    lead = (None,) if stacked else ()
     q_col = cfg.n_heads % model_axis == 0
     kv_col = cfg.n_kv_heads % model_axis == 0
     table = {
-        "wq": l + ((("data",), "model") if q_col else ("model", ("data",))),
-        "wk": l + ((("data",), "model") if kv_col else ("model", ("data",))),
-        "wv": l + ((("data",), "model") if kv_col else ("model", ("data",))),
-        "wo": l + (("model", ("data",)) if q_col else (("data",), "model")),
-        "bq": l + (("model",) if q_col else (None,)),
-        "bk": l + (("model",) if kv_col else (None,)),
-        "bv": l + (("model",) if kv_col else (None,)),
-        "w_gate": l + (("data",), "model"),
-        "w_up": l + (("data",), "model"),
-        "w_down": l + ("model", ("data",)),
-        "router": l + (("data",), None),
-        "e_gate": l + ("model", ("data",), None),
-        "e_up": l + ("model", ("data",), None),
-        "e_down": l + ("model", None, ("data",)),
-        "s_gate": l + (("data",), "model"),
-        "s_up": l + (("data",), "model"),
-        "s_down": l + ("model", ("data",)),
-        "pre_attn": l + (None,),
-        "pre_ffn": l + (None,),
-        "post_attn": l + (None,),
-        "post_ffn": l + (None,),
+        "wq": lead + ((("data",), "model") if q_col else ("model", ("data",))),
+        "wk": lead + ((("data",), "model") if kv_col else ("model", ("data",))),
+        "wv": lead + ((("data",), "model") if kv_col else ("model", ("data",))),
+        "wo": lead + (("model", ("data",)) if q_col else (("data",), "model")),
+        "bq": lead + (("model",) if q_col else (None,)),
+        "bk": lead + (("model",) if kv_col else (None,)),
+        "bv": lead + (("model",) if kv_col else (None,)),
+        "w_gate": lead + (("data",), "model"),
+        "w_up": lead + (("data",), "model"),
+        "w_down": lead + ("model", ("data",)),
+        "router": lead + (("data",), None),
+        "e_gate": lead + ("model", ("data",), None),
+        "e_up": lead + ("model", ("data",), None),
+        "e_down": lead + ("model", None, ("data",)),
+        "s_gate": lead + (("data",), "model"),
+        "s_up": lead + (("data",), "model"),
+        "s_down": lead + ("model", ("data",)),
+        "pre_attn": lead + (None,),
+        "pre_ffn": lead + (None,),
+        "post_attn": lead + (None,),
+        "post_ffn": lead + (None,),
     }
     return P(*table[name])
 

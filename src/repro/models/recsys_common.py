@@ -8,13 +8,12 @@ for small/mid vocab fields.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import dense_init
 
 
 def init_tables(key, vocabs: Sequence[int], dim: int) -> jax.Array:

@@ -21,7 +21,6 @@ stored in ``param_dtype`` (fp32 masters in the trainer) and cast to
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

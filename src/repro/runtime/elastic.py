@@ -17,7 +17,7 @@ changes only per-host batch slices.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np

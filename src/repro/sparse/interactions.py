@@ -7,7 +7,6 @@ device arrays — the iCD solver jits over them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

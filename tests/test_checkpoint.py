@@ -90,7 +90,7 @@ def test_trainer_resume(tmp_path):
         return tr.run(n_steps)
 
     ck = Checkpointer(str(tmp_path / "a"), keep=5)
-    interrupted = run(6, ck)           # "crash" at step 6 (checkpoint saved)
+    run(6, ck)                         # "crash" at step 6 (checkpoint saved)
     resumed = run(10, ck)              # restart, resumes from 6
 
     ck2 = Checkpointer(str(tmp_path / "b"), keep=5)

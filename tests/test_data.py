@@ -1,7 +1,10 @@
 """Data pipeline: synthetic generator structure + hosted loaders + design."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs it
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.design import design_matmul, make_design, to_dense
 from repro.data.loader import lm_token_batches

@@ -64,7 +64,8 @@ SCRIPT = textwrap.dedent(
     with mesh2:
         got_p, got_e = jax.jit(
             lambda p, d, ee: mf.epoch(p, d, ee, hp),
-            in_shardings=(p_sh, jax.tree_util.tree_map(lambda _: dsh(P("data")), data), dsh(P("data"))),
+            in_shardings=(p_sh, jax.tree_util.tree_map(lambda _: dsh(P("data")), data),
+                          dsh(P("data"))),
             out_shardings=(p_sh, dsh(P("data"))),
         )(p_sharded, d_sharded, e_sharded)
     np.testing.assert_allclose(np.asarray(got_p.w), np.asarray(ref_p.w),

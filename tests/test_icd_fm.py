@@ -156,3 +156,42 @@ def test_fm_residual_cache_consistency_one_hot():
     np.testing.assert_allclose(
         e, fm.residuals(params, x, z, data, hp), rtol=2e-4, atol=2e-5
     )
+
+
+# ------------------------------------------ fused (padded) block parity ----
+# fast gate: one representative (multi-hot jacobi, non-divisible k=3/k_b=2);
+# the full (mode × block_k) matrix rides the slow suite.
+_FM_FUSED_CASES = [
+    pytest.param(w, m, bk, marks=() if (w, m, bk) == (True, "jacobi", 2)
+                 else pytest.mark.slow)
+    for w, m in ((False, "jacobi"), (True, "jacobi"), (True, "slot"))
+    for bk in (1, 2, 3)
+]
+
+
+@pytest.mark.parametrize("with_bag,mode,block_k", _FM_FUSED_CASES)
+def test_fm_fused_matches_per_column(with_bag, mode, block_k):
+    """epoch_padded (slab-reduce over [ψ_blk | ψ_spec] + rank-(k_b+1)
+    resid patch) must track the per-dimension epoch — dims, linear weights
+    and global bias — incl. the non-divisible k=3/block_k=2 split."""
+    x, z, data, _, _ = make_problem(seed=6, with_bag=with_bag)
+    k = 3
+    hp = fm.FMHyperParams(k=k, alpha0=0.3, l2=0.05, multi_hot_mode=mode,
+                          block_k=block_k)
+    params = fm.init(jax.random.PRNGKey(5), x.p, z.p, k)
+    params = params._replace(w_lin=0.01 * jnp.arange(x.p, dtype=jnp.float32))
+    pdata = fm.pad_interactions(data)
+    ref, got = params, params
+    e = fm.residuals(params, x, z, data, hp)
+    e_pad = fm.residuals_padded(params, x, z, data, pdata, hp)
+    for _ in range(2):
+        ref, e = fm.epoch(ref, x, z, data, e, hp)
+        got, e_pad = fm.epoch_padded(got, x, z, pdata, e_pad, hp)
+    np.testing.assert_allclose(got.b, ref.b, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.w_lin, ref.w_lin, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.w, ref.w, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.h_lin, ref.h_lin, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.h, ref.h, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        e_pad[pdata.c_rows, pdata.c_cols], e, rtol=5e-4, atol=5e-5
+    )

@@ -79,6 +79,64 @@ def test_mfsi_residual_cache_consistency():
     )
 
 
+# ------------------------------------------ fused (padded) block parity ----
+# fast gate: one representative (multi-hot jacobi, non-divisible k=5/k_b=3);
+# the full (mode × block_k) matrix rides the slow suite.
+_MFSI_FUSED_CASES = [
+    pytest.param(w, m, bk, marks=() if (w, m, bk) == (True, "jacobi", 3)
+                 else pytest.mark.slow)
+    for w, m in ((False, "jacobi"), (True, "jacobi"), (True, "slot"))
+    for bk in (1, 3, 5)
+]
+
+
+@pytest.mark.parametrize("with_bag,mode,block_k", _MFSI_FUSED_CASES)
+def test_mfsi_fused_matches_per_column(with_bag, mode, block_k):
+    """epoch_padded (cd_slab_reduce + cd_resid_patch blocks) must track the
+    per-dimension epoch trajectory — one-hot exact, both multi-hot modes,
+    incl. the non-divisible k=5/block_k=3 split and block_k=1."""
+    x, z, data, _, _ = make_problem(seed=6, with_bag=with_bag)
+    k = 5
+    hp = mfsi.MFSIHyperParams(k=k, alpha0=0.3, l2=0.05, multi_hot_mode=mode,
+                              block_k=block_k)
+    params = mfsi.init(jax.random.PRNGKey(5), x.p, z.p, k)
+    pdata = mfsi.pad_interactions(data)
+    ref, got = params, params
+    e = mfsi.residuals(params, x, z, data)
+    e_pad = mfsi.residuals_padded(params, x, z, data, pdata)
+    for _ in range(2):
+        ref, e = mfsi.epoch(ref, x, z, data, e, hp)
+        got, e_pad = mfsi.epoch_padded(got, x, z, pdata, e_pad, hp)
+    np.testing.assert_allclose(got.w, ref.w, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.h, ref.h, rtol=5e-4, atol=1e-5)
+    # the padded residual grid stays consistent with the flat cache
+    np.testing.assert_allclose(
+        e_pad[pdata.c_rows, pdata.c_cols], e, rtol=5e-4, atol=5e-5
+    )
+
+
+def test_mfsi_fused_matches_naive_cd():
+    """Fused padded epoch ≡ conventional CD on the dense implicit matrix
+    (one-hot fields — exact CD on both sides)."""
+    x, z, data, y_dense, a_dense = make_problem(seed=7)
+    k = 4
+    hp = mfsi.MFSIHyperParams(k=k, alpha0=0.3, l2=0.05, block_k=3)
+    params = mfsi.init(jax.random.PRNGKey(6), x.p, z.p, k)
+    params_naive = params
+    x_dense, z_dense = to_dense(x), to_dense(z)
+    fs = tuple((f.offset, f.vocab) for f in x.fields)
+    fsi = tuple((f.offset, f.vocab) for f in z.fields)
+    pdata = mfsi.pad_interactions(data)
+    e_pad = mfsi.residuals_padded(params, x, z, data, pdata)
+    for _ in range(2):
+        params, e_pad = mfsi.epoch_padded(params, x, z, pdata, e_pad, hp)
+        params_naive = naive_cd.epoch_dense_mfsi(
+            params_naive, x_dense, z_dense, fs, fsi, y_dense, a_dense, hp
+        )
+        np.testing.assert_allclose(params.w, params_naive.w, rtol=3e-4, atol=3e-5)
+        np.testing.assert_allclose(params.h, params_naive.h, rtol=3e-4, atol=3e-5)
+
+
 @pytest.mark.parametrize("mode", ["jacobi", "slot"])
 def test_mfsi_multi_hot_converges(mode):
     x, z, data, _, _ = make_problem(seed=4, with_bag=True)

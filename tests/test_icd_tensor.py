@@ -1,5 +1,7 @@
 """PARAFAC + Tucker iCD: exactness vs autodiff-Newton on the dense implicit
-objective, dense-context decomposition (eq. 39), and convergence."""
+objective, dense-context decomposition (eq. 39), convergence, and
+fused-block (``epoch_padded``) vs per-column parity — incl. non-divisible
+k/block_k splits and empty-context rows (the newton_delta clamp path)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -53,10 +55,14 @@ def _newton_layer(loss_fn, params, path, mask, eta=1.0):
 
 
 @pytest.mark.parametrize("dense_ctx", [False, True])
-def test_parafac_matches_autodiff_newton(dense_ctx):
+@pytest.mark.parametrize("fused", [False, True])
+def test_parafac_matches_autodiff_newton(dense_ctx, fused):
+    """Both the per-column epoch and the fused-block ``epoch_padded`` (at a
+    non-divisible k=3, block_k=2 split) must match the autodiff oracle."""
     tc, data, y_dense, a_dense = make_problem(seed=1, dense_ctx=dense_ctx)
     k = 3
-    hp = parafac.PARAFACHyperParams(k=k, alpha0=0.3, l2=0.05, dense_context=dense_ctx)
+    hp = parafac.PARAFACHyperParams(k=k, alpha0=0.3, l2=0.05, dense_context=dense_ctx,
+                                    block_k=2)
     params = parafac.init(jax.random.PRNGKey(0), tc.n_c1, tc.n_c2, data.n_items, k)
 
     def dense_loss(p):
@@ -77,7 +83,11 @@ def test_parafac_matches_autodiff_newton(dense_ctx):
         oracle = _newton_layer(dense_loss, oracle, "w", m)
 
     e = parafac.residuals(params, tc, data)
-    got, _ = parafac.epoch(params, tc, data, e, hp)
+    if fused:
+        padded = parafac.pad_tensor_groups(tc, data)
+        got, _ = parafac.epoch_padded(params, tc, data, padded, e, hp)
+    else:
+        got, _ = parafac.epoch(params, tc, data, e, hp)
     np.testing.assert_allclose(got.u, oracle.u, rtol=5e-4, atol=5e-5)
     np.testing.assert_allclose(got.v, oracle.v, rtol=5e-4, atol=5e-5)
     np.testing.assert_allclose(got.w, oracle.w, rtol=5e-4, atol=5e-5)
@@ -109,10 +119,14 @@ def test_parafac_objective_decreases():
     assert prev < 0.8 * start
 
 
-def test_tucker_matches_autodiff_newton():
+@pytest.mark.parametrize("fused", [False, True])
+def test_tucker_matches_autodiff_newton(fused):
+    """Per-column epoch and fused ``epoch_padded`` (non-divisible mode
+    k's vs block_k=2) both match the autodiff oracle."""
     tc, data, y_dense, a_dense = make_problem(seed=4)
     k1, k2, k3 = 2, 3, 2
-    hp = tucker.TuckerHyperParams(k1=k1, k2=k2, k3=k3, alpha0=0.3, l2=0.05, l2_core=0.02)
+    hp = tucker.TuckerHyperParams(k1=k1, k2=k2, k3=k3, alpha0=0.3, l2=0.05, l2_core=0.02,
+                                  block_k=2)
     params = tucker.init(
         jax.random.PRNGKey(3), tc.n_c1, tc.n_c2, data.n_items, k1, k2, k3
     )
@@ -143,7 +157,11 @@ def test_tucker_matches_autodiff_newton():
         oracle = _newton_layer(dense_loss, oracle, "w", m)
 
     e = tucker.residuals(params, tc, data)
-    got, _ = tucker.epoch(params, tc, data, e, hp)
+    if fused:
+        padded = tucker.pad_tensor_groups(tc, data)
+        got, _ = tucker.epoch_padded(params, tc, data, padded, e, hp)
+    else:
+        got, _ = tucker.epoch(params, tc, data, e, hp)
     np.testing.assert_allclose(got.u, oracle.u, rtol=1e-3, atol=1e-4)
     np.testing.assert_allclose(got.v, oracle.v, rtol=1e-3, atol=1e-4)
     np.testing.assert_allclose(got.b, oracle.b, rtol=1e-3, atol=1e-4)
@@ -157,3 +175,140 @@ def test_tucker_objective_decreases():
     start = float(tucker.objective(params, tc, data, hp))
     params = tucker.fit(params, tc, data, hp, n_epochs=8)
     assert float(tucker.objective(params, tc, data, hp)) < 0.85 * start
+
+
+# ------------------------------------------ fused (padded) block parity ----
+@pytest.mark.slow
+@pytest.mark.parametrize("dense_ctx", [False, True])
+@pytest.mark.parametrize("block_k", [1, 2, 3, 5])
+def test_parafac_fused_matches_per_column(dense_ctx, block_k):
+    """epoch_padded (fused cd_block_sweep_rowpatch blocks) must track the
+    per-column epoch trajectory at every block size, incl. non-divisible
+    k=5 / block_k ∈ {2,3} splits and block_k=1 (per-column through the
+    block path)."""
+    tc, data, _, _ = make_problem(seed=6, dense_ctx=dense_ctx)
+    k = 5
+    hp = parafac.PARAFACHyperParams(k=k, alpha0=0.3, l2=0.05,
+                                    dense_context=dense_ctx, block_k=block_k)
+    params = parafac.init(jax.random.PRNGKey(5), tc.n_c1, tc.n_c2, data.n_items, k)
+    padded = parafac.pad_tensor_groups(tc, data)
+    ref, got = params, params
+    e_ref = parafac.residuals(params, tc, data)
+    e_got = parafac.residuals(params, tc, data)
+    for _ in range(2):
+        ref, e_ref = parafac.epoch(ref, tc, data, e_ref, hp)
+        got, e_got = parafac.epoch_padded(got, tc, data, padded, e_got, hp)
+    np.testing.assert_allclose(got.u, ref.u, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.v, ref.v, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.w, ref.w, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(e_got, e_ref, rtol=5e-4, atol=5e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("block_k", [1, 2, 3])
+def test_tucker_fused_matches_per_column(block_k):
+    """Fused Tucker mode/item sweeps track the per-column trajectory for
+    non-divisible mode ranks (k1=3, k2=2, k3=4) at every block size."""
+    tc, data, _, _ = make_problem(seed=7)
+    k1, k2, k3 = 3, 2, 4
+    hp = tucker.TuckerHyperParams(k1=k1, k2=k2, k3=k3, alpha0=0.3, l2=0.05,
+                                  l2_core=0.02, block_k=block_k)
+    params = tucker.init(jax.random.PRNGKey(6), tc.n_c1, tc.n_c2,
+                         data.n_items, k1, k2, k3)
+    padded = tucker.pad_tensor_groups(tc, data)
+    ref, got = params, params
+    e_ref = tucker.residuals(params, tc, data)
+    e_got = tucker.residuals(params, tc, data)
+    for _ in range(2):
+        ref, e_ref = tucker.epoch(ref, tc, data, e_ref, hp)
+        got, e_got = tucker.epoch_padded(got, tc, data, padded, e_got, hp)
+    np.testing.assert_allclose(got.u, ref.u, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.v, ref.v, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.w, ref.w, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.b, ref.b, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(e_got, e_ref, rtol=5e-4, atol=5e-5)
+
+
+@pytest.mark.parametrize("block_k", [2, 3])
+def test_parafac_fused_dense_context_sparse_pairs(block_k):
+    """dense_context=True with a SPARSE pair list: the regularizer universe
+    is the full C1×C2 grid while the explicit part stays on observed pairs.
+    The fused R' slab must use the dense K (partner Gram) like the flat
+    path — a sparse segment-sum K here solves a different objective."""
+    tc, data, _, _ = make_problem(seed=10, dense_ctx=False)  # sparse pairs
+    k = 3
+    hp = parafac.PARAFACHyperParams(k=k, alpha0=0.3, l2=0.05,
+                                    dense_context=True, block_k=block_k)
+    params = parafac.init(jax.random.PRNGKey(9), tc.n_c1, tc.n_c2, data.n_items, k)
+    padded = parafac.pad_tensor_groups(tc, data)
+    e = parafac.residuals(params, tc, data)
+    ref, _ = parafac.epoch(params, tc, data, e, hp)
+    e2 = parafac.residuals(params, tc, data)
+    got, _ = parafac.epoch_padded(params, tc, data, padded, e2, hp)
+    np.testing.assert_allclose(got.u, ref.u, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.v, ref.v, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.w, ref.w, rtol=5e-4, atol=1e-5)
+
+
+def make_sparse_rows_problem(seed=8, n_items=6, nnz=10):
+    """A pathological universe for the clamp path: c1=0/c2=0 have pairs AND
+    observations, c1=3 has a pair but NO observations (explicit parts
+    vanish, implicit parts don't), c1=4/c2=3 appear in NO pair at all
+    (Newton denominator is exactly l2 — 0 in the clamp test)."""
+    rng = np.random.default_rng(seed)
+    n_c1, n_c2 = 5, 4
+    pair_list = np.array([[0, 0], [0, 1], [1, 0], [1, 2], [2, 1], [3, 2]])
+    n_pairs = len(pair_list)
+    tc = TensorContext(
+        c1=jnp.asarray(pair_list[:, 0], jnp.int32),
+        c2=jnp.asarray(pair_list[:, 1], jnp.int32),
+        n_c1=n_c1, n_c2=n_c2,
+    )
+    # observations only on pairs 0..4 — pair 5 (c1=3) stays empty
+    cells = rng.choice(5 * n_items, size=nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items
+    y = rng.integers(1, 4, size=nnz).astype(np.float64)
+    alpha = 1.3 + rng.random(nnz)
+    data = build_interactions(ctx, item, y, alpha, n_pairs, n_items, alpha0=0.3)
+    return tc, data
+
+
+@pytest.mark.parametrize("l2", [0.0, 0.05])
+@pytest.mark.parametrize("block_k", [2, 3])
+def test_parafac_fused_empty_context_rows(l2, block_k):
+    """Rows with no observations (and even no pairs) must stay finite and
+    match the per-column path — at l2=0 the Newton denominator of a fully
+    empty row is 0 and only the newton_delta/kernel clamp prevents NaNs."""
+    tc, data = make_sparse_rows_problem()
+    k = 3
+    hp = parafac.PARAFACHyperParams(k=k, alpha0=0.3, l2=l2, block_k=block_k)
+    params = parafac.init(jax.random.PRNGKey(7), tc.n_c1, tc.n_c2, data.n_items, k)
+    padded = parafac.pad_tensor_groups(tc, data)
+    e = parafac.residuals(params, tc, data)
+    ref, _ = parafac.epoch(params, tc, data, e, hp)
+    e2 = parafac.residuals(params, tc, data)
+    got, _ = parafac.epoch_padded(params, tc, data, padded, e2, hp)
+    assert np.all(np.isfinite(np.asarray(got.u)))
+    assert np.all(np.isfinite(np.asarray(got.v)))
+    assert np.all(np.isfinite(np.asarray(got.w)))
+    np.testing.assert_allclose(got.u, ref.u, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.v, ref.v, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(got.w, ref.w, rtol=5e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("l2", [0.0, 0.05])
+def test_tucker_fused_empty_context_rows(l2):
+    tc, data = make_sparse_rows_problem(seed=9)
+    hp = tucker.TuckerHyperParams(k1=2, k2=3, k3=2, alpha0=0.3, l2=l2,
+                                  l2_core=0.05, block_k=2)
+    params = tucker.init(jax.random.PRNGKey(8), tc.n_c1, tc.n_c2,
+                         data.n_items, 2, 3, 2)
+    padded = tucker.pad_tensor_groups(tc, data)
+    e = tucker.residuals(params, tc, data)
+    ref, _ = tucker.epoch(params, tc, data, e, hp)
+    e2 = tucker.residuals(params, tc, data)
+    got, _ = tucker.epoch_padded(params, tc, data, padded, e2, hp)
+    for name in ("u", "v", "w", "b"):
+        assert np.all(np.isfinite(np.asarray(getattr(got, name))))
+        np.testing.assert_allclose(getattr(got, name), getattr(ref, name),
+                                   rtol=5e-4, atol=1e-5)

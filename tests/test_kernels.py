@@ -4,8 +4,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.cd_sweep.kernel import cd_block_sweep_pallas
-from repro.kernels.cd_sweep.ref import cd_block_sweep_ref
+from repro.kernels.cd_sweep.kernel import (
+    cd_block_sweep_pallas,
+    cd_block_sweep_rowpatch_pallas,
+    cd_resid_patch_pallas,
+    cd_slab_reduce_pallas,
+)
+from repro.kernels.cd_sweep.ref import (
+    cd_block_sweep_ref,
+    cd_block_sweep_rowpatch_ref,
+    cd_resid_patch_ref,
+    cd_slab_reduce_ref,
+)
 from repro.kernels.cd_update.kernel import cd_column_update_pallas
 from repro.kernels.cd_update.ref import cd_column_update_ref
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
@@ -142,6 +152,67 @@ def test_cd_sweep_epoch_matches_naive(block_k):
         p_naive = naive_cd.epoch_dense(p_naive, y_dense, a_dense, hp)
         np.testing.assert_allclose(params.w, p_naive.w, rtol=3e-4, atol=3e-5)
         np.testing.assert_allclose(params.h, p_naive.h, rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("c,d_pad,k_b", [(100, 128, 4), (37, 64, 3), (129, 128, 1)])
+def test_cd_sweep_rowpatch_matches_ref(c, d_pad, k_b):
+    """Per-row-patch block sweep ≡ jnp oracle (the tensor-mode variant:
+    row-dependent R''/R' coupling), incl. non-divisible C tiles."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 6)
+    psi = jax.random.normal(ks[0], (c, k_b, d_pad))
+    alpha = jax.random.uniform(ks[1], (c, d_pad))
+    alpha = alpha * (jax.random.uniform(ks[5], (c, d_pad)) > 0.3)
+    e = jax.random.normal(ks[2], (c, d_pad))
+    w = jax.random.normal(ks[3], (c, k_b))
+    r1 = jax.random.normal(ks[4], (c, k_b))
+    # per-row SPD-ish patch tensors (diag dominant like a real R'')
+    p = jax.random.normal(jax.random.PRNGKey(8), (c, k_b, k_b))
+    p = 0.5 * (p + jnp.swapaxes(p, 1, 2)) + 2.0 * k_b * jnp.eye(k_b)[None]
+    args = dict(alpha0=0.4, l2=0.05, eta=1.0)
+    w_got, e_got = cd_block_sweep_rowpatch_pallas(
+        psi, alpha, e, w, r1, p, block_ctx=32, interpret=True, **args
+    )
+    w_ref, e_ref = cd_block_sweep_rowpatch_ref(psi, alpha, e, w, r1, p, **args)
+    np.testing.assert_allclose(w_got, w_ref, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(e_got, e_ref, rtol=2e-5, atol=2e-6)
+
+
+def test_cd_sweep_rowpatch_broadcast_equals_shared_gram():
+    """With P broadcast from a shared Gram block, the row-patch kernel must
+    reproduce the MF-style shared-Gram kernel exactly."""
+    psi_cols, alpha, e0, w0, j_full = _sweep_problem(64, 128, 4, seed=3)
+    j_blk = j_full[:4, :4]
+    r1 = w0 @ j_blk
+    args = dict(alpha0=0.4, l2=0.05, eta=1.0)
+    w_a, e_a = cd_block_sweep_pallas(
+        psi_cols, alpha, e0, w0, r1, j_blk, block_ctx=32, interpret=True, **args
+    )
+    p = jnp.broadcast_to(j_blk[None], (64, 4, 4))
+    w_b, e_b = cd_block_sweep_rowpatch_pallas(
+        psi_cols, alpha, e0, w0, r1, p, block_ctx=32, interpret=True, **args
+    )
+    np.testing.assert_allclose(w_a, w_b, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(e_a, e_b, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("c,d_pad,m", [(100, 128, 4), (37, 64, 1), (130, 128, 6)])
+def test_cd_slab_reduce_and_resid_patch_match_ref(c, d_pad, m):
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    psi = jax.random.normal(ks[0], (c, m, d_pad))
+    alpha = jax.random.uniform(ks[1], (c, d_pad))
+    e = jax.random.normal(ks[2], (c, d_pad))
+    q_got, p_got = cd_slab_reduce_pallas(psi, alpha, e, block_ctx=32,
+                                         interpret=True)
+    q_ref, p_ref = cd_slab_reduce_ref(psi, alpha, e)
+    np.testing.assert_allclose(q_got, q_ref, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(p_got, p_ref, rtol=2e-5, atol=2e-6)
+
+    dphi = jax.random.normal(ks[3], (c, m))
+    e_got = cd_resid_patch_pallas(psi, e, dphi, block_ctx=32, interpret=True)
+    e_ref = cd_resid_patch_ref(psi, e, dphi)
+    np.testing.assert_allclose(e_got, e_ref, rtol=2e-5, atol=2e-6)
 
 
 # ------------------------------------------------------- embedding_bag ----

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs it
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.gram import gram, weighted_gram
 from repro.core.implicit import (

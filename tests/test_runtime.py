@@ -1,8 +1,6 @@
 """Elastic mesh manager + straggler watchdog (single-device semantics;
 multi-device elasticity is exercised in tests/test_distributed.py via a
 subprocess with forced host devices)."""
-import jax
-import numpy as np
 
 from repro.runtime.elastic import ElasticMeshManager, largest_mesh_shape
 from repro.runtime.health import StragglerWatchdog

@@ -2,10 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs it
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.sparse import (
-    CSR,
     build_adjacency,
     coo_to_csr,
     csr_row_ids,
