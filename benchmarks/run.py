@@ -83,6 +83,15 @@ def cd_sweep(quick):
     return cd_sweep_bench(quick=quick)
 
 
+def serve(quick):
+    """Fused score+top-K retrieval vs the dense path; hard kernel-vs-oracle
+    parity for the whole model zoo + the streaming eval harness; refreshes
+    the tracked BENCH_topk_score.json at the repo root."""
+    from benchmarks.serve_bench import serve_topk_bench
+
+    return serve_topk_bench(quick=quick)
+
+
 def roofline(quick):
     from benchmarks.roofline_bench import load_table, markdown_table
 
@@ -103,11 +112,12 @@ FIGURES = {
     "fig8_cost": fig8,
     "kernels": kernels,
     "cd_sweep": cd_sweep,
+    "serve": serve,
     "roofline": roofline,
 }
 
 # dataset-free, seconds-fast subset — the smoke gate for CI / pre-commit
-QUICK_SET = ("kernels", "cd_sweep", "roofline")
+QUICK_SET = ("kernels", "cd_sweep", "serve", "roofline")
 
 
 def main() -> None:

@@ -113,6 +113,23 @@ def make_design(fields_spec: Sequence[dict], n_rows: int) -> Design:
     return Design(fields=tuple(fields), n_rows=n_rows, p=offset)
 
 
+def take_rows(design: Design, rows: jax.Array) -> Design:
+    """Row-subset view of a design: the B query rows of every field.
+
+    The serving path (``build_phi(..., rows)``) gathers rows BEFORE the
+    Φ = X·W matmul so a query batch costs O(B·k), not a full-design
+    matmul over all contexts."""
+    fields = tuple(
+        dataclasses.replace(
+            f,
+            ids=jnp.take(f.ids, rows, axis=0),
+            weights=jnp.take(f.weights, rows, axis=0),
+        )
+        for f in design.fields
+    )
+    return Design(fields=fields, n_rows=int(rows.shape[0]), p=design.p)
+
+
 def design_matmul(design: Design, table: jax.Array) -> jax.Array:
     """Φ = X·W for the stacked table W (p, k): fielded embedding-bag sum."""
     out = jnp.zeros((design.n_rows, table.shape[1]), dtype=jnp.float32)

@@ -1,8 +1,11 @@
 """Ranking metrics: Recall@K and NDCG@K (paper §6 evaluates top-100).
 
-Scores for evaluation contexts arrive as a dense (n_eval_ctx, n_items)
-matrix (or in chunks); training items can be masked out, matching the
-standard offline protocol.
+Two entry layers: the ``*_at_k`` functions take a dense
+(n_eval_ctx, n_items) score matrix (small-scale tests / baselines), while
+the ``*_from_topk`` functions take already-ranked (n, k) top-k id lists —
+the contract of the streaming retrieval path (``kernels/topk_score`` via
+``eval.ranking``), which never materializes the dense matrix. Training
+items can be masked out, matching the standard offline protocol.
 """
 from __future__ import annotations
 
@@ -16,10 +19,37 @@ import numpy as np
 def topk_items(
     scores: jax.Array, k: int, exclude_mask: Optional[jax.Array] = None
 ) -> jax.Array:
-    """Top-k item ids per row; ``exclude_mask`` True ⇒ never recommend."""
+    """Top-k item ids per row; ``exclude_mask`` True ⇒ never recommend.
+
+    NOTE: ``lax.top_k`` over a −inf-masked dense row still returns real
+    item ids for the −inf tail (a row with fewer than k admissible items
+    "recommends" excluded ids). The streaming path
+    (``kernels/topk_score`` / ``eval.ranking``) returns id −1 for those
+    slots instead; both count as misses in the *_from_topk metrics below
+    as long as the true item itself is admissible."""
     if exclude_mask is not None:
         scores = jnp.where(exclude_mask, -jnp.inf, scores)
     return jax.lax.top_k(scores, k)[1]
+
+
+def recall_from_topk(top_ids: jax.Array, true_items: jax.Array) -> jax.Array:
+    """Recall@K from (n, k) top-k ids, single held-out item per row.
+
+    Works for both the dense and the streaming top-k (−1 filler ids never
+    match a real item id)."""
+    return jnp.mean(
+        jnp.any(top_ids == true_items[:, None], axis=1).astype(jnp.float32)
+    )
+
+
+def ndcg_from_topk(top_ids: jax.Array, true_items: jax.Array) -> jax.Array:
+    """NDCG@K from (n, k) top-k ids, single relevant item ⇒
+    DCG = 1/log2(rank+1), IDCG = 1."""
+    k = top_ids.shape[1]
+    hits = top_ids == true_items[:, None]  # (n, k)
+    ranks = jnp.arange(1, k + 1, dtype=jnp.float32)
+    gains = jnp.where(hits, 1.0 / jnp.log2(ranks + 1.0)[None, :], 0.0)
+    return jnp.mean(jnp.sum(gains, axis=1))
 
 
 def recall_at_k(
@@ -29,8 +59,7 @@ def recall_at_k(
     exclude_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Recall@K for a single held-out item per context (leave-one-out)."""
-    top = topk_items(scores, k, exclude_mask)
-    return jnp.mean(jnp.any(top == true_items[:, None], axis=1).astype(jnp.float32))
+    return recall_from_topk(topk_items(scores, k, exclude_mask), true_items)
 
 
 def ndcg_at_k(
@@ -40,11 +69,7 @@ def ndcg_at_k(
     exclude_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """NDCG@K, single relevant item ⇒ DCG = 1/log2(rank+1), IDCG = 1."""
-    top = topk_items(scores, k, exclude_mask)
-    hits = top == true_items[:, None]  # (n, k)
-    ranks = jnp.arange(1, k + 1, dtype=jnp.float32)
-    gains = jnp.where(hits, 1.0 / jnp.log2(ranks + 1.0)[None, :], 0.0)
-    return jnp.mean(jnp.sum(gains, axis=1))
+    return ndcg_from_topk(topk_items(scores, k, exclude_mask), true_items)
 
 
 def recall_ndcg_multi(

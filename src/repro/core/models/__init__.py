@@ -4,6 +4,9 @@ Every module exposes the same surface:
 
 - ``init(key, ...) -> params``            parameter pytree
 - ``phi(params, ...) / psi(params, ...)`` the k-separable decomposition
+- ``export_psi(params, ...) -> (I, D)``   ψ table for the retrieval engine
+- ``build_phi(params, <query>) -> (B, D)`` φ rows for a query batch (the
+  serve/eval contract — column conventions in ``serve/engine.py``)
 - ``predict(params, ...)``                scores for (context, item) pairs
 - ``epoch(params, data, hp) -> params``   one full iCD epoch (ctx + item sweep)
 - ``objective(params, data, hp)``         Lemma-1 objective for monitoring

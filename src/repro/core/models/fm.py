@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sweeps
-from repro.core.design import Design, design_matmul
+from repro.core.design import Design, design_matmul, take_rows
 from repro.core.gram import gram
 from repro.core.implicit import implicit_objective
 from repro.core.models.mf_padded import (
@@ -59,8 +59,9 @@ from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
 
 __all__ = ["FMParams", "FMHyperParams", "pad_interactions", "init",
-           "phi_ext", "psi_ext", "predict", "epoch", "epoch_padded",
-           "residuals", "residuals_padded", "objective", "fit"]
+           "phi_ext", "psi_ext", "export_psi", "build_phi", "predict",
+           "epoch", "epoch_padded", "residuals", "residuals_padded",
+           "objective", "fit"]
 
 
 class FMParams(NamedTuple):
@@ -135,6 +136,21 @@ def psi_ext(params: FMParams, z: Design, hp: FMHyperParams) -> jax.Array:
 def predict(params: FMParams, x: Design, z: Design, ctx, item, hp: FMHyperParams) -> jax.Array:
     pe, se = phi_ext(params, x, hp), psi_ext(params, z, hp)
     return jnp.sum(jnp.take(pe, ctx, axis=0) * jnp.take(se, item, axis=0), axis=-1)
+
+
+def export_psi(params: FMParams, z: Design, hp: FMHyperParams) -> jax.Array:
+    """ψ table for the retrieval engine: Ψe (n_items, k+2) with the FM
+    column convention [Ψ | 1 | ψ_spec] — aligned so ⟨Φe, Ψe⟩ = ŷ (eq. 26)
+    with Φe's [Φ | φ_spec | 1] ordering."""
+    return psi_ext(params, z, hp)
+
+
+def build_phi(params: FMParams, x: Design, hp: FMHyperParams,
+              rows: Optional[jax.Array] = None) -> jax.Array:
+    """φ rows for query contexts: Φe = [Φ | φ_spec | 1] (B, k+2) over
+    ``rows`` of the context design ``x`` (rows are gathered BEFORE the
+    matmuls — a query batch is O(B·k), not a full-design pass)."""
+    return phi_ext(params, x if rows is None else take_rows(x, rows), hp)
 
 
 def _embed_layer_update(

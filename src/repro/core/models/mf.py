@@ -65,6 +65,16 @@ def psi(params: MFParams) -> jax.Array:
     return params.h
 
 
+def export_psi(params: MFParams) -> jax.Array:
+    """ψ table for the retrieval engine (serve/engine.py): (n_items, k)."""
+    return params.h
+
+
+def build_phi(params: MFParams, ctx: jax.Array) -> jax.Array:
+    """φ rows for a batch of context ids: (B, k); ⟨φ, ψ_i⟩ = ŷ(c, i)."""
+    return jnp.take(params.w, ctx, axis=0)
+
+
 def predict(params: MFParams, ctx: jax.Array, item: jax.Array) -> jax.Array:
     return jnp.sum(
         jnp.take(params.w, ctx, axis=0) * jnp.take(params.h, item, axis=0), axis=-1

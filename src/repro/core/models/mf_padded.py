@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import sweeps
 from repro.core.models.mf import MFHyperParams, MFParams
+from repro.kernels import vmem
 from repro.kernels.cd_sweep.ops import cd_block_sweep
 from repro.kernels.cd_update.ops import cd_column_update
 from repro.kernels.gram.ops import gram as gram_kernel
@@ -131,14 +132,14 @@ def transfer_item_to_ctx(pdata: PaddedInteractions, e_pad_i: jax.Array) -> jax.A
     return jnp.zeros_like(pdata.alpha_c).at[pdata.c_rows, pdata.c_cols].set(e_flat)
 
 
-_SWEEP_BLOCK_CTX = 128  # row tile of the cd_sweep kernel dispatches
-
-
 def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
     k = side.shape[1]
     k_b = sweeps.resolve_block_k(hp.block_k, k)
     n = side.shape[0]
     use_block = k_b > 1 and not hp.unroll  # unroll = explicit per-column ask
+
+    # row tile of the cd_sweep kernel dispatches — shared VMEM-budget fit
+    block_ctx = vmem.cd_sweep_block_ctx(ids_pad.shape[1], k_b, n_rows=n)
 
     if use_block:
         # Pad rows to the kernel tile ONCE per sweep — otherwise every block
@@ -146,7 +147,7 @@ def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
         # re-introducing the per-dispatch HBM copies the fused kernel
         # removes (and breaking the e→e_out alias, which would then point
         # at a padded temp). Padding rows have α=0 ⇒ Δ=0, so they are inert.
-        n_pad = -(-n // _SWEEP_BLOCK_CTX) * _SWEEP_BLOCK_CTX
+        n_pad = -(-n // block_ctx) * block_ctx
         if n_pad != n:
             rows = ((0, n_pad - n), (0, 0))
             ids_pad = jnp.pad(ids_pad, rows)
@@ -174,7 +175,7 @@ def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
             psi_blk, alpha_pad, e_pad, side_m[:, f0:f0 + kb], r1_blk,
             other_j[f0:f0 + kb, f0:f0 + kb],
             alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
-            block_ctx=_SWEEP_BLOCK_CTX,
+            block_ctx=block_ctx,
         )
         return side_m.at[:, f0:f0 + kb].set(w_new), e_pad
 

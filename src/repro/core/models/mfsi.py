@@ -45,13 +45,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sweeps
-from repro.core.design import Design, design_matmul
+from repro.core.design import Design, design_matmul, take_rows
 from repro.core.gram import gram
 from repro.core.implicit import implicit_objective
 from repro.core.models.mf_padded import (
@@ -66,8 +66,9 @@ from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
 
 __all__ = ["MFSIParams", "MFSIHyperParams", "pad_interactions", "init",
-           "phi", "psi", "predict", "epoch", "epoch_padded", "residuals",
-           "residuals_padded", "objective", "fit"]
+           "phi", "psi", "export_psi", "build_phi", "predict", "epoch",
+           "epoch_padded", "residuals", "residuals_padded", "objective",
+           "fit"]
 
 
 class MFSIParams(NamedTuple):
@@ -103,6 +104,19 @@ def phi(params: MFSIParams, x: Design) -> jax.Array:
 
 def psi(params: MFSIParams, z: Design) -> jax.Array:
     return design_matmul(z, params.h)
+
+
+def export_psi(params: MFSIParams, z: Design) -> jax.Array:
+    """ψ table for the retrieval engine: Ψ = Z·H (n_items, k), one row per
+    catalogue item of the item design ``z``."""
+    return psi(params, z)
+
+
+def build_phi(params: MFSIParams, x: Design, rows: Optional[jax.Array] = None) -> jax.Array:
+    """φ rows for query contexts: Φ = X·W over ``rows`` of the context
+    design ``x`` (rows are gathered BEFORE the matmul — a query batch is
+    O(B·k), not a full-design pass); ⟨φ, ψ_i⟩ = ŷ (eq. 20)."""
+    return phi(params, x if rows is None else take_rows(x, rows))
 
 
 def predict(params: MFSIParams, x: Design, z: Design, ctx, item) -> jax.Array:

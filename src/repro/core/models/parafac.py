@@ -126,6 +126,16 @@ def psi(params: PARAFACParams) -> jax.Array:
     return params.w
 
 
+def export_psi(params: PARAFACParams) -> jax.Array:
+    """ψ table for the retrieval engine: (n_items, k)."""
+    return params.w
+
+
+def build_phi(params: PARAFACParams, c1: jax.Array, c2: jax.Array) -> jax.Array:
+    """φ rows for query context pairs: φ_f = u_{c1,f}·v_{c2,f} (eq. 35)."""
+    return jnp.take(params.u, c1, axis=0) * jnp.take(params.v, c2, axis=0)
+
+
 def predict(params: PARAFACParams, c1, c2, item) -> jax.Array:
     return jnp.sum(
         jnp.take(params.u, c1, axis=0)

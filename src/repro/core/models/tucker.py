@@ -57,8 +57,8 @@ from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
 
 __all__ = ["TuckerParams", "TuckerHyperParams", "pad_tensor_groups",
-           "init", "phi", "predict", "epoch", "epoch_padded", "residuals",
-           "objective", "fit"]
+           "init", "phi", "export_psi", "build_phi", "predict", "epoch",
+           "epoch_padded", "residuals", "objective", "fit"]
 
 
 class TuckerParams(NamedTuple):
@@ -109,6 +109,20 @@ def predict(params: TuckerParams, c1, c2, item) -> jax.Array:
     vp = jnp.take(params.v, c2, axis=0)
     wp = jnp.take(params.w, item, axis=0)
     return jnp.einsum("na,nb,nf,abf->n", up, vp, wp, params.b)
+
+
+def export_psi(params: TuckerParams) -> jax.Array:
+    """ψ table for the retrieval engine: (n_items, k3) — Tucker is
+    k3-separable with ψ_f(i) = w_{i,f}."""
+    return params.w
+
+
+def build_phi(params: TuckerParams, c1: jax.Array, c2: jax.Array) -> jax.Array:
+    """φ rows for query context pairs: the core-contracted
+    φ_f = Σ_{f1,f2} b_{f1,f2,f} u_{c1,f1} v_{c2,f2} (B, k3)."""
+    up = jnp.take(params.u, c1, axis=0)
+    vp = jnp.take(params.v, c2, axis=0)
+    return jnp.einsum("na,nb,abf->nf", up, vp, params.b)
 
 
 def _mode_sweep(

@@ -1,0 +1,2 @@
+"""Offline evaluation harnesses (paper §6 protocols at serving scale)."""
+from repro.eval.ranking import ranking_eval  # noqa: F401

@@ -20,10 +20,19 @@ Kernels:
                     (MF), per-row-patch sweep (PARAFAC/Tucker modes), and
                     the slab-reduce + resid-patch pair (MFSI/FM field
                     models).
+  topk_score      — fused retrieval/eval sweep: streams ψ-table blocks
+                    through VMEM, fuses the (B, block_items) score matmul
+                    with a running per-row top-K merge (exclude-mask
+                    support); the (B, n_items) score matrix never exists.
+                    The serving/eval mirror of cd_sweep.
   embedding_bag   — multi-hot EmbeddingBag as one-hot×table MXU matmuls,
                     vocab-block streamed (recsys hot path).
   flash_attention — online-softmax attention (causal / sliding-window /
                     logit-softcap) for the LM zoo's prefill shapes.
+
+Blocking policy: row-tile sizes (``block_ctx``/``block_items``) resolve
+from the shared VMEM budget in ``kernels/vmem.py`` when not pinned by the
+caller.
 
 On CPU (CI) kernels are validated with ``interpret=True`` (the Pallas
 interpreter executes the same BlockSpec program in Python); on TPU/GPU the

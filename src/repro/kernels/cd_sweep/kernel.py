@@ -68,6 +68,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import vmem
+
 
 def _sweep_kernel(alpha0, l2, eta, k_b, psi_ref, alpha_ref, e_ref, w_ref,
                   r1_ref, jblk_ref, w_out_ref, e_out_ref):
@@ -113,10 +115,12 @@ def cd_block_sweep_pallas(
     alpha0: float,
     l2: float,
     eta: float = 1.0,
-    block_ctx: int = 128,
+    block_ctx: int | None = None,
     interpret: bool = True,
 ):
     c, k_b, d_pad = psi_blk.shape
+    if block_ctx is None:  # shared VMEM-budget fit (kernels/vmem.py)
+        block_ctx = vmem.cd_sweep_block_ctx(d_pad, k_b, n_rows=c)
     c_pad = -(-c // block_ctx) * block_ctx
     if c_pad != c:
         rows = (0, c_pad - c)
@@ -199,7 +203,7 @@ def cd_block_sweep_rowpatch_pallas(
     alpha0: float,
     l2: float,
     eta: float = 1.0,
-    block_ctx: int = 128,
+    block_ctx: int | None = None,
     interpret: bool = True,
 ):
     """General k-separable block sweep: like :func:`cd_block_sweep_pallas`
@@ -207,6 +211,8 @@ def cd_block_sweep_rowpatch_pallas(
     P[r, j, f] is both the Gauss–Seidel R' patch coefficient and (on the
     diagonal) the per-row R''/2 of eqs. (14/19/38)."""
     c, k_b, d_pad = psi_blk.shape
+    if block_ctx is None:  # shared VMEM-budget fit (kernels/vmem.py)
+        block_ctx = vmem.cd_sweep_block_ctx(d_pad, k_b, n_rows=c)
     c_pad = -(-c // block_ctx) * block_ctx
     if c_pad != c:
         rows = (0, c_pad - c)
@@ -259,7 +265,7 @@ def cd_slab_reduce_pallas(
     alpha: jax.Array,    # (C, D_pad), 0 on padding
     e: jax.Array,        # (C, D_pad) residual cache (read-only here)
     *,
-    block_ctx: int = 128,
+    block_ctx: int | None = None,
     interpret: bool = True,
 ):
     """Field-model slab moments in ONE e/α stream (Algorithm 3 caches):
@@ -272,6 +278,8 @@ def cd_slab_reduce_pallas(
     The per-column path recomputes q (and u for FM) from HBM once per
     dimension; this fuses all m columns of a block into one pass."""
     c, m, d_pad = psi_blk.shape
+    if block_ctx is None:  # shared VMEM-budget fit (kernels/vmem.py)
+        block_ctx = vmem.cd_sweep_block_ctx(d_pad, m, n_rows=c)
     c_pad = -(-c // block_ctx) * block_ctx
     if c_pad != c:
         rows = (0, c_pad - c)
@@ -313,13 +321,15 @@ def cd_resid_patch_pallas(
     e: jax.Array,        # (C, D_pad) residual cache
     dphi_blk: jax.Array, # (C, m) per-row Δφ of each block column
     *,
-    block_ctx: int = 128,
+    block_ctx: int | None = None,
     interpret: bool = True,
 ):
     """Rank-m residual patch e += Σ_j Δφ_j·ψ_j in one e stream (the closing
     half of a feature-model block; the per-column path pays one stream per
     dimension)."""
     c, m, d_pad = psi_blk.shape
+    if block_ctx is None:  # shared VMEM-budget fit (kernels/vmem.py)
+        block_ctx = vmem.cd_sweep_block_ctx(d_pad, m, n_rows=c)
     c_pad = -(-c // block_ctx) * block_ctx
     if c_pad != c:
         rows = (0, c_pad - c)

@@ -19,7 +19,7 @@ from repro.kernels.cd_sweep.kernel import (
 @kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
             donate_argnums=(2,))
 def cd_block_sweep(psi_blk, alpha, e, w_blk, r1_blk, j_blk, *, alpha0, l2,
-                   eta=1.0, block_ctx=128, interpret=None):
+                   eta=1.0, block_ctx=None, interpret=None):
     return cd_block_sweep_pallas(
         psi_blk, alpha, e, w_blk, r1_blk, j_blk,
         alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
@@ -30,7 +30,7 @@ def cd_block_sweep(psi_blk, alpha, e, w_blk, r1_blk, j_blk, *, alpha0, l2,
 @kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
             donate_argnums=(2,))
 def cd_block_sweep_rowpatch(psi_blk, alpha, e, w_blk, r1_blk, p_blk, *,
-                            alpha0, l2, eta=1.0, block_ctx=128,
+                            alpha0, l2, eta=1.0, block_ctx=None,
                             interpret=None):
     return cd_block_sweep_rowpatch_pallas(
         psi_blk, alpha, e, w_blk, r1_blk, p_blk,
@@ -40,14 +40,14 @@ def cd_block_sweep_rowpatch(psi_blk, alpha, e, w_blk, r1_blk, p_blk, *,
 
 
 @kernel_jit(static_argnames=("block_ctx",))
-def cd_slab_reduce(psi_blk, alpha, e, *, block_ctx=128, interpret=None):
+def cd_slab_reduce(psi_blk, alpha, e, *, block_ctx=None, interpret=None):
     return cd_slab_reduce_pallas(
         psi_blk, alpha, e, block_ctx=block_ctx, interpret=interpret,
     )
 
 
 @kernel_jit(static_argnames=("block_ctx",), donate_argnums=(1,))
-def cd_resid_patch(psi_blk, e, dphi_blk, *, block_ctx=128, interpret=None):
+def cd_resid_patch(psi_blk, e, dphi_blk, *, block_ctx=None, interpret=None):
     return cd_resid_patch_pallas(
         psi_blk, e, dphi_blk, block_ctx=block_ctx, interpret=interpret,
     )

@@ -1,0 +1,16 @@
+"""Jit'd public wrapper for the fused score+top-K retrieval kernel."""
+from repro.kernels import kernel_jit
+from repro.kernels.topk_score.kernel import topk_score_pallas
+
+
+@kernel_jit(static_argnames=("k", "block_b", "block_items"))
+def topk_score(phi, psi, k, exclude_mask=None, *, block_b=128,
+               block_items=None, interpret=None):
+    """Fused streaming top-K over the ψ table: ``(scores, ids) (B, k)``.
+
+    ``exclude_mask`` (B, n_items), nonzero ⇒ never recommend; inadmissible
+    slots come back as (−inf, −1). See ``kernel.py`` for the tie policy."""
+    return topk_score_pallas(
+        phi, psi, k, exclude_mask,
+        block_b=block_b, block_items=block_items, interpret=interpret,
+    )

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused score+top-K kernel: dense Φ·Ψᵀ, exclusion
+mask to −inf, ``lax.top_k``, and the −1-id policy on inadmissible slots.
+
+This is deliberately the "memory-naive" path — it materializes the full
+``(B, n_items)`` score matrix the kernel exists to avoid — so it doubles
+as the dense baseline in ``benchmarks/serve_bench``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_score_ref(phi, psi, k, exclude_mask=None):
+    """Dense reference with the kernel's exact semantics: tie-stable
+    ascending-id order (``lax.top_k`` positional stability over the
+    id-ordered row) and (−inf, −1) on slots with no admissible candidate."""
+    n_items = psi.shape[0]
+    scores = phi.astype(jnp.float32) @ psi.astype(jnp.float32).T
+    if exclude_mask is not None:
+        scores = jnp.where(exclude_mask != 0, -jnp.inf, scores)
+    if k > n_items:  # dense top_k cannot rank more slots than exist
+        pad = k - n_items
+        scores = jnp.pad(scores, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    top_i = jnp.where(jnp.isneginf(top_s), -1, top_i).astype(jnp.int32)
+    return top_s, top_i

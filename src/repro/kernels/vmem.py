@@ -1,0 +1,73 @@
+"""Shared VMEM-budget blocking policy for the Pallas kernel wrappers.
+
+Every kernel in this package streams `(rows, lanes)` tiles through VMEM
+(~16 MiB/core); the row-tile size is the knob that trades grid steps
+against VMEM pressure. Before this module each call site carried its own
+constant (``mf_padded._SWEEP_BLOCK_CTX = 128``, ``block_ctx=128`` defaults
+in the cd_sweep ops, ...). Now there is ONE declared budget and one
+fitting rule; the per-kernel helpers below encode each kernel's bytes/row
+so wrappers can resolve ``block_ctx``/``block_items`` from the actual tile
+shapes at trace time (shapes are static under jit, so the choice bakes
+into the compiled program).
+
+The ``k_b`` (columns per fused cd_sweep dispatch) side of the trade lives
+in ``core.sweeps.resolve_block_k``: its auto policy ``min(k, 8)`` is the
+bandwidth knee of the analytic model in ``benchmarks/roofline_bench`` —
+beyond k_b≈8 the amortized α/e traffic saving flattens while the Ψ tile's
+VMEM (and HBM capacity) cost keeps growing linearly, so the budget here
+only has to fit the row tile given that k_b.
+"""
+from __future__ import annotations
+
+VMEM_BYTES = 16 * 1024 * 1024
+# Working budget: half the core's VMEM, leaving headroom for the pipeline's
+# double buffering and the compiler's own temporaries.
+VMEM_BUDGET_BYTES = VMEM_BYTES // 2
+
+
+def fit_block_rows(
+    per_row_bytes: int,
+    *,
+    fixed_bytes: int = 0,
+    n_rows: int | None = None,
+    budget: int = VMEM_BUDGET_BYTES,
+    multiple: int = 8,
+    lo: int = 8,
+    hi: int = 2048,
+) -> int:
+    """Largest row-tile (multiple of ``multiple``, in [lo, hi]) whose VMEM
+    footprint ``fixed_bytes + rows·per_row_bytes`` fits the budget.
+
+    ``n_rows`` (when known) caps the tile at the padded problem size so a
+    small problem is one grid step instead of being padded up to a huge
+    tile."""
+    rows = max(lo, (budget - fixed_bytes) // max(1, per_row_bytes))
+    rows = min(rows, hi)
+    if n_rows is not None:
+        rows = min(rows, -(-n_rows // multiple) * multiple)
+    return max(lo, (rows // multiple) * multiple)
+
+
+def cd_sweep_block_ctx(d_pad: int, k_b: int, *, n_rows: int | None = None) -> int:
+    """Row tile for the ``cd_sweep`` kernel family.
+
+    Per row the block kernels hold the Ψ tile (k_b, d_pad), α and e
+    (d_pad each, plus the aliased e output) and the small (k_b,) slabs in
+    VMEM — ≈ (k_b + 3)·d_pad·4 B/row (the rowpatch variant adds k_b²·4,
+    folded into the same bound)."""
+    per_row = 4 * ((k_b + 3) * d_pad + k_b * k_b + 4 * k_b)
+    return fit_block_rows(per_row, n_rows=n_rows)
+
+
+def topk_block_items(block_b: int, d_pad: int, k_pad: int, *, n_items: int | None = None) -> int:
+    """ψ-table row tile for the ``topk_score`` kernel.
+
+    Per ψ row: the ψ tile lane (d_pad·4) plus this row's column in the
+    (block_b, block_items) score tile and the concat/merge temporaries
+    (≈3 score-tile copies: scores + concatenated scores/ids). Fixed: the
+    resident φ tile and the running top-k_pad score/id blocks."""
+    per_row = 4 * (d_pad + 4 * block_b)
+    fixed = 4 * (block_b * d_pad + 4 * block_b * k_pad)
+    return fit_block_rows(
+        per_row, fixed_bytes=fixed, n_rows=n_items, multiple=128, lo=128, hi=4096
+    )

@@ -1,2 +1,3 @@
 from repro.serve.decode import generate  # noqa: F401
+from repro.serve.engine import RetrievalEngine, exclude_mask_from_lists  # noqa: F401
 from repro.serve.recsys_serve import bulk_score, retrieval_topk  # noqa: F401

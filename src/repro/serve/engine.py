@@ -1,0 +1,122 @@
+"""Model-agnostic retrieval engine over the fused score+top-K kernel.
+
+The φ/ψ export contract
+-----------------------
+
+Every k-separable model (paper §4–5) scores an item as
+``ŷ = ⟨φ(context), ψ(item)⟩``, so ONE retrieval path serves the whole zoo.
+Each model module exports two functions the engine is built from:
+
+  ``export_psi(params, ...) -> (n_items, D)``  the catalogue ψ table
+  ``build_phi(params, <query>) -> (B, D)``     φ rows for a query batch
+
+with D and the column conventions per model:
+
+  model    D     export_psi                build_phi            columns
+  -------  ----  ------------------------  -------------------  ------------
+  MF       k     ``params.h``              ``w[ctx]``           ψ_f = h_{i,f}
+  MFSI     k     ``Z·H`` (item design)     ``(X·W)[rows]``      eq. 21
+  FM       k+2   ``psi_ext``: [Ψ | 1 | ψ_spec]
+                                           ``phi_ext``:
+                                           [Φ | φ_spec | 1]     eqs. 27–31
+  PARAFAC  k     ``params.w``              ``u[c1]·v[c2]``      eq. 35
+  Tucker   k3    ``params.w``              ``Σ b·u[c1]·v[c2]``  eq. 40
+
+The FM alignment is the one to watch: Ψe's column k is the constant 1
+(paired with φ_spec — the context bias/linear/pairwise bundle) and column
+k+1 is ψ_spec (paired with Φe's constant 1), so the plain inner product
+reproduces the full FM score including both special components.
+
+The engine itself is just (ψ table, φ builder, blocking policy): ``topk``
+streams ψ blocks through the Pallas kernel (``kernels/topk_score``) with a
+running in-VMEM top-K merge — the ``(B, n_items)`` score matrix is never
+materialized — and supports per-row exclude masks for the
+seen-items-filtered serving protocol. ``exclude_mask_from_lists`` builds
+those masks from ragged per-row id lists (train histories).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.topk_score.ops import topk_score
+
+
+def exclude_mask_from_lists(
+    item_lists: Sequence, n_items: int
+) -> jax.Array:
+    """(B, n_items) bool mask from ragged per-row item-id lists (host-side;
+    rows are query-batch sized, NEVER the full eval set)."""
+    mask = np.zeros((len(item_lists), n_items), dtype=bool)
+    for r, ids in enumerate(item_lists):
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size:
+            mask[r, ids] = True
+    return jnp.asarray(mask)
+
+
+class RetrievalEngine:
+    """Serve top-K retrieval for any k-separable model.
+
+    Built from the model's exported ψ table and φ builder::
+
+        engine = RetrievalEngine(mf.export_psi(params),
+                                 lambda ctx: mf.build_phi(params, ctx))
+        scores, ids = engine.topk(user_ids, k=100)
+
+    ``topk`` semantics follow the kernel (see ``kernels/topk_score``):
+    exact dense-``lax.top_k`` parity, ascending-id tie policy, (−inf, −1)
+    on slots with no admissible candidate.
+    """
+
+    def __init__(
+        self,
+        psi_table: jax.Array,                      # (n_items, D)
+        phi_fn: Callable[..., jax.Array],          # query -> (B, D)
+        *,
+        k: int = 100,
+        block_items: Optional[int] = None,
+    ):
+        self.psi = jnp.asarray(psi_table, jnp.float32)
+        self.phi_fn = phi_fn
+        self.k = k
+        self.block_items = block_items
+
+    @property
+    def n_items(self) -> int:
+        return int(self.psi.shape[0])
+
+    def phi(self, *query) -> jax.Array:
+        """φ rows for a query batch — (B, D), D tiny; safe to materialize."""
+        return jnp.asarray(self.phi_fn(*query), jnp.float32)
+
+    def topk(
+        self,
+        *query,
+        k: Optional[int] = None,
+        exclude_mask: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(scores, ids), both (B, k), for a query batch."""
+        return self.topk_phi(self.phi(*query), k=k, exclude_mask=exclude_mask)
+
+    def topk_phi(
+        self,
+        phi_rows: jax.Array,
+        *,
+        k: Optional[int] = None,
+        exclude_mask: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Like :meth:`topk` but from pre-built φ rows (the eval harness
+        path, which batches a big φ matrix through here)."""
+        return topk_score(
+            phi_rows, self.psi, k or self.k, exclude_mask,
+            block_items=self.block_items,
+        )
+
+    def scores(self, phi_rows: jax.Array) -> jax.Array:
+        """Dense (B, n_items) scores — small batches / tests ONLY; serving
+        and eval go through :meth:`topk`, which never materializes this."""
+        return phi_rows @ self.psi.T

@@ -28,23 +28,44 @@ def retrieval_topk(
     k: int = 100,
     chunk: int = 262144,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Top-k over ``n_candidates`` scored in chunks with a running reduce."""
-    best_scores = jnp.full((k,), -jnp.inf)
-    best_ids = jnp.zeros((k,), jnp.int32)
+    """Top-k over ``n_candidates`` scored in chunks with a running reduce.
+
+    ``score_fn(ids)`` may return ``(chunk,)`` (single query) or
+    ``(B, chunk)`` (batched); the reduce carries matching ``(..., k)``
+    state. Slots with no real candidate (``n_candidates < k``) stay at
+    id −1 / score −inf — no placeholder item id ever leaks into the
+    result. Ties resolve toward the smaller candidate id (``lax.top_k``
+    positional stability + ascending chunk order), the same policy as the
+    fused ``kernels/topk_score`` kernel, for which this chunked jnp path
+    is the reference oracle.
+    """
+    best_scores = best_ids = None
     for lo in range(0, n_candidates, chunk):
         ids = jnp.arange(lo, min(lo + chunk, n_candidates), dtype=jnp.int32)
         scores = score_fn(ids)
-        merged_s = jnp.concatenate([best_scores, scores])
-        merged_i = jnp.concatenate([best_ids, ids])
+        if best_scores is None:  # first chunk fixes the (optional) batch dim
+            lead = scores.shape[:-1]
+            best_scores = jnp.full(lead + (k,), -jnp.inf, scores.dtype)
+            best_ids = jnp.full(lead + (k,), -1, jnp.int32)
+        merged_s = jnp.concatenate([best_scores, scores], axis=-1)
+        merged_i = jnp.concatenate(
+            [best_ids, jnp.broadcast_to(ids, scores.shape).astype(jnp.int32)],
+            axis=-1,
+        )
         best_scores, idx = jax.lax.top_k(merged_s, k)
-        best_ids = jnp.take(merged_i, idx)
+        best_ids = jnp.take_along_axis(merged_i, idx, axis=-1)
+    if best_scores is None:  # n_candidates == 0
+        best_scores = jnp.full((k,), -jnp.inf)
+        best_ids = jnp.full((k,), -1, jnp.int32)
     return best_scores, best_ids
 
 
 def mf_retrieval_score_fn(user_vec: jax.Array, item_table: jax.Array):
-    """The paper-native separable retrieval: one (k)·(k,N) matvec."""
+    """The paper-native separable retrieval: one (k)·(k,N) matvec per id
+    chunk — or a (B, k)·(k, N) matmul when ``user_vec`` is a (B, k) batch."""
 
     def score(ids):
-        return jnp.take(item_table, ids, axis=0) @ user_vec
+        s = jnp.take(item_table, ids, axis=0) @ user_vec.T  # (c,) | (c, B)
+        return s.T if s.ndim == 2 else s
 
     return score

@@ -1,0 +1,89 @@
+"""core.metrics coverage: from-topk helpers, tie behavior, exclusion edge
+cases, and dense/host-path consistency."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import (
+    ndcg_at_k,
+    ndcg_from_topk,
+    recall_at_k,
+    recall_from_topk,
+    recall_ndcg_multi,
+    topk_items,
+)
+
+
+def test_recall_ndcg_from_topk_hand_example():
+    top = jnp.asarray([[3, 1, 2], [5, 4, 0]])
+    truth = jnp.asarray([1, 9])
+    # row 0 hits at rank 2 → DCG = 1/log2(3); row 1 misses
+    assert float(recall_from_topk(top, truth)) == 0.5
+    np.testing.assert_allclose(
+        float(ndcg_from_topk(top, truth)), 0.5 * (1.0 / np.log2(3.0)), rtol=1e-6
+    )
+
+
+def test_at_k_equals_from_topk_composition():
+    rng = np.random.default_rng(0)
+    scores = jnp.asarray(rng.normal(size=(8, 30)), jnp.float32)
+    truth = jnp.asarray(rng.integers(0, 30, size=8), jnp.int32)
+    top = topk_items(scores, 5)
+    np.testing.assert_allclose(
+        float(recall_at_k(scores, truth, 5)),
+        float(recall_from_topk(top, truth)),
+    )
+    np.testing.assert_allclose(
+        float(ndcg_at_k(scores, truth, 5)),
+        float(ndcg_from_topk(top, truth)),
+    )
+
+
+def test_tied_scores_rank_ascending_id():
+    # all-equal scores: lax.top_k stability ⇒ ids 0..k-1
+    scores = jnp.ones((2, 10))
+    top = topk_items(scores, 4)
+    np.testing.assert_array_equal(np.asarray(top), [[0, 1, 2, 3]] * 2)
+    # a tie group straddling the k boundary keeps the smaller ids
+    scores = jnp.asarray([[1.0, 2.0, 2.0, 2.0, 0.5]])
+    top = topk_items(scores, 2)
+    np.testing.assert_array_equal(np.asarray(top), [[1, 2]])
+
+
+def test_exclude_mask_drops_excluded_ids():
+    scores = jnp.asarray([[5.0, 4.0, 3.0, 2.0, 1.0]])
+    mask = jnp.asarray([[True, False, True, False, False]])
+    top = topk_items(scores, 2, mask)
+    np.testing.assert_array_equal(np.asarray(top), [[1, 3]])
+    # excluded true item can never be a hit (its score is −inf, and at
+    # least k admissible items outrank it here)
+    assert float(recall_at_k(scores, jnp.asarray([0]), 2, mask)) == 0.0
+
+
+def test_fully_excluded_row_dense_caveat_vs_streaming_policy():
+    """Dense top_k over a fully-masked row returns arbitrary REAL ids (the
+    documented caveat) — the streaming path's −1 policy is what makes such
+    rows guaranteed misses. from_topk treats −1 correctly."""
+    top_streaming = jnp.full((1, 3), -1)
+    assert float(recall_from_topk(top_streaming, jnp.asarray([2]))) == 0.0
+    assert float(ndcg_from_topk(top_streaming, jnp.asarray([2]))) == 0.0
+
+
+def test_recall_ndcg_multi_matches_single_item_path():
+    rng = np.random.default_rng(1)
+    scores = rng.normal(size=(6, 40)).astype(np.float32)
+    truth = rng.integers(0, 40, size=6)
+    r_multi, n_multi = recall_ndcg_multi(scores, [[t] for t in truth], 7)
+    r = float(recall_at_k(jnp.asarray(scores), jnp.asarray(truth), 7))
+    n = float(ndcg_at_k(jnp.asarray(scores), jnp.asarray(truth), 7))
+    np.testing.assert_allclose(r_multi, r, rtol=1e-6)
+    np.testing.assert_allclose(n_multi, n, rtol=1e-6)
+
+
+def test_recall_ndcg_multi_exclude_and_empty_truth():
+    scores = np.asarray([[3.0, 2.0, 1.0, 0.0]] * 2, np.float32)
+    # row 0: truth {0} but 0 excluded ⇒ miss; row 1 empty truth ⇒ skipped
+    r, n = recall_ndcg_multi(
+        scores, [[0], []], 2,
+        exclude_mask=np.asarray([[True, False, False, False]] * 2),
+    )
+    assert r == 0.0 and n == 0.0

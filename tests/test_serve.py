@@ -36,6 +36,34 @@ def test_retrieval_topk_exact():
                                np.sort(full[np.asarray(ids)])[::-1], rtol=1e-5)
 
 
+def test_retrieval_topk_batched_matches_per_row():
+    rng = np.random.default_rng(2)
+    table = jnp.asarray(rng.normal(size=(3000, 8)), jnp.float32)
+    users = jnp.asarray(rng.normal(size=(5, 8)), jnp.float32)
+    scores, ids = retrieval_topk(mf_retrieval_score_fn(users, table), 3000,
+                                 k=20, chunk=512)
+    assert scores.shape == (5, 20) and ids.shape == (5, 20)
+    full = np.asarray(users @ table.T)
+    for r in range(5):
+        s1, i1 = retrieval_topk(mf_retrieval_score_fn(users[r], table), 3000,
+                                k=20, chunk=512)
+        np.testing.assert_array_equal(np.asarray(ids)[r], np.asarray(i1))
+        np.testing.assert_array_equal(
+            np.asarray(ids)[r], np.argsort(-full[r], kind="stable")[:20])
+
+
+def test_retrieval_topk_short_catalogue_no_placeholder_leak():
+    table = jnp.asarray(np.random.default_rng(3).normal(size=(7, 4)), jnp.float32)
+    user = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    scores, ids = retrieval_topk(mf_retrieval_score_fn(user, table), 7, k=12)
+    # first 7 slots are the real catalogue, exactly ranked
+    np.testing.assert_array_equal(
+        np.asarray(ids)[:7], np.argsort(-np.asarray(table @ user), kind="stable")[:7])
+    # tail is (−inf, −1): id 0 never leaks as a fake recommendation
+    assert bool((np.asarray(ids)[7:] == -1).all())
+    assert bool(np.isneginf(np.asarray(scores)[7:]).all())
+
+
 def test_bulk_score_chunking():
     w = jnp.asarray([0.5, -1.0, 2.0, 0.25])
 

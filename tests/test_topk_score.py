@@ -1,0 +1,141 @@
+"""Fused score+top-K kernel: oracle parity, edge cases, and the engine
+contract across the whole k-separable model zoo."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.design import make_design
+from repro.core.models import fm, mf, mfsi, parafac, tucker
+from repro.core.models.parafac import TensorContext
+from repro.kernels.topk_score import topk_score, topk_score_ref
+from repro.serve.engine import RetrievalEngine, exclude_mask_from_lists
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), jnp.float32)
+
+
+def test_matches_ref_and_dense_topk_nondivisible_blocks():
+    phi, psi = _rand((9, 24), 0), _rand((301, 24), 1)
+    s, i = topk_score(phi, psi, 17, block_items=128)  # 301 % 128 != 0
+    rs, ri = topk_score_ref(phi, psi, 17)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-6, atol=1e-6)
+    ds, di = jax.lax.top_k(phi @ psi.T, 17)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(di))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ds), rtol=1e-6, atol=1e-6)
+
+
+def test_batch_larger_than_block_b():
+    phi, psi = _rand((50, 8), 2), _rand((200, 8), 3)
+    s, i = topk_score(phi, psi, 10, block_b=16, block_items=64)
+    ds, di = jax.lax.top_k(phi @ psi.T, 10)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(di))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ds), rtol=1e-6, atol=1e-6)
+
+
+def test_tied_scores_rank_ascending_id():
+    # duplicated ψ rows across different blocks ⇒ exact score ties
+    base = _rand((40, 6), 4)
+    psi = jnp.concatenate([base, base, base], axis=0)  # ids i, i+40, i+80 tie
+    phi = _rand((5, 6), 5)
+    s, i = topk_score(phi, psi, 30, block_items=64)
+    rs, ri = topk_score_ref(phi, psi, 30)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    # dense lax.top_k over the id-ordered row is the documented tie policy
+    ds, di = jax.lax.top_k(phi @ psi.T, 30)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(di))
+
+
+def test_exclude_mask_and_fully_masked_row():
+    rng = np.random.default_rng(6)
+    phi, psi = _rand((7, 12), 6), _rand((90, 12), 7)
+    excl = jnp.asarray(rng.random((7, 90)) < 0.4)
+    excl = excl.at[2, :].set(True)  # row 2: nothing admissible
+    s, i = topk_score(phi, psi, 12, excl, block_items=32)
+    rs, ri = topk_score_ref(phi, psi, 12, excl)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    # excluded ids never leak; fully-masked row is all (−inf, −1)
+    assert bool((np.asarray(i)[2] == -1).all())
+    assert bool(np.isneginf(np.asarray(s)[2]).all())
+    got = np.asarray(i)
+    mask = np.asarray(excl)
+    for r in range(7):
+        real = got[r][got[r] >= 0]
+        assert not mask[r, real].any()
+
+
+def test_k_larger_than_n_items():
+    phi, psi = _rand((3, 5), 8), _rand((11, 5), 9)
+    s, i = topk_score(phi, psi, 20, block_items=128)
+    rs, ri = topk_score_ref(phi, psi, 20)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    assert bool((np.asarray(i)[:, 11:] == -1).all())
+    assert bool(np.isneginf(np.asarray(s)[:, 11:]).all())
+    # the 11 real slots are the full catalogue, exactly ranked
+    ds, di = jax.lax.top_k(phi @ psi.T, 11)
+    np.testing.assert_array_equal(np.asarray(i)[:, :11], np.asarray(di))
+
+
+def _model_phi_psi(name, rng):
+    """Tiny instance of each zoo model; returns (phi (B, D), psi (I, D))."""
+    n_ctx, n_items, b, k = 20, 37, 9, 6
+    if name == "mf":
+        params = mf.init(jax.random.PRNGKey(0), n_ctx, n_items, k)
+        return mf.build_phi(params, jnp.arange(b)), mf.export_psi(params)
+    if name == "parafac":
+        params = parafac.init(jax.random.PRNGKey(1), 8, 7, n_items, k)
+        c1 = jnp.asarray(rng.integers(0, 8, b), jnp.int32)
+        c2 = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
+        return parafac.build_phi(params, c1, c2), parafac.export_psi(params)
+    if name == "tucker":
+        params = tucker.init(jax.random.PRNGKey(2), 8, 7, n_items, 4, 3, k)
+        c1 = jnp.asarray(rng.integers(0, 8, b), jnp.int32)
+        c2 = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
+        return tucker.build_phi(params, c1, c2), tucker.export_psi(params)
+    x = make_design(
+        [dict(name="id", ids=np.arange(n_ctx) % 11, vocab=11),
+         dict(name="grp", ids=rng.integers(0, 5, n_ctx), vocab=5)], n_ctx)
+    z = make_design(
+        [dict(name="item_id", ids=np.arange(n_items), vocab=n_items),
+         dict(name="genre", ids=rng.integers(0, 7, n_items), vocab=7)], n_items)
+    if name == "mfsi":
+        params = mfsi.init(jax.random.PRNGKey(3), x.p, z.p, k)
+        return (mfsi.build_phi(params, x, jnp.arange(b)),
+                mfsi.export_psi(params, z))
+    hp = fm.FMHyperParams(k=k)
+    params = fm.init(jax.random.PRNGKey(4), x.p, z.p, k)
+    # break the all-zero linear/bias init so ψ_spec is a real column
+    params = params._replace(
+        b=jnp.asarray(0.3), w_lin=_rand((x.p,), 10), h_lin=_rand((z.p,), 11)
+    )
+    return (fm.build_phi(params, x, hp, jnp.arange(b)),
+            fm.export_psi(params, z, hp))
+
+
+@pytest.mark.parametrize("name", ["mf", "mfsi", "fm", "parafac", "tucker"])
+def test_streaming_matches_dense_topk_all_models(name):
+    """The acceptance check: fused kernel == dense lax.top_k for the zoo,
+    with and without an exclude mask, through the RetrievalEngine."""
+    rng = np.random.default_rng(42)
+    phi, psi = _model_phi_psi(name, rng)
+    # model predict ⇔ ⟨φ, ψ⟩ consistency is covered by each model's own
+    # tests; here we pin streaming top-k to the dense path over Φ·Ψᵀ
+    engine = RetrievalEngine(psi, lambda p=phi: p, k=12, block_items=32)
+    s, i = engine.topk()
+    ds, di = jax.lax.top_k(engine.scores(phi), 12)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(di))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ds), rtol=1e-5, atol=1e-6)
+
+    excl_lists = [rng.choice(psi.shape[0], size=5, replace=False)
+                  for _ in range(phi.shape[0])]
+    mask = exclude_mask_from_lists(excl_lists, psi.shape[0])
+    s2, i2 = engine.topk(exclude_mask=mask)
+    rs2, ri2 = topk_score_ref(phi, psi, 12, mask)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(ri2))
+    got = np.asarray(i2)
+    m = np.asarray(mask)
+    for r in range(got.shape[0]):
+        real = got[r][got[r] >= 0]
+        assert not m[r, real].any()
