@@ -2,43 +2,22 @@
 
 ``get_config(arch_id)`` returns the exact published configuration;
 ``get_smoke_config(arch_id)`` returns a reduced same-family config for CPU
-smoke tests. ``ARCH_IDS`` lists the 10 assigned architectures plus the
-paper's own iCD configs.
+smoke tests. ``ARCH_IDS`` lists the paper's own iCD configs — the
+seed-template LM/GNN/RecSys zoo configs were removed in PR 4 (they were
+unrelated to this paper; the shared dataclasses in ``configs.base`` stay
+for the generic launch/model code).
 """
 from __future__ import annotations
 
 import importlib
 
 ARCH_IDS = [
-    # LM family
-    "gemma2-2b",
-    "qwen1.5-4b",
-    "deepseek-67b",
-    "olmoe-1b-7b",
-    "deepseek-moe-16b",
-    # GNN
-    "graphsage-reddit",
-    # RecSys
-    "dlrm-rm2",
-    "din",
-    "dcn-v2",
-    "bst",
     # the paper's own models
     "icd-mf",
     "icd-fm",
 ]
 
 _MODULES = {
-    "gemma2-2b": "repro.configs.gemma2_2b",
-    "qwen1.5-4b": "repro.configs.qwen15_4b",
-    "deepseek-67b": "repro.configs.deepseek_67b",
-    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
-    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
-    "graphsage-reddit": "repro.configs.graphsage_reddit",
-    "dlrm-rm2": "repro.configs.dlrm_rm2",
-    "din": "repro.configs.din",
-    "dcn-v2": "repro.configs.dcn_v2",
-    "bst": "repro.configs.bst",
     "icd-mf": "repro.configs.icd_mf",
     "icd-fm": "repro.configs.icd_fm",
 }

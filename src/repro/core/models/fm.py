@@ -54,7 +54,13 @@ from repro.core.models.mf_padded import (
     transfer_item_to_ctx,
 )
 from repro.core.models.mfsi import _field_layers
-from repro.kernels.cd_sweep.ops import cd_resid_patch, cd_slab_reduce
+from repro.kernels import vmem
+from repro.kernels.cd_sweep.ops import (
+    cd_resid_patch,
+    cd_resid_patch_gather,
+    cd_slab_reduce,
+    cd_slab_reduce_gather,
+)
 from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
 
@@ -87,6 +93,10 @@ class FMHyperParams:
     block_k: int = 0  # dims per fused slab-reduce/resid-patch dispatch on
     #                   the padded layout (epoch_padded): 0 = auto
     #                   (min(k, 8)), 1 = per-dimension baseline
+    psi_dispatch: str = "gather"  # fused-path Ψ routing: 'gather' =
+    #                   in-kernel gather (no (n, k_b+1, D_pad) intermediate;
+    #                   auto-fallback on VMEM overflow), 'pregather' =
+    #                   host-side pre-gathered tile
 
 
 def init(key: jax.Array, p_ctx: int, p_item: int, k: int, sigma: float = 0.1) -> FMParams:
@@ -321,25 +331,44 @@ def _side_sweep_padded(
     ``cd_slab_reduce`` over [ψ_{f0..f0+k_b} | ψ_spec] feeds all per-context
     caches (q, u, p2, p1 and the cross-dim coupling), the field-level
     Newton steps run in XLA, one rank-(k_b+1) ``cd_resid_patch`` closes the
-    block. Same fixed point as :func:`_side_sweep` (parity-tested)."""
+    block. Same fixed point as :func:`_side_sweep` (parity-tested).
+
+    Ψ routing: in-kernel gather by default — the `(n_other, kb+1)` slab
+    ``[Ψ[:, blk] | ψ_spec]`` rides into the kernels with the id grid, so
+    the `(n, kb+1, d_pad)` tile never exists in HBM; pre-gathered when
+    ``hp.psi_dispatch='pregather'`` or the slab busts the VMEM budget."""
     n_rows = design.n_rows
     layers = _field_layers(design, hp)
     psi_spec_pad = jnp.take(other_ext[:, spec_col], ids_pad)   # (n, d_pad)
     p0 = jnp.sum(alpha_pad * psi_spec_pad * psi_spec_pad, axis=1)
     j_ss = other_j[spec_col, spec_col]
+    use_gather, _ = vmem.resolve_cd_sweep_dispatch(
+        ids_pad.shape[1], k_b + 1, other_ext.shape[0], n_rows=n_rows,
+        hold_tile=True, prefer_gather=sweeps.resolve_psi_dispatch(hp.psi_dispatch),
+    )
 
     # ---- embedding dims, blocked ----------------------------------------
     def block_body(f0, kb, carry):
         table, self_ext, e_pad = carry
         blk = slice(f0, f0 + kb)
-        psi_blk = jnp.concatenate(
-            [
-                jnp.moveaxis(jnp.take(other_ext[:, blk], ids_pad, axis=0), -1, 1),
-                psi_spec_pad[:, None, :],
-            ],
-            axis=1,
-        )                                                      # (n, kb+1, d_pad)
-        q_slab, p_slab = cd_slab_reduce(psi_blk, alpha_pad, e_pad)
+        if use_gather:
+            # ψ slab [Ψ[:, blk] | ψ_spec] (n_other, kb+1) — kernel gathers
+            psi_tab = jnp.concatenate(
+                [other_ext[:, blk], other_ext[:, spec_col:spec_col + 1]],
+                axis=1,
+            )
+            q_slab, p_slab = cd_slab_reduce_gather(
+                psi_tab, ids_pad, alpha_pad, e_pad
+            )
+        else:
+            psi_blk = jnp.concatenate(
+                [
+                    jnp.moveaxis(jnp.take(other_ext[:, blk], ids_pad, axis=0), -1, 1),
+                    psi_spec_pad[:, None, :],
+                ],
+                axis=1,
+            )                                                  # (n, kb+1, d_pad)
+            q_slab, p_slab = cd_slab_reduce(psi_blk, alpha_pad, e_pad)
         u = q_slab[:, -1]
         dphi_cols = []
         dphi_s_tot = jnp.zeros((n_rows,), jnp.float32)
@@ -374,7 +403,10 @@ def _side_sweep_padded(
             dphi_cols.append(dphi_f_tot)
             dphi_s_tot = dphi_s_tot + dphi_s_dim
         dphi_blk = jnp.stack(dphi_cols + [dphi_s_tot], axis=1)  # (n, kb+1)
-        e_pad = cd_resid_patch(psi_blk, e_pad, dphi_blk)
+        if use_gather:
+            e_pad = cd_resid_patch_gather(psi_tab, ids_pad, e_pad, dphi_blk)
+        else:
+            e_pad = cd_resid_patch(psi_blk, e_pad, dphi_blk)
         return table, self_ext, e_pad
 
     table, self_ext, e_pad = sweeps.sweep_columns(

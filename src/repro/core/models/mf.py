@@ -47,6 +47,11 @@ class MFHyperParams:
     #                       lets XLA pipeline/fuse across columns on TPU)
     block_k: int = 0  # columns per fused cd_sweep dispatch on the padded
     #                   layout: 0 = auto (min(k, 8)), 1 = per-column kernel
+    psi_dispatch: str = "gather"  # fused-path Ψ routing: 'gather' = in-kernel
+    #                   gather from the ψ table (no (C, k_b, D_pad) HBM
+    #                   intermediate; falls back automatically when the ψ
+    #                   slab busts the VMEM budget), 'pregather' = host-side
+    #                   pre-gathered Ψ tile (the PR 1–2 path)
 
 
 def init(key: jax.Array, n_ctx: int, n_items: int, k: int, sigma: float = 0.1) -> MFParams:

@@ -22,6 +22,12 @@ one ``lax.all_to_all``. All blocks are padded to uniform size (α=0 padding).
 Per-epoch wire traffic per device (C contexts, I items, nnz observations):
   2·k² (Grams) + k·(C+I)·4B (column all-gathers) + 2·(nnz/D)·4B (routing)
 — compare GSPMD baseline: see EXPERIMENTS.md §Perf hillclimb #1.
+
+The per-shard f*-loops route through ``core.sweeps.sweep_columns`` with the
+same Newton body as ``mf._side_sweep`` (``sweeps.newton_delta`` — incl. the
+denominator clamp that keeps l2=0 empty contexts finite); only the
+opposite-column delivery (all-gather / all-to-all route) is distributed.
+Parity vs ``mf.epoch`` is pinned by tests/test_mf_dist.py.
 """
 from __future__ import annotations
 
@@ -31,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sweeps
 from repro.core.models.mf import MFHyperParams, MFParams
 from repro.sparse.interactions import Interactions
 
@@ -217,48 +224,57 @@ def build_epoch(mesh, hp: MFHyperParams, sd_template: ShardedMF,
             return _route(vals_owner.astype(wire_dtype), out_idx, in_idx,
                           p_dest, axes).astype(jnp.float32)
 
+        def side_sweep(side_m, other_m, j_o, rows_l, alpha_l, e_l, n_per,
+                       opp_global, opp_local, out_idx, in_idx):
+            """One side's k-column sweep through ``sweeps.sweep_columns``:
+            the same per-column Newton body as ``mf._side_sweep`` (incl. the
+            ``newton_delta`` denominator clamp), with the opposite column
+            delivered over the wire per dimension."""
+
+            def body(f, carry):
+                side_m, e = carry
+                o_col = sweeps.take_col(other_m, f)
+                if variant == "gather":
+                    col = jax.lax.all_gather(
+                        o_col.astype(wire_dtype), axes, tiled=True
+                    ).astype(jnp.float32)
+                    o_vals = jnp.take(col, opp_global)
+                else:  # owners evaluate at their entries, route per-nnz
+                    o_vals = opposite_vals(o_col, opp_local, out_idx, in_idx,
+                                           alpha_l.shape[0])
+                s_col = sweeps.take_col(side_m, f)
+                lp = jax.ops.segment_sum(alpha_l * e * o_vals, rows_l, n_per)
+                lpp = jax.ops.segment_sum(alpha_l * o_vals * o_vals, rows_l,
+                                          n_per)
+                rp = side_m @ sweeps.take_col(j_o, f)
+                rpp = jnp.take(sweeps.take_col(j_o, f), f)
+                delta = sweeps.newton_delta(
+                    sweeps.NewtonParts(lp + hp.alpha0 * rp,
+                                       lpp + hp.alpha0 * rpp),
+                    s_col, hp.l2, hp.eta,
+                )
+                e = e + jnp.take(delta, rows_l) * o_vals
+                return sweeps.put_col(side_m, f, s_col + delta), e
+
+            return sweeps.sweep_columns(k, body, (side_m, e_l),
+                                        unroll=hp.unroll)
+
         # ---------------- context sweep ----------------
         j_i = gram_psum(h_loc)
-        for f in range(k):
-            if variant == "gather":
-                h_col = jax.lax.all_gather(
-                    h_loc[:, f].astype(wire_dtype), axes, tiled=True
-                ).astype(jnp.float32)
-                psi = jnp.take(h_col, item_g)
-            else:  # item owners evaluate ψ at their entries, route to ctx
-                psi = opposite_vals(h_loc[:, f], item_l, recv_pos, send_idx,
-                                    alpha_c.shape[0])
-            lp = jax.ops.segment_sum(alpha_c * e_loc * psi, ctx_l, sd.c_per)
-            lpp = jax.ops.segment_sum(alpha_c * psi * psi, ctx_l, sd.c_per)
-            rp = w_loc @ j_i[:, f]
-            num = lp + hp.alpha0 * rp + hp.l2 * w_loc[:, f]
-            den = lpp + hp.alpha0 * j_i[f, f] + hp.l2
-            delta = -hp.eta * num / jnp.maximum(den, 1e-12)
-            e_loc = e_loc + jnp.take(delta, ctx_l) * psi
-            w_loc = w_loc.at[:, f].set(w_loc[:, f] + delta)
+        w_loc, e_loc = side_sweep(
+            w_loc, h_loc, j_i, ctx_l, alpha_c, e_loc, sd.c_per,
+            item_g, item_l, recv_pos, send_idx,
+        )
 
         # ---------------- residuals: ctx-major → item-major ----------------
         e_item = _route(e_loc, send_idx, recv_pos, alpha_i.shape[0], axes)
 
         # ---------------- item sweep ----------------
         j_c = gram_psum(w_loc)
-        for f in range(k):
-            if variant == "gather":
-                w_col = jax.lax.all_gather(
-                    w_loc[:, f].astype(wire_dtype), axes, tiled=True
-                ).astype(jnp.float32)
-                phi = jnp.take(w_col, ctx_g)
-            else:  # ctx owners evaluate φ at their entries, route to items
-                phi = opposite_vals(w_loc[:, f], ctx_l, send_idx, recv_pos,
-                                    alpha_i.shape[0])
-            lp = jax.ops.segment_sum(alpha_i * e_item * phi, item_l, sd.i_per)
-            lpp = jax.ops.segment_sum(alpha_i * phi * phi, item_l, sd.i_per)
-            rp = h_loc @ j_c[:, f]
-            num = lp + hp.alpha0 * rp + hp.l2 * h_loc[:, f]
-            den = lpp + hp.alpha0 * j_c[f, f] + hp.l2
-            delta = -hp.eta * num / jnp.maximum(den, 1e-12)
-            e_item = e_item + jnp.take(delta, item_l) * phi
-            h_loc = h_loc.at[:, f].set(h_loc[:, f] + delta)
+        h_loc, e_item = side_sweep(
+            h_loc, w_loc, j_c, item_l, alpha_i, e_item, sd.i_per,
+            ctx_g, ctx_l, send_idx, recv_pos,
+        )
 
         # ---------------- residuals back ----------------
         e_loc = _route(e_item, recv_pos, send_idx, alpha_c.shape[0], axes)

@@ -12,12 +12,14 @@ sweep order) but laid out for the Pallas kernels:
     instead of k); ``hp.block_k=1`` falls back to the per-column
     ``cd_update`` kernel.
 
-CAPACITY trade of the fused path: each block dispatch pre-gathers a
-(C, k_b, D_pad) Ψ tile — k_b× the residual grid — so peak HBM footprint
-grows ~k_b× versus the per-column path's (C, D_pad) ψ column. ``block_k``
-is the bandwidth↔capacity knob; drop it (or set 1) when the grids are near
-the per-device memory budget. Removing the intermediate entirely needs the
-in-kernel-gather variant (ROADMAP follow-up).
+CAPACITY: the fused path defaults to the IN-KERNEL GATHER kernels
+(``hp.psi_dispatch='gather'``): each block dispatch ships the `(n_items,
+k_b)` ψ slab plus the `(C, D_pad)` item-id grid and the kernel gathers Ψ
+rows itself, so the `(C, k_b, D_pad)` pre-gathered tile (~k_b× the
+residual grid, the PR 1–2 capacity trade) never exists in HBM. The
+pre-gathered path remains as ``hp.psi_dispatch='pregather'`` and as the
+automatic fallback when the ψ slab alone busts the VMEM budget
+(``kernels/vmem.resolve_cd_sweep_dispatch``).
 
 This is the "beyond-paper optimized" §Perf variant; the equivalence test
 (tests/test_mf_padded.py) pins it to the reference epoch. Degree-skewed data
@@ -37,7 +39,7 @@ import numpy as np
 from repro.core import sweeps
 from repro.core.models.mf import MFHyperParams, MFParams
 from repro.kernels import vmem
-from repro.kernels.cd_sweep.ops import cd_block_sweep
+from repro.kernels.cd_sweep.ops import cd_block_sweep, cd_block_sweep_gather
 from repro.kernels.cd_update.ops import cd_column_update
 from repro.kernels.gram.ops import gram as gram_kernel
 from repro.sparse.interactions import Interactions
@@ -138,8 +140,13 @@ def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
     n = side.shape[0]
     use_block = k_b > 1 and not hp.unroll  # unroll = explicit per-column ask
 
-    # row tile of the cd_sweep kernel dispatches — shared VMEM-budget fit
-    block_ctx = vmem.cd_sweep_block_ctx(ids_pad.shape[1], k_b, n_rows=n)
+    # Ψ routing + row tile of the cd_sweep dispatches (shared VMEM budget):
+    # in-kernel gather by default, pre-gathered tile when pinned or when the
+    # ψ slab alone does not fit VMEM.
+    use_gather, block_ctx = vmem.resolve_cd_sweep_dispatch(
+        ids_pad.shape[1], k_b, other.shape[0], n_rows=n,
+        prefer_gather=sweeps.resolve_psi_dispatch(hp.psi_dispatch),
+    )
 
     if use_block:
         # Pad rows to the kernel tile ONCE per sweep — otherwise every block
@@ -167,16 +174,27 @@ def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
 
     def block_body(f0, kb, carry):
         side_m, e_pad = carry
-        # Ψ tile for the whole block: (n, kb, d_pad), gathered once
-        psi_blk = jnp.moveaxis(jnp.take(other[:, f0:f0 + kb], ids_pad, axis=0),
-                               -1, 1)
         r1_blk = side_m @ other_j[:, f0:f0 + kb]                 # R'/2 slab
-        w_new, e_pad = cd_block_sweep(
-            psi_blk, alpha_pad, e_pad, side_m[:, f0:f0 + kb], r1_blk,
-            other_j[f0:f0 + kb, f0:f0 + kb],
-            alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
-            block_ctx=block_ctx,
-        )
+        if use_gather:
+            # ψ slab (n_items, kb) + id grid — the kernel gathers Ψ rows
+            w_new, e_pad = cd_block_sweep_gather(
+                other[:, f0:f0 + kb], ids_pad, alpha_pad, e_pad,
+                side_m[:, f0:f0 + kb], r1_blk,
+                other_j[f0:f0 + kb, f0:f0 + kb],
+                alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+                block_ctx=block_ctx,
+            )
+        else:
+            # pre-gathered Ψ tile (n, kb, d_pad) — the capacity fallback
+            psi_blk = jnp.moveaxis(
+                jnp.take(other[:, f0:f0 + kb], ids_pad, axis=0), -1, 1
+            )
+            w_new, e_pad = cd_block_sweep(
+                psi_blk, alpha_pad, e_pad, side_m[:, f0:f0 + kb], r1_blk,
+                other_j[f0:f0 + kb, f0:f0 + kb],
+                alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+                block_ctx=block_ctx,
+            )
         return side_m.at[:, f0:f0 + kb].set(w_new), e_pad
 
     side, e_pad = sweeps.sweep_columns(

@@ -61,7 +61,13 @@ from repro.core.models.mf_padded import (
     transfer_ctx_to_item,
     transfer_item_to_ctx,
 )
-from repro.kernels.cd_sweep.ops import cd_resid_patch, cd_slab_reduce
+from repro.kernels import vmem
+from repro.kernels.cd_sweep.ops import (
+    cd_resid_patch,
+    cd_resid_patch_gather,
+    cd_slab_reduce,
+    cd_slab_reduce_gather,
+)
 from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
 
@@ -88,6 +94,10 @@ class MFSIHyperParams:
     block_k: int = 0  # dims per fused slab-reduce/resid-patch dispatch on
     #                   the padded layout (epoch_padded): 0 = auto
     #                   (min(k, 8)), 1 = per-dimension baseline
+    psi_dispatch: str = "gather"  # fused-path Ψ routing: 'gather' =
+    #                   in-kernel gather (no (n, k_b, D_pad) intermediate;
+    #                   auto-fallback on VMEM overflow), 'pregather' =
+    #                   host-side pre-gathered tile
 
 
 def init(key: jax.Array, p_ctx: int, p_item: int, k: int, sigma: float = 0.1) -> MFSIParams:
@@ -236,17 +246,32 @@ def _side_sweep_padded(
     """Fused side sweep: one ``cd_slab_reduce`` per block feeds the
     field-level Newton steps of all k_b dimensions (q patched across block
     columns through the coupling slab P), one ``cd_resid_patch`` closes the
-    block. Same fixed point as :func:`_side_sweep` (parity-tested)."""
+    block. Same fixed point as :func:`_side_sweep` (parity-tested).
+
+    Ψ routing: in-kernel gather by default (the ψ slab ``other_psi[:, blk]``
+    rides into the kernels with the id grid; no ``(n, kb, d_pad)`` HBM
+    tile), pre-gathered when ``hp.psi_dispatch='pregather'`` or the slab
+    busts the VMEM budget."""
     n_rows = design.n_rows
     layers = _field_layers(design, hp)
+    use_gather, _ = vmem.resolve_cd_sweep_dispatch(
+        ids_pad.shape[1], k_b, other_psi.shape[0], n_rows=n_rows,
+        hold_tile=True, prefer_gather=sweeps.resolve_psi_dispatch(hp.psi_dispatch),
+    )
 
     def block_body(f0, kb, carry):
         table, phi_m, e_pad = carry
         blk = slice(f0, f0 + kb)
-        psi_blk = jnp.moveaxis(
-            jnp.take(other_psi[:, blk], ids_pad, axis=0), -1, 1
-        )                                                  # (n, kb, d_pad)
-        q_slab, p_slab = cd_slab_reduce(psi_blk, alpha_pad, e_pad)
+        if use_gather:
+            psi_tab = other_psi[:, blk]                    # (n_other, kb)
+            q_slab, p_slab = cd_slab_reduce_gather(
+                psi_tab, ids_pad, alpha_pad, e_pad
+            )
+        else:
+            psi_blk = jnp.moveaxis(
+                jnp.take(other_psi[:, blk], ids_pad, axis=0), -1, 1
+            )                                              # (n, kb, d_pad)
+            q_slab, p_slab = cd_slab_reduce(psi_blk, alpha_pad, e_pad)
         dphi_cols = []
         for j in range(kb):
             f = f0 + j
@@ -270,7 +295,11 @@ def _side_sweep_padded(
                     dphi_tot[:, None] * p_slab[:, j, j + 1:kb]
                 )
             dphi_cols.append(dphi_tot)
-        e_pad = cd_resid_patch(psi_blk, e_pad, jnp.stack(dphi_cols, axis=1))
+        dphi_blk = jnp.stack(dphi_cols, axis=1)
+        if use_gather:
+            e_pad = cd_resid_patch_gather(psi_tab, ids_pad, e_pad, dphi_blk)
+        else:
+            e_pad = cd_resid_patch(psi_blk, e_pad, dphi_blk)
         return table, phi_m, e_pad
 
     return sweeps.sweep_columns(

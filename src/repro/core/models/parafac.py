@@ -41,8 +41,14 @@ import numpy as np
 from repro.core import sweeps
 from repro.core.gram import gram
 from repro.core.implicit import explicit_loss
-from repro.core.padded import PaddedGroup, build_group
-from repro.kernels.cd_sweep.ops import cd_block_sweep, cd_block_sweep_rowpatch
+from repro.core.padded import PaddedGroup, append_sentinel_row, build_group
+from repro.kernels import vmem
+from repro.kernels.cd_sweep.ops import (
+    cd_block_sweep,
+    cd_block_sweep_gather,
+    cd_block_sweep_rowpatch,
+    cd_block_sweep_rowpatch_gather,
+)
 from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
 
@@ -80,6 +86,11 @@ class PARAFACHyperParams:
     block_k: int = 0  # columns per fused cd_sweep dispatch on the padded
     #                   layout (epoch_padded): 0 = auto (min(k, 8)),
     #                   1 = per-column baseline through the block path
+    psi_dispatch: str = "gather"  # fused-path Ψ routing: 'gather' =
+    #                   in-kernel gather of the flat pseudo-ψ slab (no
+    #                   (n, k_b, D_pad) scatter_blk intermediate; auto-
+    #                   fallback on VMEM overflow), 'pregather' = host-side
+    #                   scatter/pre-gather (the PR 2 path)
 
 
 @jax.tree_util.register_dataclass
@@ -230,9 +241,18 @@ def _context_mode_sweep_padded(
     """Fused context-mode sweep: ``k_b`` columns per ``cd_block_sweep_rowpatch``
     dispatch. Slab state per block — R'/2 ``(n, k_b)`` via Φ·J over pairs and
     the per-row patch tensor P = J ⊙ K (diag = R''/2, eqs. 37–38); the
-    kernel's Gauss–Seidel r1 patch keeps later block columns exact."""
+    kernel's Gauss–Seidel r1 patch keeps later block columns exact.
+
+    Ψ routing: the flat per-nnz pseudo-ψ ``s_nnz (nnz, k_b)`` rides into
+    the gather kernel as a slab (+ zero sentinel row) with ``pg.flat_ids``
+    by default — ``scatter_blk``'s ``(n, k_b, d_pad)`` intermediate only
+    exists on the ``'pregather'``/VMEM-overflow fallback."""
     pair_of_nnz = data.ctx
     w_nnz = jnp.take(w_items, data.item, axis=0)               # (nnz, k)
+    use_gather, _ = vmem.resolve_cd_sweep_dispatch(
+        pg.d_pad, k_b, data.nnz + 1, n_rows=n_side,
+        prefer_gather=sweeps.resolve_psi_dispatch(hp.psi_dispatch),
+    )
 
     j_p = partner.T @ partner if hp.dense_context else None  # eq. 39 K
 
@@ -259,11 +279,18 @@ def _context_mode_sweep_padded(
             )
         p_blk = k_blk * j_i[blk, blk][None, :, :]                    # J ⊙ K
         s_nnz = jnp.take(v_pair, pair_of_nnz, axis=0) * w_nnz[:, blk]
-        psi_blk = pg.scatter_blk(s_nnz)                              # (n, kb, d_pad)
-        w_new, e_pad = cd_block_sweep_rowpatch(
-            psi_blk, pg.alpha_pad, e_pad, side_m[:, blk], r1_blk, p_blk,
-            alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
-        )
+        if use_gather:
+            w_new, e_pad = cd_block_sweep_rowpatch_gather(
+                append_sentinel_row(s_nnz), pg.flat_ids, pg.alpha_pad,
+                e_pad, side_m[:, blk], r1_blk, p_blk,
+                alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+            )
+        else:
+            psi_blk = pg.scatter_blk(s_nnz)                          # (n, kb, d_pad)
+            w_new, e_pad = cd_block_sweep_rowpatch(
+                psi_blk, pg.alpha_pad, e_pad, side_m[:, blk], r1_blk, p_blk,
+                alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+            )
         return side_m.at[:, blk].set(w_new), e_pad
 
     return sweeps.sweep_columns(
@@ -281,20 +308,32 @@ def _item_sweep_padded(
     k_b: int,
 ) -> Tuple[jax.Array, jax.Array]:
     """MF-like fused item sweep (shared-Gram ``cd_block_sweep``): ψ columns
-    gathered from Φ through the item-major pair-id grid."""
+    gathered from Φ through the item-major pair-id grid — in-kernel by
+    default (the Φ slab is the ψ table), pre-gathered on fallback."""
+    use_gather, _ = vmem.resolve_cd_sweep_dispatch(
+        padded.gi.d_pad, k_b, phi_pairs.shape[0], n_rows=w_m.shape[0],
+        prefer_gather=sweeps.resolve_psi_dispatch(hp.psi_dispatch),
+    )
 
     def block_body(f0, kb, carry):
         w_m, e_pad = carry
         blk = slice(f0, f0 + kb)
-        psi_blk = jnp.moveaxis(
-            jnp.take(phi_pairs[:, blk], padded.pair_ids_item, axis=0), -1, 1
-        )                                                            # (n, kb, d_pad)
         r1_blk = w_m @ j_c[:, blk]
-        w_new, e_pad = cd_block_sweep(
-            psi_blk, padded.gi.alpha_pad, e_pad, w_m[:, blk], r1_blk,
-            j_c[blk, blk],
-            alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
-        )
+        if use_gather:
+            w_new, e_pad = cd_block_sweep_gather(
+                phi_pairs[:, blk], padded.pair_ids_item, padded.gi.alpha_pad,
+                e_pad, w_m[:, blk], r1_blk, j_c[blk, blk],
+                alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+            )
+        else:
+            psi_blk = jnp.moveaxis(
+                jnp.take(phi_pairs[:, blk], padded.pair_ids_item, axis=0), -1, 1
+            )                                                        # (n, kb, d_pad)
+            w_new, e_pad = cd_block_sweep(
+                psi_blk, padded.gi.alpha_pad, e_pad, w_m[:, blk], r1_blk,
+                j_c[blk, blk],
+                alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+            )
         return w_m.at[:, blk].set(w_new), e_pad
 
     return sweeps.sweep_columns(

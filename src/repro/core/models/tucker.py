@@ -52,7 +52,12 @@ from repro.core.models.parafac import (
     _item_sweep_padded,
     pad_tensor_groups,
 )
-from repro.kernels.cd_sweep.ops import cd_block_sweep_rowpatch
+from repro.core.padded import append_sentinel_row
+from repro.kernels import vmem
+from repro.kernels.cd_sweep.ops import (
+    cd_block_sweep_rowpatch,
+    cd_block_sweep_rowpatch_gather,
+)
 from repro.sparse.interactions import Interactions
 from repro.sparse.segment import segment_sum
 
@@ -80,6 +85,11 @@ class TuckerHyperParams:
     implementation: str = "xla"
     block_k: int = 0  # columns per fused cd_sweep dispatch (epoch_padded):
     #                   0 = auto (min(mode k, 8)), 1 = per-column baseline
+    psi_dispatch: str = "gather"  # fused-path Ψ routing: 'gather' =
+    #                   in-kernel gather of the flat pseudo-ψ slab (no
+    #                   (n, k_b, D_pad) scatter_blk intermediate; auto-
+    #                   fallback on VMEM overflow), 'pregather' = host-side
+    #                   scatter/pre-gather (the PR 2 path)
 
     # _item_sweep compatibility (it reads hp.k and hp.alpha0/l2/eta)
     @property
@@ -177,9 +187,15 @@ def _mode_sweep_padded(
     and the per-row patch P[r, j, f] = segment(Σ_g D^f_g (D^j J)_g) (diag =
     R''/2). D^f is constant during the sweep (partner/core/items fixed), so
     only Φ — patched from the returned deltas — and the in-kernel e/R'
-    state move."""
+    state move. The flat pseudo-ψ ``s_nnz`` rides into the gather kernel as
+    a slab (+ zero sentinel row) with ``pg.flat_ids`` by default; the
+    ``scatter_blk`` tile only exists on the pregather/VMEM fallback."""
     pair_of_nnz = data.ctx
     w_nnz = jnp.take(w_items, data.item, axis=0)                 # (nnz, k3)
+    use_gather, _ = vmem.resolve_cd_sweep_dispatch(
+        pg.d_pad, k_b, data.nnz + 1, n_rows=n_side,
+        prefer_gather=sweeps.resolve_psi_dispatch(hp.psi_dispatch),
+    )
 
     def block_body(f0, kb, carry):
         side_m, phi_m, e_pad = carry
@@ -197,11 +213,18 @@ def _mode_sweep_padded(
         s_nnz = jnp.einsum(
             "njf,nf->nj", jnp.take(d_blk, pair_of_nnz, axis=0), w_nnz
         )
-        psi_blk = pg.scatter_blk(s_nnz)
-        w_new, e_pad = cd_block_sweep_rowpatch(
-            psi_blk, pg.alpha_pad, e_pad, side_m[:, blk], r1_blk, p_blk,
-            alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
-        )
+        if use_gather:
+            w_new, e_pad = cd_block_sweep_rowpatch_gather(
+                append_sentinel_row(s_nnz), pg.flat_ids, pg.alpha_pad,
+                e_pad, side_m[:, blk], r1_blk, p_blk,
+                alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+            )
+        else:
+            psi_blk = pg.scatter_blk(s_nnz)
+            w_new, e_pad = cd_block_sweep_rowpatch(
+                psi_blk, pg.alpha_pad, e_pad, side_m[:, blk], r1_blk, p_blk,
+                alpha0=hp.alpha0, l2=hp.l2, eta=hp.eta,
+            )
         delta = w_new - side_m[:, blk]
         phi_m = phi_m + jnp.einsum(
             "nj,njf->nf", jnp.take(delta, group_of_pair, axis=0), d_blk

@@ -11,6 +11,20 @@ time (0 on padding ⇒ padded slots are inert in every kernel reduction).
 Scatter/gather stay in the ORIGINAL flat nnz order — no ``t_perm``
 shuffles; transferring the residual cache between two groupings is
 ``g2.scatter(g1.gather(e_grid))``.
+
+Pseudo-ψ routing: the fused tensor/field sweeps evaluate per-block
+pseudo-ψ values on the FLAT nnz list (``(nnz, m)``) and the kernels need
+them laid out per padded slot. Two routes exist:
+
+  * ``flat_ids`` (default) — the precomputed ``(n_rows, d_pad)`` grid of
+    flat nnz indices (padding → the sentinel row ``nnz``). The in-kernel
+    gather variants of ``kernels/cd_sweep`` consume the flat ``(nnz+1, m)``
+    slab (:func:`append_sentinel_row`) + this grid directly, so the
+    ``(n_rows, m, d_pad)`` tile never exists in HBM.
+  * :meth:`PaddedGroup.scatter_blk` (fallback) — host-side scatter into the
+    ``(n_rows, m, d_pad)`` tile for the pre-gathered kernels. This is the
+    capacity trade the gather route removes: the tile is ~m× the residual
+    grid and must be materialized per block dispatch.
 """
 from __future__ import annotations
 
@@ -29,6 +43,9 @@ class PaddedGroup:
     rows: jax.Array       # (nnz,) int32 — group row per observation
     cols: jax.Array       # (nnz,) int32 — slot within the row
     alpha_pad: jax.Array  # (n_rows, d_pad) f32 — confidences, 0 on padding
+    flat_ids: jax.Array   # (n_rows, d_pad) int32 — flat nnz index per slot;
+    #                       padding slots hold the sentinel nnz (one past the
+    #                       last observation — see append_sentinel_row)
     n_rows: int = dataclasses.field(metadata=dict(static=True))
     d_pad: int = dataclasses.field(metadata=dict(static=True))
 
@@ -38,7 +55,11 @@ class PaddedGroup:
         return out.at[self.rows, self.cols].set(vals)
 
     def scatter_blk(self, vals_blk: jax.Array) -> jax.Array:
-        """Flat (nnz, m) block → (n_rows, m, d_pad) pseudo-ψ tile."""
+        """Flat (nnz, m) block → (n_rows, m, d_pad) pseudo-ψ tile.
+
+        Pre-gathered fallback only: this materializes the ~m×-residual-grid
+        HBM intermediate that the in-kernel gather route (``flat_ids`` +
+        ``kernels/cd_sweep`` ``*_gather`` kernels) avoids."""
         m = vals_blk.shape[1]
         out = jnp.zeros((self.n_rows, self.d_pad, m), vals_blk.dtype)
         out = out.at[self.rows, self.cols, :].set(vals_blk)
@@ -47,6 +68,14 @@ class PaddedGroup:
     def gather(self, grid: jax.Array) -> jax.Array:
         """(n_rows, d_pad) grid → flat per-nnz vector."""
         return grid[self.rows, self.cols]
+
+
+def append_sentinel_row(vals_blk: jax.Array) -> jax.Array:
+    """Flat (nnz, m) pseudo-ψ block → (nnz+1, m) slab whose last row is the
+    zero sentinel ``PaddedGroup.flat_ids`` points padding slots at — the
+    gather kernels then reproduce :meth:`PaddedGroup.scatter_blk`'s zeros
+    exactly."""
+    return jnp.pad(vals_blk, ((0, 1), (0, 0)))
 
 
 def build_group(
@@ -76,10 +105,13 @@ def build_group(
     d_pad = max(lane, int(-(-max(1, max_deg) // lane) * lane))
     alpha_pad = np.zeros((n_rows, d_pad), np.float32)
     alpha_pad[group_of_nnz, slot] = alpha
+    flat_ids = np.full((n_rows, d_pad), nnz, np.int32)  # sentinel: zero row
+    flat_ids[group_of_nnz, slot] = np.arange(nnz, dtype=np.int32)
     return PaddedGroup(
         rows=jnp.asarray(group_of_nnz, jnp.int32),
         cols=jnp.asarray(slot, jnp.int32),
         alpha_pad=jnp.asarray(alpha_pad),
+        flat_ids=jnp.asarray(flat_ids),
         n_rows=int(n_rows),
         d_pad=d_pad,
     )

@@ -110,6 +110,18 @@ def resolve_block_k(block_k: int, k: int) -> int:
     return min(k, 8) if block_k == 0 else max(1, min(block_k, k))
 
 
+def resolve_psi_dispatch(psi_dispatch: str) -> bool:
+    """Shared ``hp.psi_dispatch`` policy: returns ``prefer_gather`` for
+    ``kernels.vmem.resolve_cd_sweep_dispatch``. Anything outside the two
+    known routings raises — a typo silently selecting the k_b×-peak-HBM
+    pre-gathered path would defeat the dispatch's whole point."""
+    if psi_dispatch not in ("gather", "pregather"):
+        raise ValueError(
+            f"psi_dispatch must be 'gather' or 'pregather', got {psi_dispatch!r}"
+        )
+    return psi_dispatch == "gather"
+
+
 def take_col(m: jax.Array, f) -> jax.Array:
     """m[:, f] with a traced index."""
     return jax.lax.dynamic_slice_in_dim(m, f, 1, axis=1)[:, 0]

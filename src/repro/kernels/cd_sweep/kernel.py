@@ -2,7 +2,11 @@
 
 Four entry points share the "residual cache VMEM-resident across a block of
 embedding dimensions" idea; together they cover the whole k-separable model
-zoo (paper §5):
+zoo (paper §5). Each ships in TWO forms — pre-gathered (the caller
+materializes a `(C, k_b, D_pad)` Ψ tile in HBM) and IN-KERNEL GATHER
+(``*_gather_pallas``: the kernel takes the full `(n_src, m)` ψ slab plus an
+`(C, D_pad)` id tile and gathers Ψ rows inside the kernel, so the
+`(C, k_b, D_pad)` intermediate never exists):
 
   ``cd_block_sweep_pallas``          — MF-style block sweep: the R' slab is
         patched with a SHARED (k_b, k_b) Gram block (R'' is the scalar
@@ -56,9 +60,17 @@ D_pad=1024, k_b=8.
 
 HBM capacity: the pre-gathered Ψ tile is a (C, k_b, D_pad) array — k_b×
 the residual grid — that must be materialized per block dispatch, so peak
-footprint grows ~k_b× over the per-column path. k_b trades bandwidth for
-capacity; an in-kernel gather from an item-id tile would remove the
-intermediate (ROADMAP follow-up).
+footprint grows ~k_b× over the per-column path. The ``*_gather`` variants
+remove the intermediate: the ψ slab is a fixed `(n_src, m)` VMEM resident
+(`n_src·m·4 B`, ≪ the `(C, m, D_pad)` tile whenever n_src ≪ C·D_pad) and
+each column is gathered per row through the id tile —
+``psi_j[r, d] = tab[ids[r, d], j]`` — in interpret-safe form (a value-level
+``jnp.take``; the compiled-TPU lowering via ``pltpu`` per-row DMA is the
+ROADMAP follow-up). Padding id convention: table callers point padding
+slots at row 0 (α=0 keeps them inert, matching the pre-gathered tiles);
+flat-nnz callers (the tensor/field pseudo-ψ paths) append a zero sentinel
+row and point padding at it, reproducing ``PaddedGroup.scatter_blk``'s
+zeros exactly.
 """
 from __future__ import annotations
 
@@ -353,4 +365,319 @@ def cd_resid_patch_pallas(
         input_output_aliases={1: 0},
         interpret=interpret,
     )(psi_blk, e, dphi_blk)
+    return e_new[:c]
+
+
+# ======================================================================
+# In-kernel Ψ gather variants: the ψ slab (n_src, m) stays VMEM-resident
+# per dispatch and rows are gathered through an (C, D_pad) id tile — the
+# (C, m, D_pad) pre-gathered intermediate never exists in HBM.
+# ======================================================================
+def _pad_gather_operands(psi_tab, ids, row_arrays, block_ctx):
+    """Pad the ψ slab to a sublane multiple and the row-major operands to
+    the kernel row tile. Slab padding rows are zeros appended beyond every
+    valid id, so gathers never see them; row padding has α=0 ⇒ inert."""
+    n_src = psi_tab.shape[0]
+    n_src_pad = max(8, -(-n_src // 8) * 8)
+    if n_src_pad != n_src:
+        psi_tab = jnp.pad(psi_tab, ((0, n_src_pad - n_src), (0, 0)))
+    c = ids.shape[0]
+    c_pad = -(-c // block_ctx) * block_ctx
+    if c_pad != c:
+        rows = (0, c_pad - c)
+        ids = jnp.pad(ids, (rows, (0, 0)))
+        row_arrays = [jnp.pad(a, (rows,) + ((0, 0),) * (a.ndim - 1))
+                      for a in row_arrays]
+    return psi_tab, ids, row_arrays, c_pad
+
+
+def _sweep_gather_kernel(alpha0, l2, eta, k_b, tab_ref, ids_ref, alpha_ref,
+                         e_ref, w_ref, r1_ref, jblk_ref, w_out_ref, e_out_ref):
+    tab = tab_ref[...].astype(jnp.float32)      # (n_src_pad, k_b) ψ slab
+    ids = ids_ref[...]                          # (bc, d_pad) int32
+    alpha = alpha_ref[...].astype(jnp.float32)  # (bc, d_pad)
+    e = e_ref[...].astype(jnp.float32)          # (bc, d_pad)
+    w = w_ref[...].astype(jnp.float32)          # (bc, k_b)
+    r1 = r1_ref[...].astype(jnp.float32)        # (bc, k_b)
+    jblk = jblk_ref[...].astype(jnp.float32)    # (k_b, k_b)
+
+    def newton(j, carry):
+        w, r1, e = carry
+        tab_j = jax.lax.dynamic_index_in_dim(tab, j, axis=1, keepdims=False)
+        psi_j = jnp.take(tab_j, ids, mode="clip")  # per-row gather (bc, d_pad)
+        w_j = jax.lax.dynamic_slice_in_dim(w, j, 1, axis=1)       # (bc, 1)
+        r1_j = jax.lax.dynamic_slice_in_dim(r1, j, 1, axis=1)     # (bc, 1)
+        j_row = jax.lax.dynamic_slice_in_dim(jblk, j, 1, axis=0)  # (1, k_b)
+        jff = jax.lax.dynamic_slice_in_dim(j_row, j, 1, axis=1)   # (1, 1)
+
+        lp = jnp.sum(alpha * e * psi_j, axis=1, keepdims=True)            # L'/2
+        lpp = jnp.sum(alpha * psi_j * psi_j, axis=1, keepdims=True)       # L''/2
+        num = lp + alpha0 * r1_j + l2 * w_j
+        den = lpp + alpha0 * jff + l2
+        delta = -eta * num / jnp.maximum(den, 1e-12)
+
+        w = jax.lax.dynamic_update_slice_in_dim(w, w_j + delta, j, axis=1)
+        e = e + delta * psi_j
+        r1 = r1 + delta * j_row
+        return w, r1, e
+
+    w, r1, e = jax.lax.fori_loop(0, k_b, newton, (w, r1, e))
+    w_out_ref[...] = w
+    e_out_ref[...] = e
+
+
+def cd_block_sweep_gather_pallas(
+    psi_tab: jax.Array,  # (n_src, k_b) ψ slab — columns [f0, f0+k_b) of ψ
+    ids: jax.Array,      # (C, D_pad) int32 row ids into psi_tab; pad → 0/α=0
+    alpha: jax.Array,    # (C, D_pad), 0 on padding
+    e: jax.Array,        # (C, D_pad) residual cache
+    w_blk: jax.Array,    # (C, k_b) parameter slab W[:, f0:f0+k_b]
+    r1_blk: jax.Array,   # (C, k_b) R'/2 slab (W·J)[:, f0:f0+k_b]
+    j_blk: jax.Array,    # (k_b, k_b) diagonal Gram block
+    *,
+    alpha0: float,
+    l2: float,
+    eta: float = 1.0,
+    block_ctx: int | None = None,
+    interpret: bool = True,
+):
+    """:func:`cd_block_sweep_pallas` with the Ψ gather folded in-kernel."""
+    c, d_pad = ids.shape
+    n_src, k_b = psi_tab.shape
+    if block_ctx is None:  # shared VMEM-budget fit (kernels/vmem.py)
+        block_ctx = vmem.cd_sweep_gather_block_ctx(d_pad, k_b, n_src, n_rows=c)
+    psi_tab, ids, (alpha, e, w_blk, r1_blk), c_pad = _pad_gather_operands(
+        psi_tab, ids, [alpha, e, w_blk, r1_blk], block_ctx
+    )
+    n_src_pad = psi_tab.shape[0]
+
+    e = e.astype(jnp.float32)  # exact dtype match for the e→e_out alias
+
+    grid = (c_pad // block_ctx,)
+    w_new, e_new = pl.pallas_call(
+        partial(_sweep_gather_kernel, alpha0, l2, eta, k_b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_src_pad, k_b), lambda i: (0, 0)),  # resident slab
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((k_b, k_b), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_pad, k_b), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad, d_pad), jnp.float32),
+        ],
+        input_output_aliases={3: 1},  # e updates in place
+        interpret=interpret,
+    )(psi_tab, ids, alpha, e, w_blk, r1_blk, j_blk)
+    return w_new[:c], e_new[:c]
+
+
+def _sweep_rowpatch_gather_kernel(alpha0, l2, eta, k_b, tab_ref, ids_ref,
+                                  alpha_ref, e_ref, w_ref, r1_ref, p_ref,
+                                  w_out_ref, e_out_ref):
+    tab = tab_ref[...].astype(jnp.float32)      # (n_src_pad, k_b) ψ slab
+    ids = ids_ref[...]                          # (bc, d_pad) int32
+    alpha = alpha_ref[...].astype(jnp.float32)  # (bc, d_pad)
+    e = e_ref[...].astype(jnp.float32)          # (bc, d_pad)
+    w = w_ref[...].astype(jnp.float32)          # (bc, k_b)
+    r1 = r1_ref[...].astype(jnp.float32)        # (bc, k_b)
+    p = p_ref[...].astype(jnp.float32)          # (bc, k_b, k_b)
+
+    def newton(j, carry):
+        w, r1, e = carry
+        tab_j = jax.lax.dynamic_index_in_dim(tab, j, axis=1, keepdims=False)
+        psi_j = jnp.take(tab_j, ids, mode="clip")  # per-row gather (bc, d_pad)
+        w_j = jax.lax.dynamic_slice_in_dim(w, j, 1, axis=1)       # (bc, 1)
+        r1_j = jax.lax.dynamic_slice_in_dim(r1, j, 1, axis=1)     # (bc, 1)
+        p_j = jax.lax.dynamic_index_in_dim(p, j, axis=1, keepdims=False)  # (bc, k_b)
+        p_jj = jax.lax.dynamic_slice_in_dim(p_j, j, 1, axis=1)    # (bc, 1) = R''/2
+
+        lp = jnp.sum(alpha * e * psi_j, axis=1, keepdims=True)            # L'/2
+        lpp = jnp.sum(alpha * psi_j * psi_j, axis=1, keepdims=True)       # L''/2
+        num = lp + alpha0 * r1_j + l2 * w_j
+        den = lpp + alpha0 * p_jj + l2
+        delta = -eta * num / jnp.maximum(den, 1e-12)
+
+        w = jax.lax.dynamic_update_slice_in_dim(w, w_j + delta, j, axis=1)
+        e = e + delta * psi_j
+        r1 = r1 + delta * p_j
+        return w, r1, e
+
+    w, r1, e = jax.lax.fori_loop(0, k_b, newton, (w, r1, e))
+    w_out_ref[...] = w
+    e_out_ref[...] = e
+
+
+def cd_block_sweep_rowpatch_gather_pallas(
+    psi_tab: jax.Array,  # (n_src, k_b) pseudo-ψ slab (flat nnz values + a
+    #                      zero sentinel row for padding slots)
+    ids: jax.Array,      # (C, D_pad) int32 rows into psi_tab
+    alpha: jax.Array,    # (C, D_pad), 0 on padding
+    e: jax.Array,        # (C, D_pad) residual cache
+    w_blk: jax.Array,    # (C, k_b)
+    r1_blk: jax.Array,   # (C, k_b) R'/2 slab
+    p_blk: jax.Array,    # (C, k_b, k_b) per-row patch tensor; diag = R''/2
+    *,
+    alpha0: float,
+    l2: float,
+    eta: float = 1.0,
+    block_ctx: int | None = None,
+    interpret: bool = True,
+):
+    """:func:`cd_block_sweep_rowpatch_pallas` with the pseudo-ψ scatter
+    (``PaddedGroup.scatter_blk``) folded in-kernel as a flat-nnz gather."""
+    c, d_pad = ids.shape
+    n_src, k_b = psi_tab.shape
+    if block_ctx is None:  # shared VMEM-budget fit (kernels/vmem.py)
+        block_ctx = vmem.cd_sweep_gather_block_ctx(d_pad, k_b, n_src, n_rows=c)
+    psi_tab, ids, (alpha, e, w_blk, r1_blk, p_blk), c_pad = _pad_gather_operands(
+        psi_tab, ids, [alpha, e, w_blk, r1_blk, p_blk], block_ctx
+    )
+    n_src_pad = psi_tab.shape[0]
+
+    e = e.astype(jnp.float32)  # exact dtype match for the e→e_out alias
+
+    grid = (c_pad // block_ctx,)
+    w_new, e_new = pl.pallas_call(
+        partial(_sweep_rowpatch_gather_kernel, alpha0, l2, eta, k_b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_src_pad, k_b), lambda i: (0, 0)),  # resident slab
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, k_b, k_b), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_ctx, k_b), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_pad, k_b), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad, d_pad), jnp.float32),
+        ],
+        input_output_aliases={3: 1},
+        interpret=interpret,
+    )(psi_tab, ids, alpha, e, w_blk, r1_blk, p_blk)
+    return w_new[:c], e_new[:c]
+
+
+def _slab_reduce_gather_kernel(tab_ref, ids_ref, alpha_ref, e_ref, q_ref, p_ref):
+    tab = tab_ref[...].astype(jnp.float32)      # (n_src_pad, m) ψ slab
+    ids = ids_ref[...]                          # (bc, d_pad) int32
+    alpha = alpha_ref[...].astype(jnp.float32)  # (bc, d_pad)
+    e = e_ref[...].astype(jnp.float32)          # (bc, d_pad)
+    psi_t = jnp.take(tab, ids, axis=0, mode="clip")  # tile (bc, d_pad, m)
+    q_ref[...] = jnp.einsum("bdm,bd->bm", psi_t, alpha * e)
+    p_ref[...] = jnp.einsum("bdm,bdn->bmn", psi_t * alpha[:, :, None], psi_t)
+
+
+def cd_slab_reduce_gather_pallas(
+    psi_tab: jax.Array,  # (n_src, m) pseudo-ψ slab (incl. any special col)
+    ids: jax.Array,      # (C, D_pad) int32 rows into psi_tab
+    alpha: jax.Array,    # (C, D_pad), 0 on padding
+    e: jax.Array,        # (C, D_pad) residual cache (read-only here)
+    *,
+    block_ctx: int | None = None,
+    interpret: bool = True,
+):
+    """:func:`cd_slab_reduce_pallas` with the Ψ gather folded in-kernel.
+    The gathered (bc, d_pad, m) tile is a kernel-internal temporary — it
+    never lands in HBM (α=0 padding keeps gathered padding slots inert)."""
+    c, d_pad = ids.shape
+    n_src, m = psi_tab.shape
+    if block_ctx is None:  # shared VMEM-budget fit (kernels/vmem.py)
+        block_ctx = vmem.cd_sweep_gather_block_ctx(
+            d_pad, m, n_src, n_rows=c, hold_tile=True
+        )
+    psi_tab, ids, (alpha, e), c_pad = _pad_gather_operands(
+        psi_tab, ids, [alpha, e], block_ctx
+    )
+    n_src_pad = psi_tab.shape[0]
+
+    grid = (c_pad // block_ctx,)
+    q, p = pl.pallas_call(
+        _slab_reduce_gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_src_pad, m), lambda i: (0, 0)),  # resident slab
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_ctx, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, m, m), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_pad, m), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad, m, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(psi_tab, ids, alpha, e)
+    return q[:c], p[:c]
+
+
+def _resid_patch_gather_kernel(m, tab_ref, ids_ref, e_ref, dphi_ref, e_out_ref):
+    tab = tab_ref[...].astype(jnp.float32)      # (n_src_pad, m) ψ slab
+    ids = ids_ref[...]                          # (bc, d_pad) int32
+    e = e_ref[...].astype(jnp.float32)          # (bc, d_pad)
+    dphi = dphi_ref[...].astype(jnp.float32)    # (bc, m)
+
+    def add_col(j, e):
+        tab_j = jax.lax.dynamic_index_in_dim(tab, j, axis=1, keepdims=False)
+        psi_j = jnp.take(tab_j, ids, mode="clip")  # per-row gather (bc, d_pad)
+        dphi_j = jax.lax.dynamic_slice_in_dim(dphi, j, 1, axis=1)  # (bc, 1)
+        return e + dphi_j * psi_j
+
+    e_out_ref[...] = jax.lax.fori_loop(0, m, add_col, e)
+
+
+def cd_resid_patch_gather_pallas(
+    psi_tab: jax.Array,  # (n_src, m) ψ slab
+    ids: jax.Array,      # (C, D_pad) int32 rows into psi_tab
+    e: jax.Array,        # (C, D_pad) residual cache
+    dphi_blk: jax.Array, # (C, m) per-row Δφ of each block column
+    *,
+    block_ctx: int | None = None,
+    interpret: bool = True,
+):
+    """:func:`cd_resid_patch_pallas` with the Ψ gather folded in-kernel
+    (one column gathered at a time — no (bc, m, d_pad) temporary)."""
+    c, d_pad = ids.shape
+    n_src, m = psi_tab.shape
+    if block_ctx is None:  # shared VMEM-budget fit (kernels/vmem.py)
+        block_ctx = vmem.cd_sweep_gather_block_ctx(d_pad, m, n_src, n_rows=c)
+    psi_tab, ids, (e, dphi_blk), c_pad = _pad_gather_operands(
+        psi_tab, ids, [e, dphi_blk], block_ctx
+    )
+    n_src_pad = psi_tab.shape[0]
+
+    e = e.astype(jnp.float32)  # exact dtype match for the e→e_out alias
+
+    grid = (c_pad // block_ctx,)
+    e_new = pl.pallas_call(
+        partial(_resid_patch_gather_kernel, m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_src_pad, m), lambda i: (0, 0)),  # resident slab
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_ctx, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_ctx, d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_pad, d_pad), jnp.float32),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(psi_tab, ids, e, dphi_blk)
     return e_new[:c]

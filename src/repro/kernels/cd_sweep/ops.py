@@ -9,9 +9,13 @@ and from ``epoch`` donating ``e_pad`` at the top level.
 """
 from repro.kernels import kernel_jit
 from repro.kernels.cd_sweep.kernel import (
+    cd_block_sweep_gather_pallas,
     cd_block_sweep_pallas,
+    cd_block_sweep_rowpatch_gather_pallas,
     cd_block_sweep_rowpatch_pallas,
+    cd_resid_patch_gather_pallas,
     cd_resid_patch_pallas,
+    cd_slab_reduce_gather_pallas,
     cd_slab_reduce_pallas,
 )
 
@@ -50,4 +54,48 @@ def cd_slab_reduce(psi_blk, alpha, e, *, block_ctx=None, interpret=None):
 def cd_resid_patch(psi_blk, e, dphi_blk, *, block_ctx=None, interpret=None):
     return cd_resid_patch_pallas(
         psi_blk, e, dphi_blk, block_ctx=block_ctx, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# In-kernel Ψ gather variants: same math, but the kernel receives the full
+# (n_src, m) ψ slab plus the (C, D_pad) id tile instead of a pre-gathered
+# (C, m, D_pad) Ψ tile — the k_b× HBM-capacity intermediate never exists.
+# ---------------------------------------------------------------------------
+@kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
+            donate_argnums=(3,))
+def cd_block_sweep_gather(psi_tab, ids, alpha, e, w_blk, r1_blk, j_blk, *,
+                          alpha0, l2, eta=1.0, block_ctx=None, interpret=None):
+    return cd_block_sweep_gather_pallas(
+        psi_tab, ids, alpha, e, w_blk, r1_blk, j_blk,
+        alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
+        interpret=interpret,
+    )
+
+
+@kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
+            donate_argnums=(3,))
+def cd_block_sweep_rowpatch_gather(psi_tab, ids, alpha, e, w_blk, r1_blk,
+                                   p_blk, *, alpha0, l2, eta=1.0,
+                                   block_ctx=None, interpret=None):
+    return cd_block_sweep_rowpatch_gather_pallas(
+        psi_tab, ids, alpha, e, w_blk, r1_blk, p_blk,
+        alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
+        interpret=interpret,
+    )
+
+
+@kernel_jit(static_argnames=("block_ctx",))
+def cd_slab_reduce_gather(psi_tab, ids, alpha, e, *, block_ctx=None,
+                          interpret=None):
+    return cd_slab_reduce_gather_pallas(
+        psi_tab, ids, alpha, e, block_ctx=block_ctx, interpret=interpret,
+    )
+
+
+@kernel_jit(static_argnames=("block_ctx",), donate_argnums=(2,))
+def cd_resid_patch_gather(psi_tab, ids, e, dphi_blk, *, block_ctx=None,
+                          interpret=None):
+    return cd_resid_patch_gather_pallas(
+        psi_tab, ids, e, dphi_blk, block_ctx=block_ctx, interpret=interpret,
     )

@@ -51,3 +51,37 @@ def cd_slab_reduce_ref(psi_blk, alpha, e):
 
 def cd_resid_patch_ref(psi_blk, e, dphi_blk):
     return e + jnp.einsum("cm,cmd->cd", dphi_blk, psi_blk)
+
+
+# ------------------------------------------------------------------------
+# Gather-variant oracles: materialize the (C, m, D_pad) Ψ tile from the
+# (n_src, m) slab + (C, D_pad) id grid (exactly what the in-kernel gather
+# avoids doing in HBM), then reuse the pre-gathered oracles.
+# ------------------------------------------------------------------------
+def gather_psi_blk(psi_tab, ids):
+    """(n_src, m) slab + (C, D_pad) ids → (C, m, D_pad) Ψ tile."""
+    return jnp.moveaxis(jnp.take(psi_tab, ids, axis=0, mode="clip"), -1, 1)
+
+
+def cd_block_sweep_gather_ref(psi_tab, ids, alpha, e, w_blk, r1_blk, j_blk,
+                              *, alpha0, l2, eta=1.0):
+    return cd_block_sweep_ref(
+        gather_psi_blk(psi_tab, ids), alpha, e, w_blk, r1_blk, j_blk,
+        alpha0=alpha0, l2=l2, eta=eta,
+    )
+
+
+def cd_block_sweep_rowpatch_gather_ref(psi_tab, ids, alpha, e, w_blk, r1_blk,
+                                       p_blk, *, alpha0, l2, eta=1.0):
+    return cd_block_sweep_rowpatch_ref(
+        gather_psi_blk(psi_tab, ids), alpha, e, w_blk, r1_blk, p_blk,
+        alpha0=alpha0, l2=l2, eta=eta,
+    )
+
+
+def cd_slab_reduce_gather_ref(psi_tab, ids, alpha, e):
+    return cd_slab_reduce_ref(gather_psi_blk(psi_tab, ids), alpha, e)
+
+
+def cd_resid_patch_gather_ref(psi_tab, ids, e, dphi_blk):
+    return cd_resid_patch_ref(gather_psi_blk(psi_tab, ids), e, dphi_blk)

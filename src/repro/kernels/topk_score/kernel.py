@@ -124,7 +124,20 @@ def topk_score_pallas(
     k_pad = -(-k // lane) * lane
     block_b = min(block_b, -(-b // 8) * 8)
     if block_items is None:
-        block_items = vmem.topk_block_items(block_b, d_pad, k_pad, n_items=n_items)
+        # The φ tile + running top-k_pad state are FIXED VMEM costs scaling
+        # with block_b·(d_pad + k_pad); at large k_pad they alone can bust
+        # the budget. block_b is ours to shrink — halve it until the tile
+        # fits instead of silently overflowing VMEM.
+        while True:
+            try:
+                block_items = vmem.topk_block_items(
+                    block_b, d_pad, k_pad, n_items=n_items
+                )
+                break
+            except vmem.VmemBudgetError:
+                if block_b <= 8:
+                    raise
+                block_b = max(8, block_b // 2)
     b_pad = -(-b // block_b) * block_b
     n_pad = -(-n_items // block_items) * block_items
 

@@ -365,10 +365,12 @@ def _icd_cell(arch: str, shape_spec, mesh) -> Cell:
 # ===========================================================================
 # registry
 # ===========================================================================
-LM_ARCHS = ("gemma2-2b", "qwen1.5-4b", "deepseek-67b", "olmoe-1b-7b",
-            "deepseek-moe-16b")
-RECSYS_ARCHS = ("dlrm-rm2", "din", "dcn-v2", "bst")
-GNN_ARCHS = ("graphsage-reddit",)
+# The seed-template LM/RecSys/GNN configs were removed in PR 4 (unrelated
+# to this paper); the cell builders above stay generic, but only the iCD
+# archs are registered.
+LM_ARCHS = ()
+RECSYS_ARCHS = ()
+GNN_ARCHS = ()
 ICD_ARCHS = ("icd-mf",)
 
 

@@ -10,7 +10,7 @@ jax locks the device count at first init.
 
 Usage:
   python -m repro.launch.dryrun --mesh both --out results/dryrun
-  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --arch icd-mf --shape epoch_youtube --mesh single
   python -m repro.launch.dryrun --list
 """
 import argparse
@@ -31,8 +31,7 @@ MODEL_FLOPS_NOTE = (
 )
 
 
-def run_cell(arch: str, shape: str, multi_pod: bool, save_hlo: str = "",
-             calibrate: bool = True):
+def run_cell(arch: str, shape: str, multi_pod: bool, save_hlo: str = ""):
     mesh = make_production_mesh(multi_pod=multi_pod)
     cell = build_cell(arch, shape, mesh)
     result = {
@@ -64,16 +63,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, save_hlo: str = "",
         memory=hlo_analysis.memory_stats(compiled),
         roofline_raw=roof.to_dict(),
     )
-    # scanned LM cells under-report loop-body costs (XLA counts while
-    # bodies once) — recover exact terms via unrolled probe compiles
-    from repro.launch.cells import LM_ARCHS
-
-    if calibrate and arch in LM_ARCHS:
-        from repro.launch import calibrate as cal
-
-        result["roofline"] = cal.calibrated_roofline(arch, shape, mesh)
-    else:
-        result["roofline"] = roof.to_dict()
+    # (the scanned-LM probe calibration hook left with the seed-template LM
+    # configs in PR 4 — iCD cells report the raw HLO roofline directly)
+    result["roofline"] = roof.to_dict()
     if save_hlo:
         with open(save_hlo, "w") as f:
             f.write(compiled.as_text())

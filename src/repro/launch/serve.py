@@ -1,6 +1,5 @@
 """Serving driver: LM decode or recsys retrieval with batched requests.
 
-  python -m repro.launch.serve --arch qwen1.5-4b --smoke --tokens 16
   python -m repro.launch.serve --arch icd-mf --smoke --requests 8
 """
 from __future__ import annotations

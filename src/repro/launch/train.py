@@ -2,80 +2,21 @@
 
 On a pod this is the per-host entry point (jax.distributed.initialize, then
 identical SPMD code); in this container it runs the same path on the local
-device mesh. Supports every ``--arch`` in the registry:
+device mesh. Supports every ``--arch`` in the registry (since PR 4 that is
+the paper's own iCD configs — the seed-template LM/RecSys/GNN drivers left
+with their configs):
 
-  python -m repro.launch.train --arch gemma2-2b --smoke --steps 20
   python -m repro.launch.train --arch icd-mf --smoke --steps 30
-  python -m repro.launch.train --arch dlrm-rm2 --smoke --steps 50
+  python -m repro.launch.train --arch icd-fm --smoke --steps 30
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_smoke_config
-from repro.data.loader import lm_token_batches, sharded_batches
-from repro.optim import adamw
-from repro.train.train_step import build_train_step, init_state
-from repro.train.trainer import Trainer
-
-
-def _lm_main(cfg, args):
-    from repro.models import transformer as T
-
-    params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
-    opt = adamw(args.lr)
-    step = jax.jit(build_train_step(
-        lambda p, b: T.loss_fn(cfg, p, b["tokens"], b["targets"],
-                               compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16),
-        opt, num_microbatches=cfg.num_microbatches,
-    ))
-    data = (
-        {"tokens": jnp.asarray(b["tokens"]), "targets": jnp.asarray(b["targets"])}
-        for b in lm_token_batches(cfg.vocab, args.batch, args.seq, seed=args.seed)
-    )
-    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    trainer = Trainer(step, init_state(params, opt), data, checkpointer=ck,
-                      ckpt_every=args.ckpt_every)
-    trainer.run(args.steps)
-    return trainer
-
-
-def _recsys_main(cfg, args):
-    from repro.launch.cells import _recsys_module
-
-    mod = _recsys_module(cfg)
-    params = mod.init_params(jax.random.PRNGKey(args.seed), cfg)
-    opt = adamw(args.lr)
-    step = jax.jit(build_train_step(lambda p, b: mod.loss_fn(cfg, p, b), opt))
-
-    def make_batch(rng, n):
-        if cfg.kind in ("dlrm", "dcn"):
-            return {
-                "dense": jnp.asarray(rng.normal(size=(n, cfg.n_dense)), jnp.float32),
-                "sparse": jnp.asarray(
-                    rng.integers(0, min(cfg.table_vocabs), (n, cfg.n_sparse)),
-                    jnp.int32),
-                "label": jnp.asarray(rng.integers(0, 2, n), jnp.float32),
-            }
-        return {
-            "hist": jnp.asarray(rng.integers(0, cfg.item_vocab, (n, cfg.seq_len)),
-                                jnp.int32),
-            "mask": jnp.asarray(rng.integers(0, 2, (n, cfg.seq_len)), jnp.float32),
-            "target": jnp.asarray(rng.integers(0, cfg.item_vocab, n), jnp.int32),
-            "label": jnp.asarray(rng.integers(0, 2, n), jnp.float32),
-        }
-
-    data = sharded_batches(make_batch, args.batch, seed=args.seed)
-    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    trainer = Trainer(step, init_state(params, opt), data, checkpointer=ck,
-                      ckpt_every=args.ckpt_every)
-    trainer.run(args.steps)
-    return trainer
 
 
 def _icd_main(cfg, args):
@@ -106,25 +47,16 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config (CPU-friendly)")
     ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--ckpt-every", type=int, default=100)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     name = getattr(cfg, "name", args.arch)
     print(f"[train] arch={name} smoke={args.smoke}")
-    if args.arch.startswith("icd"):
-        _icd_main(cfg, args)
-    elif args.arch in ("dlrm-rm2", "din", "dcn-v2", "bst"):
-        _recsys_main(cfg, args)
-    elif args.arch == "graphsage-reddit":
-        raise SystemExit("use examples/gnn_train.py for the GNN driver")
-    else:
-        _lm_main(cfg, args)
+    if not args.arch.startswith("icd"):
+        raise SystemExit(f"no training driver for {args.arch!r}; "
+                         "registered archs are the iCD configs")
+    _icd_main(cfg, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,69 @@
+"""Shared inline smoke-scale configs for the model-zoo tests.
+
+The seed-template registry configs were removed in PR 4; these reduced
+same-family configs (built from the shared ``configs.base`` dataclasses)
+are the single source the smoke/property/serve suites import, so "the
+gemma smoke config" cannot silently desynchronize across files. "gemma"
+in a name keeps the Gemma-specific forward branches (embed scaling,
+softcaps) exercised.
+"""
+from repro.configs.base import GNNConfig, LMConfig, MoEConfig, RecsysConfig
+
+LM_SMOKE = {
+    "gemma2-smoke": LMConfig(
+        name="gemma2-smoke", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=256, act="geglu", attn_window=8,
+        local_global_alternating=True, attn_softcap=50.0, final_softcap=30.0,
+        post_norms=True, tie_embeddings=True,
+    ),
+    "qwen-smoke": LMConfig(
+        name="qwen-smoke", n_layers=3, d_model=48, n_heads=4, n_kv_heads=4,
+        head_dim=12, d_ff=96, vocab=128, qkv_bias=True,
+        rope_theta=1_000_000.0, tie_embeddings=False,
+    ),
+    "gqa-smoke": LMConfig(
+        name="gqa-smoke", n_layers=3, d_model=64, n_heads=8, n_kv_heads=2,
+        head_dim=8, d_ff=160, vocab=128, tie_embeddings=False,
+    ),
+    "moe-smoke": LMConfig(
+        name="moe-smoke", n_layers=2, d_model=32, n_heads=4, n_kv_heads=4,
+        head_dim=8, d_ff=32, vocab=64, tie_embeddings=False,
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=32),
+    ),
+    "moe-shared-smoke": LMConfig(
+        name="moe-shared-smoke", n_layers=3, d_model=32, n_heads=4,
+        n_kv_heads=4, head_dim=8, d_ff=24, vocab=64, tie_embeddings=False,
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=24, n_shared=1,
+                      first_k_dense=1, d_ff_dense=64),
+    ),
+}
+
+GEMMA_SMOKE = LM_SMOKE["gemma2-smoke"]
+QWEN_SMOKE = LM_SMOKE["qwen-smoke"]
+GQA_SMOKE = LM_SMOKE["gqa-smoke"]
+
+RECSYS_SMOKE = {
+    "dlrm": RecsysConfig(
+        name="dlrm-smoke", kind="dlrm", n_dense=13, n_sparse=26, embed_dim=8,
+        table_vocabs=tuple([50] * 8 + [10] * 18), bot_mlp=(16, 8),
+        top_mlp=(16, 8, 1),
+    ),
+    "dcn": RecsysConfig(
+        name="dcn-smoke", kind="dcn", n_dense=13, n_sparse=26, embed_dim=4,
+        table_vocabs=tuple([40] * 4 + [12] * 22), n_cross_layers=2,
+        mlp=(32, 16),
+    ),
+    "din": RecsysConfig(
+        name="din-smoke", kind="din", embed_dim=6, seq_len=12,
+        attn_mlp=(16, 8), mlp=(24, 12), item_vocab=200,
+    ),
+    "bst": RecsysConfig(
+        name="bst-smoke", kind="bst", embed_dim=16, seq_len=6, n_blocks=1,
+        n_heads=4, mlp=(32, 16), item_vocab=100,
+    ),
+}
+
+GNN_SMOKE = GNNConfig(
+    name="graphsage-smoke", n_layers=2, d_hidden=16, aggregator="mean",
+    sample_sizes=(4, 3), n_classes=5,
+)

@@ -169,6 +169,36 @@ _FM_FUSED_CASES = [
 ]
 
 
+def test_fm_fused_gather_matches_pregather():
+    """The in-kernel-gather Ψ routing (default; slab = [Ψ_blk | ψ_spec])
+    must reproduce the pre-gathered routing to reduction roundoff (the
+    gather kernel's einsum contracts in (d, m) layout) — non-divisible
+    k=3/block_k=2, linear weights + bias included."""
+    import dataclasses
+
+    x, z, data, _, _ = make_problem(seed=9, with_bag=True)
+    k = 3
+    base = fm.FMHyperParams(k=k, alpha0=0.3, l2=0.05, block_k=2)
+    params = fm.init(jax.random.PRNGKey(8), x.p, z.p, k)
+    params = params._replace(w_lin=0.01 * jnp.arange(x.p, dtype=jnp.float32))
+    pdata = fm.pad_interactions(data)
+    finals = {}
+    for disp in ("gather", "pregather"):
+        hp = dataclasses.replace(base, psi_dispatch=disp)
+        p, e_pad = params, fm.residuals_padded(params, x, z, data, pdata, hp)
+        for _ in range(2):
+            p, e_pad = fm.epoch_padded(p, x, z, pdata, e_pad, hp)
+        finals[disp] = (p, e_pad)
+    for field in finals["gather"][0]._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(finals["gather"][0], field)),
+            np.asarray(getattr(finals["pregather"][0], field)),
+            rtol=5e-5, atol=1e-5,
+        )
+    np.testing.assert_allclose(finals["gather"][1], finals["pregather"][1],
+                               rtol=5e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("with_bag,mode,block_k", _FM_FUSED_CASES)
 def test_fm_fused_matches_per_column(with_bag, mode, block_k):
     """epoch_padded (slab-reduce over [ψ_blk | ψ_spec] + rank-(k_b+1)

@@ -115,6 +115,33 @@ def test_mfsi_fused_matches_per_column(with_bag, mode, block_k):
     )
 
 
+def test_mfsi_fused_gather_matches_pregather():
+    """The in-kernel-gather Ψ routing (default) must reproduce the
+    pre-gathered routing to reduction roundoff (the gather kernel's einsum
+    contracts in (d, m) layout) — non-divisible k=5/block_k=3, multi-hot
+    bags included."""
+    import dataclasses
+
+    x, z, data, _, _ = make_problem(seed=9, with_bag=True)
+    k = 5
+    base = mfsi.MFSIHyperParams(k=k, alpha0=0.3, l2=0.05, block_k=3)
+    params = mfsi.init(jax.random.PRNGKey(8), x.p, z.p, k)
+    pdata = mfsi.pad_interactions(data)
+    finals = {}
+    for disp in ("gather", "pregather"):
+        hp = dataclasses.replace(base, psi_dispatch=disp)
+        p, e_pad = params, mfsi.residuals_padded(params, x, z, data, pdata)
+        for _ in range(2):
+            p, e_pad = mfsi.epoch_padded(p, x, z, pdata, e_pad, hp)
+        finals[disp] = (p, e_pad)
+    np.testing.assert_allclose(finals["gather"][0].w, finals["pregather"][0].w,
+                               rtol=5e-5, atol=1e-5)
+    np.testing.assert_allclose(finals["gather"][0].h, finals["pregather"][0].h,
+                               rtol=5e-5, atol=1e-5)
+    np.testing.assert_allclose(finals["gather"][1], finals["pregather"][1],
+                               rtol=5e-5, atol=1e-5)
+
+
 def test_mfsi_fused_matches_naive_cd():
     """Fused padded epoch ≡ conventional CD on the dense implicit matrix
     (one-hot fields — exact CD on both sides)."""

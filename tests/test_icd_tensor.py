@@ -229,6 +229,43 @@ def test_tucker_fused_matches_per_column(block_k):
     np.testing.assert_allclose(e_got, e_ref, rtol=5e-4, atol=5e-5)
 
 
+@pytest.mark.parametrize("model", ["parafac", "tucker"])
+def test_tensor_fused_gather_matches_pregather(model):
+    """The flat-pseudo-ψ gather routing (default; slab + sentinel row +
+    ``flat_ids``) must reproduce the ``scatter_blk`` pre-gathered routing to
+    float roundoff — non-divisible mode ranks vs block_k=2."""
+    import dataclasses
+
+    tc, data, _, _ = make_problem(seed=9)
+    if model == "parafac":
+        base = parafac.PARAFACHyperParams(k=5, alpha0=0.3, l2=0.05, block_k=2)
+        params = parafac.init(jax.random.PRNGKey(8), tc.n_c1, tc.n_c2,
+                              data.n_items, 5)
+        mod = parafac
+    else:
+        base = tucker.TuckerHyperParams(k1=3, k2=2, k3=4, alpha0=0.3, l2=0.05,
+                                        l2_core=0.02, block_k=2)
+        params = tucker.init(jax.random.PRNGKey(8), tc.n_c1, tc.n_c2,
+                             data.n_items, 3, 2, 4)
+        mod = tucker
+    padded = mod.pad_tensor_groups(tc, data)
+    finals = {}
+    for disp in ("gather", "pregather"):
+        hp = dataclasses.replace(base, psi_dispatch=disp)
+        p, e = params, mod.residuals(params, tc, data)
+        for _ in range(2):
+            p, e = mod.epoch_padded(p, tc, data, padded, e, hp)
+        finals[disp] = (p, e)
+    for field in finals["gather"][0]._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(finals["gather"][0], field)),
+            np.asarray(getattr(finals["pregather"][0], field)),
+            rtol=1e-6, atol=1e-7,
+        )
+    np.testing.assert_allclose(finals["gather"][1], finals["pregather"][1],
+                               rtol=1e-6, atol=1e-6)
+
+
 @pytest.mark.parametrize("block_k", [2, 3])
 def test_parafac_fused_dense_context_sparse_pairs(block_k):
     """dense_context=True with a SPARSE pair list: the regularizer universe

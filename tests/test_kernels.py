@@ -5,16 +5,23 @@ import numpy as np
 import pytest
 
 from repro.kernels.cd_sweep.kernel import (
+    cd_block_sweep_gather_pallas,
     cd_block_sweep_pallas,
+    cd_block_sweep_rowpatch_gather_pallas,
     cd_block_sweep_rowpatch_pallas,
+    cd_resid_patch_gather_pallas,
     cd_resid_patch_pallas,
+    cd_slab_reduce_gather_pallas,
     cd_slab_reduce_pallas,
 )
 from repro.kernels.cd_sweep.ref import (
+    cd_block_sweep_gather_ref,
     cd_block_sweep_ref,
+    cd_block_sweep_rowpatch_gather_ref,
     cd_block_sweep_rowpatch_ref,
     cd_resid_patch_ref,
     cd_slab_reduce_ref,
+    gather_psi_blk,
 )
 from repro.kernels.cd_update.kernel import cd_column_update_pallas
 from repro.kernels.cd_update.ref import cd_column_update_ref
@@ -212,6 +219,145 @@ def test_cd_slab_reduce_and_resid_patch_match_ref(c, d_pad, m):
     dphi = jax.random.normal(ks[3], (c, m))
     e_got = cd_resid_patch_pallas(psi, e, dphi, block_ctx=32, interpret=True)
     e_ref = cd_resid_patch_ref(psi, e, dphi)
+    np.testing.assert_allclose(e_got, e_ref, rtol=2e-5, atol=2e-6)
+
+
+# ----------------------------------------------------- cd_sweep gather ----
+def _gather_problem(c, d_pad, m, n_src, seed=0, sentinel_rows=()):
+    """ψ slab + id grid + row operands; rows in ``sentinel_rows`` point every
+    slot at the zero sentinel row (an empty context in the flat-nnz layout)
+    and get α=0."""
+    rng = np.random.default_rng(seed)
+    tab = np.r_[rng.normal(size=(n_src - 1, m)), np.zeros((1, m))]
+    ids = rng.integers(0, n_src - 1, (c, d_pad))
+    alpha = rng.random((c, d_pad)) * (rng.random((c, d_pad)) > 0.3)
+    for r in sentinel_rows:
+        ids[r] = n_src - 1
+        alpha[r] = 0.0
+    e = rng.normal(size=(c, d_pad))
+    w = rng.normal(size=(c, m))
+    r1 = rng.normal(size=(c, m))
+    j_full = rng.normal(size=(m, m))
+    j_full = j_full @ j_full.T + m * np.eye(m)
+    return tuple(
+        jnp.asarray(a, jnp.int32 if a is ids else jnp.float32)
+        for a in (tab, ids, alpha, e, w, r1, j_full)
+    )
+
+
+@pytest.mark.parametrize("c,d_pad,m,n_src", [(100, 128, 4, 57), (37, 64, 3, 9),
+                                             (129, 128, 1, 130)])
+def test_cd_sweep_gather_matches_pregathered_and_ref(c, d_pad, m, n_src):
+    """In-kernel gather sweep ≡ the pre-gathered kernel on the materialized
+    tile ≡ the jnp oracle — incl. non-divisible C tiles, empty-context
+    (all-sentinel) rows and a slab larger than the row count."""
+    tab, ids, alpha, e, w, r1, j_full = _gather_problem(
+        c, d_pad, m, n_src, seed=c, sentinel_rows=(0, c // 2)
+    )
+    args = dict(alpha0=0.4, l2=0.05, eta=1.0)
+    psi_blk = gather_psi_blk(tab, ids)
+    w_pre, e_pre = cd_block_sweep_pallas(
+        psi_blk, alpha, e, w, r1, j_full, block_ctx=32, interpret=True, **args
+    )
+    w_got, e_got = cd_block_sweep_gather_pallas(
+        tab, ids, alpha, e, w, r1, j_full, block_ctx=32, interpret=True, **args
+    )
+    w_ref, e_ref = cd_block_sweep_gather_ref(tab, ids, alpha, e, w, r1,
+                                             j_full, **args)
+    np.testing.assert_allclose(w_got, w_pre, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(e_got, e_pre, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(w_got, w_ref, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(e_got, e_ref, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("c,d_pad,m,n_src", [(100, 128, 4, 41), (37, 64, 2, 300)])
+def test_cd_sweep_rowpatch_gather_matches_pregathered_and_ref(c, d_pad, m, n_src):
+    tab, ids, alpha, e, w, r1, _ = _gather_problem(
+        c, d_pad, m, n_src, seed=7, sentinel_rows=(1,)
+    )
+    p = np.random.default_rng(8).normal(size=(c, m, m))
+    p = 0.5 * (p + p.transpose(0, 2, 1)) + 2.0 * m * np.eye(m)[None]
+    p = jnp.asarray(p, jnp.float32)
+    args = dict(alpha0=0.4, l2=0.05, eta=1.0)
+    psi_blk = gather_psi_blk(tab, ids)
+    w_pre, e_pre = cd_block_sweep_rowpatch_pallas(
+        psi_blk, alpha, e, w, r1, p, block_ctx=32, interpret=True, **args
+    )
+    w_got, e_got = cd_block_sweep_rowpatch_gather_pallas(
+        tab, ids, alpha, e, w, r1, p, block_ctx=32, interpret=True, **args
+    )
+    w_ref, e_ref = cd_block_sweep_rowpatch_gather_ref(tab, ids, alpha, e, w,
+                                                      r1, p, **args)
+    np.testing.assert_allclose(w_got, w_pre, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(e_got, e_pre, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(w_got, w_ref, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(e_got, e_ref, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("c,d_pad,m,n_src", [(100, 128, 4, 33), (37, 64, 1, 12),
+                                             (130, 128, 6, 201)])
+def test_cd_slab_reduce_and_resid_patch_gather_match(c, d_pad, m, n_src):
+    tab, ids, alpha, e, _, _, _ = _gather_problem(
+        c, d_pad, m, n_src, seed=11, sentinel_rows=(2,)
+    )
+    psi_blk = gather_psi_blk(tab, ids)
+    q_pre, p_pre = cd_slab_reduce_pallas(psi_blk, alpha, e, block_ctx=32,
+                                         interpret=True)
+    q_got, p_got = cd_slab_reduce_gather_pallas(tab, ids, alpha, e,
+                                                block_ctx=32, interpret=True)
+    np.testing.assert_allclose(q_got, q_pre, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(p_got, p_pre, rtol=2e-5, atol=2e-6)
+    q_ref, p_ref = cd_slab_reduce_ref(psi_blk, alpha, e)
+    np.testing.assert_allclose(q_got, q_ref, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(p_got, p_ref, rtol=2e-5, atol=2e-6)
+
+    dphi = jnp.asarray(np.random.default_rng(12).normal(size=(c, m)),
+                       jnp.float32)
+    e_pre = cd_resid_patch_pallas(psi_blk, e, dphi, block_ctx=32,
+                                  interpret=True)
+    e_got = cd_resid_patch_gather_pallas(tab, ids, e, dphi, block_ctx=32,
+                                         interpret=True)
+    np.testing.assert_allclose(e_got, e_pre, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(e_got, cd_resid_patch_ref(psi_blk, e, dphi),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_cd_sweep_gather_full_sweep_matches_per_column():
+    """Full k-column sweep through the gather kernel (table slab sliced per
+    block, non-divisible k/block_k) ≡ the per-column cd_update path."""
+    rng = np.random.default_rng(21)
+    c, d_pad, k, k_b, n_src = 60, 128, 5, 2, 19
+    tab_full = jnp.asarray(rng.normal(size=(n_src, k)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, n_src, (c, d_pad)), jnp.int32)
+    alpha = jnp.asarray(rng.random((c, d_pad)) * (rng.random((c, d_pad)) > 0.3),
+                        jnp.float32)
+    e0 = jnp.asarray(rng.normal(size=(c, d_pad)), jnp.float32)
+    w0 = jnp.asarray(rng.normal(size=(c, k)), jnp.float32)
+    j_full = rng.normal(size=(k, k))
+    j_full = jnp.asarray(j_full @ j_full.T + k * np.eye(k), jnp.float32)
+    args = dict(alpha0=0.4, l2=0.05, eta=1.0)
+
+    w_ref, e_ref = w0, e0
+    for f in range(k):
+        psi_col = jnp.take(tab_full[:, f], ids, mode="clip")
+        r1 = w_ref @ j_full[:, f]
+        w_col, e_ref = cd_column_update_pallas(
+            psi_col, alpha, e_ref, w_ref[:, f], r1, j_full[f, f],
+            block_ctx=32, interpret=True, **args,
+        )
+        w_ref = w_ref.at[:, f].set(w_col)
+
+    w_got, e_got = w0, e0
+    for f0 in range(0, k, k_b):
+        kb = min(k_b, k - f0)
+        w_blk, e_got = cd_block_sweep_gather_pallas(
+            tab_full[:, f0:f0 + kb], ids, alpha, e_got, w_got[:, f0:f0 + kb],
+            w_got @ j_full[:, f0:f0 + kb], j_full[f0:f0 + kb, f0:f0 + kb],
+            block_ctx=32, interpret=True, **args,
+        )
+        w_got = w_got.at[:, f0:f0 + kb].set(w_blk)
+
+    np.testing.assert_allclose(w_got, w_ref, rtol=2e-5, atol=2e-6)
     np.testing.assert_allclose(e_got, e_ref, rtol=2e-5, atol=2e-6)
 
 

@@ -73,3 +73,67 @@ def test_mf_dist_matches_reference():
         env={**env, "PYTHONPATH": "src"}, timeout=600,
     )
     assert "MF-DIST-OK" in proc.stdout, proc.stdout[-2000:] + proc.stderr[-3000:]
+
+
+# The sweep_columns/newton_delta routing must keep the denominator clamp:
+# with l2=0 an empty context row has L''=R''=0 and an unclamped Newton step
+# NaNs (the drift the mf_dist refactor fixed).
+CLAMP_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    import sys
+    sys.path.insert(0, "src")
+
+    from repro.core.models import mf, mf_dist
+    from repro.sparse.interactions import build_interactions
+
+    rng = np.random.default_rng(7)
+    n_ctx, n_items, nnz, k = 21, 17, 90, 4
+    cells = rng.choice((n_ctx - 1) * n_items, nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items   # ctx n_ctx-1 is EMPTY
+    assert (n_ctx - 1) not in set(ctx.tolist())
+    data = build_interactions(ctx, item, rng.integers(1, 4, nnz),
+                              1.5 + rng.random(nnz), n_ctx, n_items, alpha0=0.5)
+    hp = mf.MFHyperParams(k=k, alpha0=0.5, l2=0.0)
+    params = mf.init(jax.random.PRNGKey(3), n_ctx, n_items, k)
+
+    ref_p, ref_e = params, mf.residuals(params, data)
+    for _ in range(2):
+        ref_p, ref_e = mf.epoch(ref_p, data, ref_e, hp)
+    assert bool(jnp.isfinite(ref_p.w).all())
+
+    sd = mf_dist.shard_interactions(data, 4)
+    pb = mf_dist.shard_params(params, sd)
+    mesh = mf_dist.make_shard_mesh(4)
+    for variant in ("gather", "route"):
+        epoch = mf_dist.build_epoch(mesh, hp, sd, variant=variant)
+        w, h, eb = pb.w, pb.h, mf_dist.residuals_blocked(pb, sd)
+        for _ in range(2):
+            w, h, eb = epoch(w, h, sd, eb)
+        got = mf_dist.unshard_params(mf.MFParams(w, h), n_ctx, n_items)
+        assert bool(jnp.isfinite(got.w).all()) and bool(jnp.isfinite(got.h).all())
+        np.testing.assert_allclose(np.asarray(got.w), np.asarray(ref_p.w),
+                                   rtol=5e-4, atol=5e-5)
+        np.testing.assert_allclose(np.asarray(got.h), np.asarray(ref_p.h),
+                                   rtol=5e-4, atol=5e-5)
+        print(f"variant={variant} clamp OK")
+    print("MF-DIST-CLAMP-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_mf_dist_empty_context_l2_zero_clamp():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", CLAMP_SCRIPT],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        env={**env, "PYTHONPATH": "src"}, timeout=600,
+    )
+    assert "MF-DIST-CLAMP-OK" in proc.stdout, (
+        proc.stdout[-2000:] + proc.stderr[-3000:]
+    )

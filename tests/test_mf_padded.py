@@ -1,14 +1,21 @@
 """Kernel-fused padded iCD-MF == reference iCD-MF, trajectory-level."""
+import dataclasses
+
 import jax
 import numpy as np
+import pytest
 
 from repro.core.models import mf, mf_padded
 from repro.sparse.interactions import build_interactions
 
 
-def make_problem(seed=0, n_ctx=40, n_items=25, nnz=200, alpha0=0.4):
+def make_problem(seed=0, n_ctx=40, n_items=25, nnz=200, alpha0=0.4,
+                 empty_tail=0):
+    """``empty_tail`` > 0 leaves the last contexts with NO observations —
+    all-padding rows in the ctx-major grid (the gather kernels' sentinel/
+    α=0 path)."""
     rng = np.random.default_rng(seed)
-    cells = rng.choice(n_ctx * n_items, size=nnz, replace=False)
+    cells = rng.choice((n_ctx - empty_tail) * n_items, size=nnz, replace=False)
     ctx, item = cells // n_items, cells % n_items
     y = rng.integers(1, 5, size=nnz).astype(np.float64)
     alpha = alpha0 + 1.0 + rng.random(nnz)
@@ -29,6 +36,77 @@ def test_padded_epoch_matches_reference():
         p_pad, e_pad = mf_padded.epoch(p_pad, pdata, e_pad, hp)
         np.testing.assert_allclose(p_pad.w, p_ref.w, rtol=3e-4, atol=3e-5)
         np.testing.assert_allclose(p_pad.h, p_ref.h, rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("psi_dispatch", ["gather", "pregather"])
+def test_padded_fused_dispatch_matches_reference(psi_dispatch):
+    """Both fused Ψ routings (in-kernel gather / pre-gathered tile) track
+    the flat reference at a non-divisible k=8/block_k=3 split, with
+    empty-context rows (all-padding grid rows) in the data."""
+    data = make_problem(seed=11, empty_tail=2)
+    hp = mf.MFHyperParams(k=8, alpha0=0.4, l2=0.05, block_k=3,
+                          psi_dispatch=psi_dispatch)
+    params = mf.init(jax.random.PRNGKey(2), data.n_ctx, data.n_items, 8)
+    pdata = mf_padded.pad_interactions(data)
+
+    p_ref, p_pad = params, params
+    e_ref = mf.residuals(p_ref, data)
+    e_pad = mf_padded.residuals(p_pad, pdata)
+    for _ in range(2):
+        p_ref, e_ref = mf.epoch(p_ref, data, e_ref, hp)
+        p_pad, e_pad = mf_padded.epoch(p_pad, pdata, e_pad, hp)
+        np.testing.assert_allclose(p_pad.w, p_ref.w, rtol=3e-4, atol=3e-5)
+        np.testing.assert_allclose(p_pad.h, p_ref.h, rtol=3e-4, atol=3e-5)
+
+
+def test_padded_fused_gather_matches_pregather_exactly():
+    """The two Ψ routings run the same FP program per Newton step — their
+    trajectories must agree to float roundoff, not just model tolerance."""
+    data = make_problem(seed=12, empty_tail=1)
+    params = mf.init(jax.random.PRNGKey(3), data.n_ctx, data.n_items, 8)
+    pdata = mf_padded.pad_interactions(data)
+    finals = {}
+    for disp in ("gather", "pregather"):
+        hp = mf.MFHyperParams(k=8, alpha0=0.4, l2=0.05, block_k=3,
+                              psi_dispatch=disp)
+        p, e_pad = params, mf_padded.residuals(params, pdata)
+        for _ in range(2):
+            p, e_pad = mf_padded.epoch(p, pdata, e_pad, hp)
+        finals[disp] = (p, e_pad)
+    np.testing.assert_allclose(finals["gather"][0].w,
+                               finals["pregather"][0].w, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(finals["gather"][0].h,
+                               finals["pregather"][0].h, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(finals["gather"][1], finals["pregather"][1],
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_padded_gather_falls_back_when_slab_too_big(monkeypatch):
+    """When the ψ slab alone busts the (shrunken) VMEM budget the fused
+    dispatch must silently fall back to the pre-gathered path — same
+    numbers, no VmemBudgetError escaping epoch()."""
+    from repro.kernels import vmem
+
+    # large catalogue relative to the budget: the (n_items, k_b) slab is
+    # what overflows, while the pre-gathered row tiles still fit
+    data = make_problem(seed=13, n_ctx=30, n_items=2000, nnz=300)
+    params = mf.init(jax.random.PRNGKey(4), data.n_ctx, data.n_items, 8)
+    pdata = mf_padded.pad_interactions(data)
+    hp = mf.MFHyperParams(k=8, alpha0=0.4, l2=0.05, block_k=3)
+
+    p_ref, e_ref = params, mf_padded.residuals(params, pdata)
+    p_ref, e_ref = mf_padded.epoch(p_ref, pdata, e_ref, hp)
+
+    # budget too small for the resident ψ slab, still enough for row tiles
+    monkeypatch.setattr(vmem, "VMEM_BUDGET_BYTES", 30_000)
+    assert not vmem.resolve_cd_sweep_dispatch(
+        pdata.alpha_c.shape[1], 3, data.n_items, n_rows=data.n_ctx
+    )[0]
+    hp2 = dataclasses.replace(hp, l2=0.05000001)  # new static hp ⇒ retrace
+    p_fb, e_fb = params, mf_padded.residuals(params, pdata)
+    p_fb, e_fb = mf_padded.epoch(p_fb, pdata, e_fb, hp2)
+    np.testing.assert_allclose(p_fb.w, p_ref.w, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(p_fb.h, p_ref.h, rtol=1e-4, atol=1e-6)
 
 
 def test_padded_layout_roundtrip():

@@ -1,9 +1,13 @@
-"""Model-level invariants (property tests on the transformer + kernels path)."""
+"""Model-level invariants (property tests on the transformer + kernels path).
+
+The LM configs are the shared inline smoke-scale ``LMConfig``s from
+``tests/_smoke_configs.py`` (the seed-template registry configs were
+removed in PR 4)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+from _smoke_configs import GEMMA_SMOKE, GQA_SMOKE, QWEN_SMOKE
 
-from repro.configs import get_smoke_config
 from repro.core.models import mf
 from repro.models import transformer as T
 from repro.sparse.interactions import build_interactions
@@ -12,7 +16,7 @@ from repro.sparse.interactions import build_interactions
 def test_causality_future_tokens_do_not_affect_past_logits():
     """Changing token t must not change logits at positions < t (causal
     mask + rolling local windows)."""
-    cfg = get_smoke_config("gemma2-2b")  # exercises local+global alternation
+    cfg = GEMMA_SMOKE  # exercises local+global alternation
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab)
     toks2 = toks.at[0, 7].set((toks[0, 7] + 1) % cfg.vocab)
@@ -24,7 +28,7 @@ def test_causality_future_tokens_do_not_affect_past_logits():
 
 def test_scan_vs_unrolled_layers_identical():
     """cfg.scan_layers must be a pure compilation choice."""
-    cfg = get_smoke_config("qwen1.5-4b")
+    cfg = QWEN_SMOKE
     import dataclasses
 
     cfg_u = dataclasses.replace(cfg, scan_layers=False)
@@ -80,7 +84,7 @@ def test_mf_epoch_pallas_gram_matches_xla():
 
 def test_decode_cache_isolation_between_batch_rows():
     """Decode rows must not leak state across the batch dimension."""
-    cfg = get_smoke_config("deepseek-67b")
+    cfg = GQA_SMOKE
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     cache = T.init_cache(cfg, 2, 8, dtype=jnp.float32)
     t_a = jnp.asarray([[3], [9]], jnp.int32)

@@ -3,14 +3,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke_config
+from _smoke_configs import QWEN_SMOKE
+
 from repro.models import transformer as T
 from repro.serve.decode import generate
 from repro.serve.recsys_serve import bulk_score, mf_retrieval_score_fn, retrieval_topk
 
 
 def test_generate_greedy_matches_manual_decode():
-    cfg = get_smoke_config("qwen1.5-4b")
+    cfg = QWEN_SMOKE
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab)
     out = generate(cfg, params, prompt, max_new_tokens=3,
