@@ -4,13 +4,22 @@ Tracks ``BENCH_topk_score.json`` at the repo root:
 
   * analytic HBM-traffic model — fused ``kernels/topk_score`` (ψ read once,
     scores never leave VMEM) vs the dense path (ψ read + (B, n_items)
-    score matrix written AND re-read by ``lax.top_k``);
+    score matrix written AND re-read by ``lax.top_k``), plus the CLUSTER
+    model: per-shard ψ reads + the cross-shard merge's S·K candidate
+    traffic (the sharding overhead is the tiny merge term, not the ψ
+    stream — sharding is ~free in bytes while multiplying HBM capacity);
   * measured CPU comparison of the two paths (interpret-mode kernels, so
     wall-clock is emulation-bound and informational only);
+  * batcher p50/p99 queue+service latency under a synthetic open-loop
+    arrival trace (simulated clock; service time from the analytic model
+    so the numbers are not emulation-bound), with every routed result
+    HARD-asserted against the per-row dense oracle;
   * HARD parity asserts — streaming kernel vs dense ``lax.top_k`` ids for
-    every k-separable model, with and without exclude masks, plus the
-    streaming ranking-eval harness vs dense metrics. A broken kernel or
-    export contract fails the whole bench (the CI serve-smoke gate).
+    every k-separable model, with and without exclude masks, the sharded
+    cluster vs the single-device engine (ids AND scores bit-identical at
+    shard counts {1,2,3,4}), plus the streaming ranking-eval harness vs
+    dense metrics. A broken kernel, merge, or export contract fails the
+    whole bench (the CI serve-smoke gate).
 
 Run: ``python -m benchmarks.run --quick`` (serve section) or
 ``python -m benchmarks.serve_bench --smoke``.
@@ -47,6 +56,46 @@ def topk_traffic_bytes(b: int, n_items: int, d: int, k: int) -> Dict[str, float]
     }
 
 
+def cluster_traffic_bytes(
+    b: int, n_items: int, d: int, k: int, n_shards: int
+) -> Dict[str, float]:
+    """Analytic HBM bytes for the SHARDED path: every shard streams its ψ
+    slab once (total = one ψ read), φ replicates to S shards, and the
+    cross-shard merge writes + re-reads the S·K_pad candidate score/id
+    rows before the final (B, K_pad) result. Per-shard bytes bound the
+    per-device time (shards run concurrently)."""
+    k_pad = -(-k // 128) * 128
+    psi = 4.0 * n_items * d                       # summed over shards
+    phi = 4.0 * b * d * n_shards                  # replicated
+    cand = 2 * 2 * 4.0 * b * k_pad * n_shards     # candidates: write + read
+    final = 2 * 4.0 * b * k_pad
+    total = psi + phi + cand + final
+    single = topk_traffic_bytes(b, n_items, d, k)["fused_bytes"]
+    per_shard = psi / n_shards + 4.0 * b * d + 2 * 4.0 * b * k_pad
+    return {
+        "cluster_bytes": total,
+        "single_fused_bytes": single,
+        "shard_overhead_ratio": total / single,
+        "per_shard_bytes": per_shard,
+        "per_shard_memory_s": per_shard / HBM_BW,
+        "capacity_x": float(n_shards),  # ψ rows servable vs one device's HBM
+    }
+
+
+def _zoo_models(quick: bool):
+    """Tiny (φ, ψ) exports for every k-separable model (the one shared
+    builder in ``repro.core.models.zoo`` at bench shapes — used by the
+    kernel-parity and cluster-parity sections)."""
+    from repro.core.models.zoo import ZOO, model_phi_psi
+
+    rng = np.random.default_rng(0)
+    n_ctx, n_items, b, k = (24, 40, 8, 6) if quick else (128, 512, 32, 16)
+    return {
+        name: model_phi_psi(name, rng, n_ctx=n_ctx, n_items=n_items, b=b, k=k)
+        for name in ZOO
+    }
+
+
 def _assert_topk_parity(name, phi, psi, k, exclude_mask=None, block_items=32):
     """Streaming kernel vs dense lax.top_k/oracle: ids exact, scores close."""
     from repro.kernels.topk_score import topk_score, topk_score_ref
@@ -71,15 +120,12 @@ def _assert_topk_parity(name, phi, psi, k, exclude_mask=None, block_items=32):
 def _zoo_parity(quick: bool) -> Dict[str, dict]:
     """Every model through its export_psi/build_phi contract, masked and
     unmasked, against the dense path."""
-    from repro.core.design import make_design
-    from repro.core.models import fm, mf, mfsi, parafac, tucker
     from repro.serve.engine import exclude_mask_from_lists
 
     rng = np.random.default_rng(0)
-    n_ctx, n_items, b, k, topk = (24, 40, 8, 6, 10) if quick else (128, 512, 32, 16, 100)
+    topk = 10 if quick else 100
     out = {}
-
-    def check(name, phi, psi):
+    for name, (phi, psi) in _zoo_models(quick).items():
         excl = exclude_mask_from_lists(
             [rng.choice(psi.shape[0], size=min(5, psi.shape[0] // 2),
                         replace=False) for _ in range(phi.shape[0])],
@@ -90,46 +136,156 @@ def _zoo_parity(quick: bool) -> Dict[str, dict]:
         _assert_topk_parity(f"{name}+mask", phi, psi, kk, excl)
         out[name] = {"parity_ok": True, "d": int(phi.shape[1]),
                      "n_items": int(psi.shape[0]), "k": kk}
-
-    p_mf = mf.init(jax.random.PRNGKey(0), n_ctx, n_items, 8)
-    check("mf", mf.build_phi(p_mf, jnp.arange(b)), mf.export_psi(p_mf))
-
-    x = make_design(
-        [dict(name="id", ids=np.arange(n_ctx) % 11, vocab=11),
-         dict(name="grp", ids=rng.integers(0, 5, n_ctx), vocab=5)], n_ctx)
-    z = make_design(
-        [dict(name="item_id", ids=np.arange(n_items), vocab=n_items),
-         dict(name="genre", ids=rng.integers(0, 7, n_items), vocab=7)], n_items)
-
-    p_si = mfsi.init(jax.random.PRNGKey(1), x.p, z.p, k)
-    check("mfsi", mfsi.build_phi(p_si, x, jnp.arange(b)), mfsi.export_psi(p_si, z))
-
-    hp_fm = fm.FMHyperParams(k=k)
-    p_fm = fm.init(jax.random.PRNGKey(2), x.p, z.p, k)
-    p_fm = p_fm._replace(
-        b=jnp.asarray(0.2),
-        w_lin=jnp.asarray(rng.normal(size=x.p), jnp.float32),
-        h_lin=jnp.asarray(rng.normal(size=z.p), jnp.float32),
-    )
-    check("fm", fm.build_phi(p_fm, x, hp_fm, jnp.arange(b)),
-          fm.export_psi(p_fm, z, hp_fm))
-
-    c1 = jnp.asarray(rng.integers(0, 9, b), jnp.int32)
-    c2 = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
-    p_pf = parafac.init(jax.random.PRNGKey(3), 9, 7, n_items, k)
-    check("parafac", parafac.build_phi(p_pf, c1, c2), parafac.export_psi(p_pf))
-
-    p_tk = tucker.init(jax.random.PRNGKey(4), 9, 7, n_items, 4, 3, k)
-    check("tucker", tucker.build_phi(p_tk, c1, c2), tucker.export_psi(p_tk))
     return out
+
+
+def _cluster_parity(quick: bool) -> Dict[str, dict]:
+    """Sharded cluster vs single-device engine vs dense oracle: ids AND
+    scores BIT-identical for every model at shard counts {1, 2, 3, 4},
+    with and without per-row exclusion — the acceptance gate of the
+    sharded serving tier."""
+    from repro.kernels.topk_score import topk_score_ref
+    from repro.serve.cluster import ShardedRetrievalCluster
+    from repro.serve.engine import (
+        RetrievalEngine,
+        exclude_ids_from_lists,
+        exclude_mask_from_lists,
+    )
+
+    rng = np.random.default_rng(7)
+    topk = 10 if quick else 100
+    out = {}
+    for name, (phi, psi) in _zoo_models(quick).items():
+        kk = min(topk, psi.shape[0])
+        engine = RetrievalEngine(psi, lambda p=phi: p, k=kk, block_items=32)
+        es, ei = engine.topk_phi(phi)
+        lists = [rng.choice(psi.shape[0], size=min(5, psi.shape[0] // 2),
+                            replace=False) for _ in range(phi.shape[0])]
+        eids = exclude_ids_from_lists(lists)
+        es2, ei2 = engine.topk_phi(phi, exclude_ids=eids)
+        rs2, ri2 = topk_score_ref(
+            phi, psi, kk, exclude_mask_from_lists(lists, psi.shape[0])
+        )
+        for n_shards in (1, 2, 3, 4):
+            cl = ShardedRetrievalCluster(
+                lambda p=phi: p, n_shards=n_shards, k=kk, block_items=32,
+                psi_table=psi,
+            )
+            cs, ci = cl.topk_phi(phi)
+            if not ((np.asarray(ci) == np.asarray(ei)).all()
+                    and (np.asarray(cs) == np.asarray(es)).all()):
+                raise AssertionError(
+                    f"serve bench parity FAILED for {name}: cluster "
+                    f"(n_shards={n_shards}) is not bit-identical to the "
+                    "single-device engine"
+                )
+            cs2, ci2 = cl.topk_phi(phi, exclude_ids=eids)
+            if not ((np.asarray(ci2) == np.asarray(ri2)).all()
+                    and (np.asarray(ci2) == np.asarray(ei2)).all()
+                    and (np.asarray(cs2) == np.asarray(es2)).all()):
+                raise AssertionError(
+                    f"serve bench parity FAILED for {name}: sharded "
+                    f"exclude path (n_shards={n_shards}) diverges"
+                )
+        out[name] = {"parity_ok": True, "shard_counts": [1, 2, 3, 4],
+                     "k": kk, "n_items": int(psi.shape[0])}
+    return out
+
+
+def _batcher_bench(quick: bool) -> dict:
+    """Open-loop single-row arrival trace through the micro-batcher over a
+    sharded cluster (simulated clock). Queue wait comes from the flush
+    policy; service time from the analytic per-shard traffic model (NOT
+    interpret-mode wall clock). Every routed result is hard-asserted
+    against the per-row dense oracle — the out-of-order-routing gate."""
+    from repro.core.models import mf
+    from repro.kernels.topk_score import topk_score_ref
+    from repro.serve.batcher import MicroBatcher
+    from repro.serve.cluster import ShardedRetrievalCluster
+    from repro.serve.engine import exclude_ids_from_lists
+
+    rng = np.random.default_rng(11)
+    n_ctx, n_items, k, kk = (64, 40, 8, 10) if quick else (512, 4096, 32, 100)
+    n_requests = 64 if quick else 512
+    n_shards, max_batch, max_delay = 2, 8, 2e-3
+    params = mf.init(jax.random.PRNGKey(6), n_ctx, n_items, k)
+    cluster = ShardedRetrievalCluster(
+        lambda ctx: mf.build_phi(params, ctx), n_shards=n_shards,
+        k=min(kk, n_items), block_items=32,
+        psi_table=mf.export_psi(params),
+    )
+    clock = {"t": 0.0}
+    batcher = MicroBatcher(
+        lambda phi, eids: cluster.topk_phi(phi, exclude_ids=eids),
+        max_batch=max_batch, max_delay=max_delay, pad_to=8,
+        clock=lambda: clock["t"], version_fn=lambda: cluster.version,
+    )
+    phi_all = np.asarray(mf.build_phi(params, jnp.arange(n_ctx)))
+    psi = np.asarray(mf.export_psi(params))
+    # analytic per-flush service time: per-shard stream + merge
+    service_s = cluster_traffic_bytes(
+        max_batch, n_items, phi_all.shape[1], min(kk, n_items), n_shards
+    )["per_shard_memory_s"]
+
+    # open-loop arrivals: exponential inter-arrival, mean = max_delay/4 ⇒
+    # size flushes dominate, deadline bounds the tail
+    arrivals = np.cumsum(rng.exponential(max_delay / 4, size=n_requests))
+    users = rng.integers(0, n_ctx, size=n_requests)
+    excls = [rng.choice(n_items, size=int(rng.integers(0, 4)), replace=False)
+             for _ in range(n_requests)]
+    submit_t, tickets = {}, []
+    for t_arr, u, ex in zip(arrivals, users, excls):
+        clock["t"] = float(t_arr)
+        tk = batcher.submit(
+            phi_all[u], exclude=ex,
+            key=("user", int(u), tuple(np.sort(ex).tolist())),
+        )
+        submit_t[tk] = float(t_arr)
+        tickets.append((tk, int(u), ex))
+    clock["t"] = float(arrivals[-1]) + max_delay
+    batcher.step()
+    batcher.flush()
+
+    lat = []
+    for tk, u, ex in tickets:
+        done = batcher.completed_at(tk)
+        scores, ids = batcher.result(tk)
+        # HARD routing assert: this ticket's rows == ITS user's oracle row
+        rs, ri = topk_score_ref(
+            phi_all[u : u + 1], psi, min(kk, n_items),
+            exclude_ids=exclude_ids_from_lists([ex]),
+        )
+        if not (ids == np.asarray(ri)[0]).all():
+            raise AssertionError(
+                "serve bench FAILED: batcher routed the wrong result to a "
+                f"ticket (user {u})"
+            )
+        lat.append(done - submit_t[tk] + service_s)
+    lat = np.asarray(lat)
+    return {
+        "routing_ok": True,
+        "trace": {
+            "n_requests": n_requests, "n_shards": n_shards,
+            "max_batch": max_batch, "max_delay_s": max_delay,
+            "mean_interarrival_s": float(max_delay / 4),
+        },
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "queue_p99_s": float(np.percentile(lat - service_s, 99)),
+        "service_s_analytic": float(service_s),
+        "stats": dict(batcher.stats),
+        "note": "queue wait simulated-clock exact; service time analytic "
+                "(interpret-mode wall clock is emulation-bound)",
+    }
 
 
 def _eval_harness_parity(quick: bool) -> dict:
     """Streaming ranking_eval (never a (n_eval, n_items) array) vs dense
-    metrics over the same exclusion protocol."""
+    metrics over the same exclusion protocol — single-table AND sharded."""
     from repro.core.metrics import ndcg_at_k, recall_at_k
     from repro.core.models import mf
     from repro.eval.ranking import ranking_eval
+    from repro.serve.cluster import ShardedRetrievalCluster
     from repro.serve.engine import exclude_mask_from_lists
 
     rng = np.random.default_rng(1)
@@ -152,7 +308,20 @@ def _eval_harness_parity(quick: bool) -> dict:
             f"serve bench parity FAILED for ranking_eval: streaming "
             f"({res}) vs dense (recall={r}, ndcg={n})"
         )
-    return {"parity_ok": True, **res}
+    # sharded eval over the cluster: same metrics past one device's HBM
+    cl = ShardedRetrievalCluster(n_shards=3, k=topk, block_items=32,
+                                 psi_table=psi)
+    res_sh = ranking_eval(phi, None, truth, k=topk,
+                          batch_rows=max(8, n_eval // 3), exclude=excl,
+                          cluster=cl)
+    sharded_ok = (abs(res_sh[f"recall@{topk}"] - r) < 1e-5
+                  and abs(res_sh[f"ndcg@{topk}"] - n) < 1e-5)
+    if not sharded_ok:
+        raise AssertionError(
+            f"serve bench parity FAILED for SHARDED ranking_eval: "
+            f"({res_sh}) vs dense (recall={r}, ndcg={n})"
+        )
+    return {"parity_ok": True, "sharded_parity_ok": True, **res}
 
 
 def _measure_cpu(quick: bool, n_rounds: int = 3) -> dict:
@@ -186,7 +355,8 @@ def _measure_cpu(quick: bool, n_rounds: int = 3) -> dict:
 
 
 def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict:
-    """Fused retrieval vs dense baseline; writes BENCH_topk_score.json.
+    """Fused retrieval vs dense baseline + the sharded cluster tier; writes
+    BENCH_topk_score.json.
 
     The tracked repo-root JSON is always the quick-mode (CI smoke) shape;
     ``--full`` runs land in BENCH_topk_score_full.json."""
@@ -202,33 +372,63 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
         f"B={b}": topk_traffic_bytes(b=b, n_items=10_000_000, d=128, k=100)
         for b in (8, 64, 256, 1024)
     }
+    analytic_cluster = {
+        f"S={s}": cluster_traffic_bytes(
+            b=256, n_items=10_000_000, d=128, k=100, n_shards=s
+        )
+        for s in (2, 4, 8, 16)
+    }
     models = _zoo_parity(quick)
+    cluster = _cluster_parity(quick)
+    batcher = _batcher_bench(quick)
     eval_parity = _eval_harness_parity(quick)
     measured = _measure_cpu(quick)
     results = {
         "kernel": "kernels/topk_score (fused score+top-K) vs dense "
-                  "(B,n_items) matmul + lax.top_k",
+                  "(B,n_items) matmul + lax.top_k; serve/cluster sharded "
+                  "tier on top",
         "mode": "quick" if quick else "full",
         "backend": "interpret" if use_interpret() else "compiled",
         "analytic_web_scale": {
             "shape": "n_items=10M catalogue, D=128, K=100, fp32",
             **analytic,
         },
+        "analytic_cluster": {
+            "shape": "B=256, n_items=10M, D=128, K=100, fp32; per-shard ψ "
+                     "stream + S·K merge candidates",
+            **analytic_cluster,
+        },
         "measured_cpu": measured,
         "models": models,
+        "cluster": cluster,
+        "batcher": batcher,
         "eval_harness": eval_parity,
         "acceptance": {
             "bytes_ratio_at_B256": analytic["B=256"]["bytes_ratio"],
+            "shard_overhead_at_S4": analytic_cluster["S=4"][
+                "shard_overhead_ratio"
+            ],
             "model_parity": {m: r["parity_ok"] for m, r in models.items()},
+            "cluster_parity": all(r["parity_ok"] for r in cluster.values()),
+            "batcher_routing_ok": batcher["routing_ok"],
             "eval_parity": eval_parity["parity_ok"],
+            "sharded_eval_parity": eval_parity["sharded_parity_ok"],
             "target": ">= 2x fewer HBM bytes per retrieval batch at B >= 256 "
                       "(analytic; scores never leave VMEM); streaming top-K "
                       "== dense lax.top_k ids for every k-separable model "
-                      "incl. exclude masks; streaming ranking-eval == dense "
-                      "metrics without a (n_eval, n_items) array",
+                      "incl. exclude masks; sharded cluster bit-identical "
+                      "to the single-device engine at shard counts 1-4 "
+                      "(<= 1.05x byte overhead at S=4); batcher routes "
+                      "out-of-order requests exactly; streaming ranking-eval "
+                      "== dense metrics without a (n_eval, n_items) array, "
+                      "single-table and sharded",
             "met": analytic["B=256"]["bytes_ratio"] >= 2.0
+                   and analytic_cluster["S=4"]["shard_overhead_ratio"] <= 1.05
                    and all(r["parity_ok"] for r in models.values())
-                   and eval_parity["parity_ok"],
+                   and all(r["parity_ok"] for r in cluster.values())
+                   and batcher["routing_ok"]
+                   and eval_parity["parity_ok"]
+                   and eval_parity["sharded_parity_ok"],
         },
     }
     if out_path:

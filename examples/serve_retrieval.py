@@ -1,9 +1,14 @@
-"""Serving: batched retrieval against an iCD-MF model through the fused
-retrieval engine (paper-native k-separable path, §5.1) — the Pallas
-score+top-k kernel streams ψ-table blocks through VMEM with a running
-top-K merge, so the (B, n_items) score matrix is never materialized —
-plus the chunked jnp reducer that is its reference oracle, and a
-streaming leave-one-out ranking eval over the full catalogue.
+"""Serving: the sharded online retrieval service end-to-end — train an
+iCD-MF model, publish its ψ table into a multi-shard cluster at every epoch
+boundary (double-buffered, versioned), answer micro-batched single-row
+queries through the admission queue, and run the streaming leave-one-out
+ranking eval over the same sharded table.
+
+Every path is the paper-native k-separable product ⟨φ(context), ψ(item)⟩
+(§5.1): per shard the fused Pallas score+top-k kernel streams ψ-table
+blocks through VMEM with a running top-K merge (the (B, n_items) score
+matrix is never materialized), and the cross-shard K-way merge reproduces
+the single-device engine bit-for-bit.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -15,52 +20,92 @@ import numpy as np
 
 from repro.core.models import mf
 from repro.eval.ranking import ranking_eval
+from repro.serve.batcher import MicroBatcher
+from repro.serve.cluster import ShardedRetrievalCluster
 from repro.serve.engine import RetrievalEngine
-from repro.serve.recsys_serve import mf_retrieval_score_fn, retrieval_topk
+from repro.serve.publish import PsiPublisher
+from repro.sparse.interactions import build_interactions
 
 
 def main():
-    n_users, n_items, k = 1000, 50_000, 64
+    n_users, n_items, k, n_shards = 1000, 50_000, 64, 4
+    rng = np.random.default_rng(0)
     params = mf.init(jax.random.PRNGKey(0), n_users, n_items, k)
-    engine = RetrievalEngine(
-        mf.export_psi(params), lambda ctx: mf.build_phi(params, ctx), k=100
-    )
 
-    # batched online requests through the fused kernel
+    # --- train → publish: live ψ refresh at every epoch boundary ---------
+    nnz = 20_000
+    cells = rng.choice(n_users * n_items, size=nnz, replace=False)
+    data = build_interactions(
+        cells // n_items, cells % n_items, rng.integers(1, 5, nnz),
+        1.0 + rng.random(nnz), n_users, n_items, alpha0=0.1,
+    )
+    cluster = ShardedRetrievalCluster(
+        lambda ctx: mf.build_phi(params, ctx), n_shards=n_shards, k=100
+    )
+    pub = PsiPublisher(cluster, mf.export_psi, every=1)
+    hp = mf.MFHyperParams(k=k, alpha0=0.1, l2=0.05)
+    params = mf.fit(params, data, hp, n_epochs=2, callback=pub)
+    cluster.phi_fn = lambda ctx: mf.build_phi(params, ctx)
+    print(f"published versions {[v for _, v in pub.versions]}: "
+          f"{n_items} items over {n_shards} shards "
+          f"(rows_per={cluster.table.rows_per})")
+
+    # --- batched online queries over the sharded table -------------------
     for batch in (8, 64):
         ctx = jnp.arange(batch)
-        jax.block_until_ready(engine.topk(ctx))  # warmup (trace+compile)
+        jax.block_until_ready(cluster.topk(ctx))  # warmup (trace+compile)
         t0 = time.perf_counter()
-        scores, ids = engine.topk(ctx)
+        scores, ids = cluster.topk(ctx)
         jax.block_until_ready(ids)
         dt = time.perf_counter() - t0
         print(f"batch={batch:3d}: {dt * 1e3:7.2f} ms "
-              f"({batch * n_items / dt / 1e6:.1f} M cand/s)")
+              f"({batch * n_items / dt / 1e6:.1f} M cand/s over "
+              f"{n_shards} shards)")
 
-    # engine vs the dense (B, n_items) matmul + lax.top_k path
+    # --- sharded cluster vs single-device engine vs dense lax.top_k ------
+    engine = RetrievalEngine(
+        mf.export_psi(params), lambda ctx: mf.build_phi(params, ctx), k=100
+    )
+    cs, ci = cluster.topk(jnp.arange(8))
+    es, ei = engine.topk(jnp.arange(8))
+    assert bool((ci == ei).all()) and bool((cs == es).all())
     dense = jax.lax.top_k(params.w[:8] @ params.h.T, 100)[1]
-    assert bool((engine.topk(jnp.arange(8))[1] == dense).all())
-    print("engine top-k == dense top-k ✓")
+    assert bool((ci == dense).all())
+    print("cluster top-k == engine top-k == dense top-k ✓")
 
-    # chunked jnp reducer (the kernel's reference oracle), batched query
-    score = mf_retrieval_score_fn(params.w[:4], params.h)
-    scores, ids = retrieval_topk(score, n_items, k=100, chunk=8192)
-    full = np.asarray(params.w[:4] @ params.h.T)
-    for r in range(4):
-        assert set(np.asarray(ids)[r].tolist()) == set(np.argsort(-full[r])[:100].tolist())
-    print("chunked top-k == exact top-k ✓")
+    # --- micro-batched single-row requests (the online p99 path) ---------
+    batcher = MicroBatcher(
+        lambda phi, eids: cluster.topk_phi(phi, exclude_ids=eids),
+        max_batch=16, max_delay=2e-3,
+        version_fn=lambda: cluster.version,
+    )
+    users = rng.integers(0, n_users, size=48)
+    phi_all = np.asarray(mf.build_phi(params, jnp.arange(n_users)))
+    t0 = time.perf_counter()
+    tickets = [
+        batcher.submit(phi_all[u], exclude=rng.choice(n_items, size=5),
+                       key=("user", int(u)))
+        for u in users
+    ]
+    batcher.flush()
+    dt = time.perf_counter() - t0
+    assert all(batcher.result(t) is not None for t in tickets)
+    print(f"batcher: {len(users)} single-row requests in {dt * 1e3:.1f} ms, "
+          f"{batcher.stats['flushes']} flushes "
+          f"(size={batcher.stats['flush_by_size']} "
+          f"forced={batcher.stats['flush_forced']}), "
+          f"cache_hits={batcher.stats['cache_hits']} ✓")
 
-    # streaming leave-one-out eval: full catalogue, no (n_eval, n_items)
-    # score matrix — ψ blocks stream through the kernel per 256-row batch
-    rng = np.random.default_rng(0)
+    # --- streaming sharded eval: full catalogue, no (n_eval, n_items) ----
     n_eval = 512
     true_items = rng.integers(0, n_items, size=n_eval)
     res = ranking_eval(
-        mf.build_phi(params, jnp.arange(n_eval)), mf.export_psi(params),
-        true_items, k=100, batch_rows=256,
-        exclude=[rng.choice(n_items, size=20, replace=False) for _ in range(n_eval)],
+        mf.build_phi(params, jnp.arange(n_eval)), None, true_items,
+        k=100, batch_rows=256, cluster=cluster,
+        exclude=[rng.choice(n_items, size=20, replace=False)
+                 for _ in range(n_eval)],
     )
-    print(f"streaming eval: recall@100={res['recall@100']:.4f} "
+    print(f"streaming sharded eval: recall@100={res['recall@100']:.4f} "
           f"ndcg@100={res['ndcg@100']:.4f} over {res['n_eval']} contexts")
 
 

@@ -1,0 +1,62 @@
+"""Tiny reference instances of every k-separable model.
+
+One helper, shared by the kernel/engine/cluster parity tests and the serve
+bench, that builds a small (φ, ψ) export pair per model through the real
+``build_phi``/``export_psi`` contract (``serve/engine.py``) — so every
+consumer exercises the same five models and a new zoo member only has to
+be added HERE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.design import make_design
+from repro.core.models import fm, mf, mfsi, parafac, tucker
+
+ZOO = ("mf", "mfsi", "fm", "parafac", "tucker")
+
+
+def rand_f32(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape),
+                       jnp.float32)
+
+
+def model_phi_psi(name, rng, *, n_ctx=20, n_items=37, b=9, k=6):
+    """A small instance of zoo model ``name``; returns (phi (B, D),
+    psi (n_items, D)) through the model's export contract."""
+    if name == "mf":
+        params = mf.init(jax.random.PRNGKey(0), n_ctx, n_items, k)
+        return mf.build_phi(params, jnp.arange(b)), mf.export_psi(params)
+    if name == "parafac":
+        params = parafac.init(jax.random.PRNGKey(1), 8, 7, n_items, k)
+        c1 = jnp.asarray(rng.integers(0, 8, b), jnp.int32)
+        c2 = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
+        return parafac.build_phi(params, c1, c2), parafac.export_psi(params)
+    if name == "tucker":
+        params = tucker.init(jax.random.PRNGKey(2), 8, 7, n_items, 4, 3, k)
+        c1 = jnp.asarray(rng.integers(0, 8, b), jnp.int32)
+        c2 = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
+        return tucker.build_phi(params, c1, c2), tucker.export_psi(params)
+    x = make_design(
+        [dict(name="id", ids=np.arange(n_ctx) % 11, vocab=11),
+         dict(name="grp", ids=rng.integers(0, 5, n_ctx), vocab=5)], n_ctx)
+    z = make_design(
+        [dict(name="item_id", ids=np.arange(n_items), vocab=n_items),
+         dict(name="genre", ids=rng.integers(0, 7, n_items), vocab=7)], n_items)
+    if name == "mfsi":
+        params = mfsi.init(jax.random.PRNGKey(3), x.p, z.p, k)
+        return (mfsi.build_phi(params, x, jnp.arange(b)),
+                mfsi.export_psi(params, z))
+    if name != "fm":
+        raise ValueError(f"unknown zoo model {name!r}")
+    hp = fm.FMHyperParams(k=k)
+    params = fm.init(jax.random.PRNGKey(4), x.p, z.p, k)
+    # break the all-zero linear/bias init so ψ_spec is a real column
+    params = params._replace(
+        b=jnp.asarray(0.3), w_lin=rand_f32((x.p,), 10),
+        h_lin=rand_f32((z.p,), 11),
+    )
+    return (fm.build_phi(params, x, hp, jnp.arange(b)),
+            fm.export_psi(params, z, hp))

@@ -10,10 +10,19 @@ first at catalogue scale.
 This harness never allocates it: evaluation contexts stream in batches of
 ``batch_rows`` φ rows through the fused ``kernels/topk_score`` kernel
 (ψ-table blocks through VMEM, running top-K merge), so the largest live
-arrays are the (batch_rows, D) φ tile, the optional (batch_rows, n_items)
-exclude-mask tile, and the (batch_rows, K) results. The per-row metric
-math is shared with the dense path (``core.metrics.*_from_topk``), so
-streaming and dense evaluation are numerically identical (parity-tested).
+arrays are the (batch_rows, D) φ tile, the (batch_rows, L) −1-padded
+exclude-id tile, and the (batch_rows, K) results. Exclusion rides the
+kernel's id-list form (``serve.engine.exclude_ids_from_lists``): the
+ψ-block-aligned admissibility slices are built in-VMEM per block, so an
+exclude mask never materializes a full-catalogue row — on host OR device —
+at any ``n_items``. The per-row metric math is shared with the dense path
+(``core.metrics.*_from_topk``), so streaming and dense evaluation are
+numerically identical (parity-tested).
+
+Past one device's HBM the same loop runs against a
+``serve.cluster.ShardedRetrievalCluster`` (``cluster=``): per batch the
+cluster fans the φ tile over the ψ shards and K-way-merges the candidates
+— bit-identical top-K to the single-table path, so the metrics are too.
 
 Per-epoch use from the sweep loops: every model's ``fit`` already takes a
 ``callback(epoch, params)``; :func:`fit_eval_callback` adapts this harness
@@ -29,38 +38,46 @@ import numpy as np
 
 from repro.core.metrics import ndcg_from_topk, recall_from_topk
 from repro.kernels.topk_score.ops import topk_score
-from repro.serve.engine import exclude_mask_from_lists
+from repro.serve.engine import exclude_ids_from_lists
 
 
 def ranking_eval(
     phi: jnp.ndarray,             # (n_eval, D) φ rows of the eval contexts
-    psi: jnp.ndarray,             # (n_items, D) ψ table
+    psi: Optional[jnp.ndarray],   # (n_items, D) ψ table; None with cluster=
     true_items: jnp.ndarray,      # (n_eval,) held-out item per context
     *,
     k: int = 100,
     batch_rows: int = 256,
     exclude: Optional[Sequence] = None,  # per-row id lists to mask (train items)
     block_items: Optional[int] = None,
+    cluster=None,                 # serve.cluster.ShardedRetrievalCluster
 ) -> Dict[str, float]:
     """Leave-one-out Recall@K / NDCG@K over the full catalogue, streamed.
 
     ``exclude`` is a length-``n_eval`` sequence of per-row item-id arrays
-    (each row's training items); masks are built per batch — the full
-    ``(n_eval, n_items)`` mask, like the score matrix, never exists.
+    (each row's training items); per batch they become the kernel's
+    −1-padded (batch_rows, L) id tile — the full ``(n_eval, n_items)``
+    mask, like the score matrix, never exists in any form.
+
+    ``cluster=`` switches the top-K to a sharded table
+    (``cluster.topk_phi``; ``psi`` may be None) — the path past one
+    device's HBM, bit-identical results by the cluster's merge contract.
     """
     n_eval = int(phi.shape[0])
-    n_items = int(psi.shape[0])
     true_items = jnp.asarray(true_items, jnp.int32)
     recall_sum = 0.0
     ndcg_sum = 0.0
     for lo in range(0, n_eval, batch_rows):
         hi = min(lo + batch_rows, n_eval)
-        mask = None
+        eids = None
         if exclude is not None:
-            mask = exclude_mask_from_lists(exclude[lo:hi], n_items)
-        _, top_ids = topk_score(
-            phi[lo:hi], psi, k, mask, block_items=block_items
-        )
+            eids = exclude_ids_from_lists(exclude[lo:hi])
+        if cluster is not None:
+            _, top_ids = cluster.topk_phi(phi[lo:hi], k=k, exclude_ids=eids)
+        else:
+            _, top_ids = topk_score(
+                phi[lo:hi], psi, k, exclude_ids=eids, block_items=block_items
+            )
         truth = true_items[lo:hi]
         b = hi - lo
         recall_sum += float(recall_from_topk(top_ids, truth)) * b

@@ -22,9 +22,14 @@ Kernels:
                     models).
   topk_score      — fused retrieval/eval sweep: streams ψ-table blocks
                     through VMEM, fuses the (B, block_items) score matmul
-                    with a running per-row top-K merge (exclude-mask
-                    support); the (B, n_items) score matrix never exists.
-                    The serving/eval mirror of cd_sweep.
+                    with a running per-row top-K merge (exclude-mask or
+                    per-row exclude-ID-list support); the (B, n_items)
+                    score matrix never exists. A traced (id_offset,
+                    n_valid) meta serves row-range ψ shards with global
+                    output ids, and the ops-layer ``topk_merge_shards``
+                    K-way-merges per-shard candidates tie-stably — the
+                    serving/eval mirror of cd_sweep and the kernel under
+                    ``serve/cluster``.
   embedding_bag   — multi-hot EmbeddingBag as one-hot×table MXU matmuls,
                     vocab-block streamed (recsys hot path).
   flash_attention — online-softmax attention (causal / sliding-window /

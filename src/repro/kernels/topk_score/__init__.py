@@ -1,2 +1,2 @@
-from repro.kernels.topk_score.ops import topk_score  # noqa: F401
+from repro.kernels.topk_score.ops import topk_merge_shards, topk_score  # noqa: F401
 from repro.kernels.topk_score.ref import topk_score_ref  # noqa: F401

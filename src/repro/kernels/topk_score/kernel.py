@@ -15,7 +15,8 @@ read. This kernel fuses the two:
                                  score/id blocks (block_b, K_pad)
     streamed per (b, i) step:    ψ tile (block_items, D)
                                  [optional] exclude tile (block_b,
-                                 block_items) int8
+                                 block_items) int8, or the per-row exclude
+                                 ID tile (block_b, L_pad) int32
     compute per step:  S = φ·ψᵀ (MXU), mask exclusions/padding to −inf,
                        merge: top_k over [running K_pad | S] — scores and
                        ids together, in registers/VMEM
@@ -23,6 +24,23 @@ read. This kernel fuses the two:
   The ``(B, n_items)`` score matrix NEVER exists: per step only the
   (block_b, block_items) tile is alive, and the merged state written back
   to HBM is the (block_b, K_pad) running top-K.
+
+Shard support (serve/cluster.py): the kernel takes a traced ``(id_offset,
+n_valid)`` scalar pair. Candidate ids are emitted as GLOBAL catalogue ids
+(``id_offset + local``) and rows at local index ≥ ``n_valid`` are
+inadmissible, so a row-range ψ shard padded to uniform size runs the very
+same program — under ``shard_map`` the offset is ``axis_index·rows_per``
+and the cross-shard K-way merge (``ops.topk_merge_shards``) combines the
+per-shard (B, K) candidates without any id rebasing.
+
+Exclusion comes in two forms:
+
+  * ``exclude_mask`` (B, n_items) int8 — the legacy dense form; fine for
+    query-batch-sized B at test scale, but one row IS the full catalogue.
+  * ``exclude_ids`` (B, L) int32, −1-padded GLOBAL ids — the web-scale
+    form: the kernel builds each (block_b, block_items) admissibility tile
+    in-VMEM by comparing candidate ids against the per-row id list, so no
+    (B, n_items) array exists on host or device.
 
 Semantics (pinned by ``ref.topk_score_ref`` and the parity tests):
 
@@ -57,9 +75,14 @@ from jax.experimental import pallas as pl
 from repro.kernels import vmem
 
 
-def _score_and_merge(n_items, block_items, k_pad, psi_ref, phi_ref, s_ref,
-                     i_ref, excl_ref=None):
-    """One grid step: score the ψ tile and merge into the running top-K."""
+def _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
+                     i_ref, excl_ref=None, exclid_ref=None):
+    """One grid step: score the ψ tile and merge into the running top-K.
+
+    ``meta_ref`` is the (1, 2) int32 ``[id_offset, n_valid]`` pair: ids are
+    emitted as ``id_offset + local`` (global catalogue ids — shards pass
+    their row-range start) and local ids ≥ ``n_valid`` are inadmissible
+    (catalogue tail / shard padding)."""
     step = pl.program_id(1)
 
     @pl.when(step == 0)
@@ -72,10 +95,23 @@ def _score_and_merge(n_items, block_items, k_pad, psi_ref, phi_ref, s_ref,
     scores = jax.lax.dot_general(
         phi, psi, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )                                        # (block_b, block_items)
-    ids = step * block_items + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    admissible = ids < n_items
+    offset = meta_ref[0, 0]
+    n_valid = meta_ref[0, 1]
+    local = step * block_items + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1
+    )
+    admissible = local < n_valid
+    ids = offset + local                     # GLOBAL catalogue ids
     if excl_ref is not None:
         admissible &= excl_ref[...] == 0
+    if exclid_ref is not None:
+        # per-row exclude ID list (block_b, L_pad), −1 padding: a candidate
+        # is excluded iff its GLOBAL id appears in its row's list — the
+        # (block_b, block_items) admissibility tile is built right here,
+        # so no (B, n_items) mask ever exists
+        excl_ids = exclid_ref[...]           # (block_b, l_pad) int32
+        hit = (ids[:, None, :] == excl_ids[:, :, None]).any(axis=1)
+        admissible &= ~hit
     # inadmissible candidates keep −inf; they lose every tie against the
     # −inf/id−1 init state (which sits first in the concat), so their ids
     # never surface in the output
@@ -90,38 +126,58 @@ def _score_and_merge(n_items, block_items, k_pad, psi_ref, phi_ref, s_ref,
     i_ref[...] = jnp.take_along_axis(cat_i, sel, axis=1)
 
 
-def _topk_kernel(n_items, block_items, k_pad, psi_ref, phi_ref, s_ref, i_ref):
-    _score_and_merge(n_items, block_items, k_pad, psi_ref, phi_ref, s_ref, i_ref)
+def _topk_kernel(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref, i_ref):
+    _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
+                     i_ref)
 
 
-def _topk_excl_kernel(n_items, block_items, k_pad, psi_ref, phi_ref, excl_ref,
-                      s_ref, i_ref):
-    _score_and_merge(n_items, block_items, k_pad, psi_ref, phi_ref, s_ref,
-                     i_ref, excl_ref)
+def _topk_excl_kernel(block_items, k_pad, meta_ref, psi_ref, phi_ref,
+                      excl_ref, s_ref, i_ref):
+    _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
+                     i_ref, excl_ref=excl_ref)
+
+
+def _topk_exclid_kernel(block_items, k_pad, meta_ref, psi_ref, phi_ref,
+                        exclid_ref, s_ref, i_ref):
+    _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
+                     i_ref, exclid_ref=exclid_ref)
 
 
 def topk_score_pallas(
     phi: jax.Array,       # (B, D) query φ rows
-    psi: jax.Array,       # (n_items, D) ψ table
+    psi: jax.Array,       # (n_rows, D) ψ table (or one row-range shard)
     k: int,
-    exclude_mask: jax.Array | None = None,  # (B, n_items) nonzero ⇒ never recommend
+    exclude_mask: jax.Array | None = None,  # (B, n_rows) nonzero ⇒ never recommend
     *,
+    exclude_ids: jax.Array | None = None,   # (B, L) GLOBAL ids, −1 padded
+    id_offset=0,                            # global id of ψ row 0 (traced ok)
+    n_valid=None,                           # admissible local rows (traced ok)
     block_b: int = 128,
     block_items: int | None = None,
     interpret: bool = True,
 ):
     """Streaming fused top-K: returns ``(scores (B, k) f32, ids (B, k) i32)``.
 
-    ``k`` may exceed ``n_items``; inadmissible tail slots are (−inf, −1).
+    ``k`` may exceed the row count; inadmissible tail slots are (−inf, −1).
     ``block_items`` defaults to the shared VMEM-budget fit
-    (:func:`repro.kernels.vmem.topk_block_items`)."""
+    (:func:`repro.kernels.vmem.topk_block_items`). ``id_offset``/``n_valid``
+    make a row-range shard emit global ids (see the module docstring); both
+    may be traced scalars so one compiled program serves every shard."""
     b, d = phi.shape
-    n_items, d2 = psi.shape
+    n_rows, d2 = psi.shape
     assert d == d2, f"phi D={d} vs psi D={d2}"
+    assert exclude_mask is None or exclude_ids is None, (
+        "pass exclude_mask OR exclude_ids, not both"
+    )
+    if n_valid is None:
+        n_valid = n_rows
 
     lane = 128
     d_pad = -(-d // lane) * lane
     k_pad = -(-k // lane) * lane
+    l_pad = 0
+    if exclude_ids is not None:
+        l_pad = -(-max(1, exclude_ids.shape[1]) // lane) * lane
     block_b = min(block_b, -(-b // 8) * 8)
     if block_items is None:
         # The φ tile + running top-k_pad state are FIXED VMEM costs scaling
@@ -131,7 +187,7 @@ def topk_score_pallas(
         while True:
             try:
                 block_items = vmem.topk_block_items(
-                    block_b, d_pad, k_pad, n_items=n_items
+                    block_b, d_pad, k_pad, n_items=n_rows, excl_l_pad=l_pad
                 )
                 break
             except vmem.VmemBudgetError:
@@ -139,10 +195,14 @@ def topk_score_pallas(
                     raise
                 block_b = max(8, block_b // 2)
     b_pad = -(-b // block_b) * block_b
-    n_pad = -(-n_items // block_items) * block_items
+    n_pad = -(-n_rows // block_items) * block_items
 
     phi = jnp.pad(phi.astype(jnp.float32), ((0, b_pad - b), (0, d_pad - d)))
-    psi = jnp.pad(psi.astype(jnp.float32), ((0, n_pad - n_items), (0, d_pad - d)))
+    psi = jnp.pad(psi.astype(jnp.float32), ((0, n_pad - n_rows), (0, d_pad - d)))
+    meta = jnp.stack([
+        jnp.asarray(id_offset, jnp.int32),
+        jnp.minimum(jnp.asarray(n_valid, jnp.int32), n_rows),
+    ]).reshape(1, 2)
 
     grid = (b_pad // block_b, n_pad // block_items)
     out_specs = [
@@ -153,27 +213,20 @@ def topk_score_pallas(
         jax.ShapeDtypeStruct((b_pad, k_pad), jnp.float32),
         jax.ShapeDtypeStruct((b_pad, k_pad), jnp.int32),
     ]
+    meta_spec = pl.BlockSpec((1, 2), lambda bb, ii: (0, 0))
     psi_spec = pl.BlockSpec((block_items, d_pad), lambda bb, ii: (ii, 0))
     phi_spec = pl.BlockSpec((block_b, d_pad), lambda bb, ii: (bb, 0))
 
-    if exclude_mask is None:
-        scores, ids = pl.pallas_call(
-            partial(_topk_kernel, n_items, block_items, k_pad),
-            grid=grid,
-            in_specs=[psi_spec, phi_spec],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(psi, phi)
-    else:
+    if exclude_mask is not None:
         excl = jnp.pad(
             exclude_mask.astype(jnp.int8),
-            ((0, b_pad - b), (0, n_pad - n_items)),
+            ((0, b_pad - b), (0, n_pad - n_rows)),
         )
         scores, ids = pl.pallas_call(
-            partial(_topk_excl_kernel, n_items, block_items, k_pad),
+            partial(_topk_excl_kernel, block_items, k_pad),
             grid=grid,
             in_specs=[
+                meta_spec,
                 psi_spec,
                 phi_spec,
                 pl.BlockSpec((block_b, block_items), lambda bb, ii: (bb, ii)),
@@ -181,5 +234,33 @@ def topk_score_pallas(
             out_specs=out_specs,
             out_shape=out_shape,
             interpret=interpret,
-        )(psi, phi, excl)
+        )(meta, psi, phi, excl)
+    elif exclude_ids is not None:
+        excl_ids = jnp.pad(
+            exclude_ids.astype(jnp.int32),
+            ((0, b_pad - b), (0, l_pad - exclude_ids.shape[1])),
+            constant_values=-1,
+        )
+        scores, ids = pl.pallas_call(
+            partial(_topk_exclid_kernel, block_items, k_pad),
+            grid=grid,
+            in_specs=[
+                meta_spec,
+                psi_spec,
+                phi_spec,
+                pl.BlockSpec((block_b, l_pad), lambda bb, ii: (bb, 0)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(meta, psi, phi, excl_ids)
+    else:
+        scores, ids = pl.pallas_call(
+            partial(_topk_kernel, block_items, k_pad),
+            grid=grid,
+            in_specs=[meta_spec, psi_spec, phi_spec],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(meta, psi, phi)
     return scores[:b, :k], ids[:b, :k]

@@ -3,7 +3,9 @@ mask to −inf, ``lax.top_k``, and the −1-id policy on inadmissible slots.
 
 This is deliberately the "memory-naive" path — it materializes the full
 ``(B, n_items)`` score matrix the kernel exists to avoid — so it doubles
-as the dense baseline in ``benchmarks/serve_bench``.
+as the dense baseline in ``benchmarks/serve_bench``. For the same reason
+``exclude_ids`` (the kernel's web-scale per-row id-list form) is expanded
+to the dense (B, n_items) mask here.
 """
 from __future__ import annotations
 
@@ -11,12 +13,25 @@ import jax
 import jax.numpy as jnp
 
 
-def topk_score_ref(phi, psi, k, exclude_mask=None):
+def exclude_ids_to_mask(exclude_ids, n_items: int):
+    """Dense (B, n_items) bool mask from −1-padded per-row global id lists
+    (oracle/test helper — the kernel never builds this)."""
+    ids = jnp.asarray(exclude_ids, jnp.int32)
+    onehot = (ids[:, :, None] == jnp.arange(n_items, dtype=jnp.int32)) & (
+        ids[:, :, None] >= 0
+    )
+    return onehot.any(axis=1)
+
+
+def topk_score_ref(phi, psi, k, exclude_mask=None, *, exclude_ids=None):
     """Dense reference with the kernel's exact semantics: tie-stable
     ascending-id order (``lax.top_k`` positional stability over the
     id-ordered row) and (−inf, −1) on slots with no admissible candidate."""
     n_items = psi.shape[0]
     scores = phi.astype(jnp.float32) @ psi.astype(jnp.float32).T
+    if exclude_ids is not None:
+        assert exclude_mask is None, "pass exclude_mask OR exclude_ids"
+        exclude_mask = exclude_ids_to_mask(exclude_ids, n_items)
     if exclude_mask is not None:
         scores = jnp.where(exclude_mask != 0, -jnp.inf, scores)
     if k > n_items:  # dense top_k cannot rank more slots than exist

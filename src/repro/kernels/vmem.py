@@ -167,7 +167,14 @@ def resolve_cd_sweep_dispatch(
     return False, cd_sweep_block_ctx(d_pad, m, n_rows=n_rows)
 
 
-def topk_block_items(block_b: int, d_pad: int, k_pad: int, *, n_items: int | None = None) -> int:
+def topk_block_items(
+    block_b: int,
+    d_pad: int,
+    k_pad: int,
+    *,
+    n_items: int | None = None,
+    excl_l_pad: int = 0,
+) -> int:
     """ψ-table row tile for the ``topk_score`` kernel.
 
     Per ψ row: the ψ tile lane (d_pad·4) plus this row's column in the
@@ -175,11 +182,47 @@ def topk_block_items(block_b: int, d_pad: int, k_pad: int, *, n_items: int | Non
     (≈3 score-tile copies: scores + concatenated scores/ids). Fixed: the
     resident φ tile and the running top-k_pad score/id blocks.
 
+    ``excl_l_pad`` models the exclude-ID variant: the resident (block_b,
+    L_pad) id tile is FIXED and the in-kernel membership compare adds a
+    (block_b, L_pad) bool column per candidate row.
+
     Raises :class:`VmemBudgetError` at large ``block_b·k_pad`` (the fixed
     φ/top-k state alone busts the budget); ``topk_score_pallas`` catches
     it and halves ``block_b``."""
-    per_row = 4 * (d_pad + 4 * block_b)
-    fixed = 4 * (block_b * d_pad + 4 * block_b * k_pad)
+    per_row = 4 * (d_pad + 4 * block_b) + block_b * excl_l_pad
+    fixed = 4 * (block_b * d_pad + 4 * block_b * k_pad + block_b * excl_l_pad)
     return fit_block_rows(
         per_row, fixed_bytes=fixed, n_rows=n_items, multiple=128, lo=128, hi=4096
+    )
+
+
+def cluster_block_items(
+    block_b: int,
+    d_pad: int,
+    k_pad: int,
+    n_shards: int,
+    *,
+    shard_items: int | None = None,
+    excl_l_pad: int = 0,
+) -> int:
+    """Per-shard ψ row tile for the sharded cluster (``serve/cluster.py``).
+
+    Same footprint as :func:`topk_block_items` plus the cross-shard merge
+    scratch: merging S shards' top-K lists holds the (block_b, S·K_pad)
+    candidate score AND id rows (``ops.topk_merge_shards``) — a FIXED cost
+    of 2·4·block_b·S·K_pad bytes that grows with the shard count.
+
+    Raises :class:`VmemBudgetError` when even one minimal ψ block (128
+    rows) cannot fit next to the merge scratch — the cluster PROPAGATES it
+    (re-shard coarser, or lower K) instead of silently shrinking the tile
+    below one ψ block and overflowing VMEM."""
+    merge_scratch = 2 * 4 * block_b * n_shards * k_pad
+    per_row = 4 * (d_pad + 4 * block_b) + block_b * excl_l_pad
+    fixed = (
+        4 * (block_b * d_pad + 4 * block_b * k_pad + block_b * excl_l_pad)
+        + merge_scratch
+    )
+    return fit_block_rows(
+        per_row, fixed_bytes=fixed, n_rows=shard_items, multiple=128, lo=128,
+        hi=4096,
     )

@@ -1,6 +1,12 @@
-"""Serving driver: LM decode or recsys retrieval with batched requests.
+"""Serving driver: sharded retrieval with micro-batched online requests.
 
-  python -m repro.launch.serve --arch icd-mf --smoke --requests 8
+  python -m repro.launch.serve --arch icd-mf --smoke --requests 64 --shards 2
+
+Builds the model from the registry config, publishes its ψ table into a
+:class:`~repro.serve.cluster.ShardedRetrievalCluster`, and replays an
+open-loop single-row request trace through the
+:class:`~repro.serve.batcher.MicroBatcher` (deadline/size flush), printing
+throughput and queue-latency percentiles.
 """
 from __future__ import annotations
 
@@ -8,55 +14,80 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 
 
-def _lm_serve(cfg, args):
-    from repro.models import transformer as T
-    from repro.serve.decode import generate
-
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, 8), 0,
-                                cfg.vocab)
-    t0 = time.perf_counter()
-    out = generate(cfg, params, prompt, max_new_tokens=args.tokens,
-                   compute_dtype=jnp.float32)
-    dt = time.perf_counter() - t0
-    print(f"[serve] generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.tokens / dt:.1f} tok/s)")
-    print(out[0, :16].tolist())
-
-
-def _icd_serve(cfg, args):
-    from repro.core.models import mf
-    from repro.serve.recsys_serve import mf_retrieval_score_fn, retrieval_topk
-
-    params = mf.init(jax.random.PRNGKey(0), cfg.n_ctx, cfg.n_items, cfg.k)
-    t0 = time.perf_counter()
-    for r in range(args.requests):
-        score = mf_retrieval_score_fn(params.w[r], params.h)
-        scores, ids = retrieval_topk(score, cfg.n_items, k=min(100, cfg.n_items),
-                                     chunk=max(1024, cfg.n_items // 4))
-    dt = time.perf_counter() - t0
-    print(f"[serve] {args.requests} retrieval requests in {dt:.3f}s "
-          f"(p50 ≈ {dt / args.requests * 1e3:.2f} ms); top id {int(ids[0])}")
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--topk", type=int, default=100)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-delay", type=float, default=2e-3)
     args = ap.parse_args()
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.arch.startswith("icd"):
-        _icd_serve(cfg, args)
-    else:
-        _lm_serve(cfg, args)
+    if not args.arch.startswith("icd"):
+        raise SystemExit(
+            f"unknown serving arch {args.arch!r}: the serve driver hosts the "
+            "k-separable retrieval registry (icd-*)"
+        )
+
+    from repro.core.models import mf
+    from repro.serve.batcher import MicroBatcher
+    from repro.serve.cluster import ShardedRetrievalCluster
+
+    params = mf.init(jax.random.PRNGKey(0), cfg.n_ctx, cfg.n_items, cfg.k)
+    k = min(args.topk, cfg.n_items)
+    cluster = ShardedRetrievalCluster(
+        lambda ctx: mf.build_phi(params, ctx), n_shards=args.shards, k=k
+    )
+    version = cluster.publish(mf.export_psi(params))
+    print(f"[serve] published psi v{version}: {cfg.n_items} items over "
+          f"{args.shards} shard(s), top-{k}")
+
+    batcher = MicroBatcher(
+        lambda phi, eids: cluster.topk_phi(phi, exclude_ids=eids),
+        max_batch=args.max_batch, max_delay=args.max_delay,
+        # same clock as t0 below: completed_at − t0 must be well-defined
+        clock=time.perf_counter,
+        version_fn=lambda: cluster.version,
+    )
+    phi_all = np.asarray(mf.build_phi(params, np.arange(cfg.n_ctx)))
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, cfg.n_ctx, size=args.requests)
+    t0 = time.perf_counter()
+    tickets = []
+    for u in users:
+        tickets.append((u, batcher.submit(phi_all[u], key=("user", int(u)))))
+        batcher.step()
+    batcher.flush()
+    dt = time.perf_counter() - t0
+    lat, top_id = [], None
+    for u, t in tickets:
+        done_at = batcher.completed_at(t)
+        scores, ids = batcher.result(t)
+        assert ids.shape == (k,)
+        lat.append(done_at - t0)
+        if top_id is None:
+            top_id = int(ids[0])
+    print(f"[serve] {args.requests} requests in {dt:.3f}s "
+          f"({args.requests / dt:.1f} req/s), "
+          f"{batcher.stats['flushes']} flushes "
+          f"(size={batcher.stats['flush_by_size']} "
+          f"deadline={batcher.stats['flush_by_deadline']} "
+          f"forced={batcher.stats['flush_forced']}), "
+          f"cache_hits={batcher.stats['cache_hits']}")
+    print(f"[serve] completion p50={_percentile(lat, 50):.4f}s "
+          f"p99={_percentile(lat, 99):.4f}s after start; "
+          f"top id for user {int(users[0])}: {top_id}")
 
 
 if __name__ == "__main__":

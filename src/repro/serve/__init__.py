@@ -1,3 +1,17 @@
-from repro.serve.decode import generate  # noqa: F401
-from repro.serve.engine import RetrievalEngine, exclude_mask_from_lists  # noqa: F401
+"""Online retrieval serving: single-device engine, sharded cluster,
+request micro-batching, and live ψ publish from training."""
+from repro.serve.batcher import MicroBatcher  # noqa: F401
+from repro.serve.cluster import (  # noqa: F401
+    PsiShardSet,
+    ShardedRetrievalCluster,
+    cluster_topk,
+    shard_map_topk,
+    shard_psi,
+)
+from repro.serve.engine import (  # noqa: F401
+    RetrievalEngine,
+    exclude_ids_from_lists,
+    exclude_mask_from_lists,
+)
+from repro.serve.publish import PsiPublisher, VersionedTable  # noqa: F401
 from repro.serve.recsys_serve import bulk_score, retrieval_topk  # noqa: F401

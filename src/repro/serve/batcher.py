@@ -1,0 +1,243 @@
+"""Request micro-batching for the online retrieval p99 path.
+
+The fused ``topk_score`` kernel (and a TPU generally) is efficient at
+kernel-shaped batches and terrible at B=1: a single-row query pays the whole
+ψ-table stream by itself. Online traffic, however, ARRIVES one row at a
+time. The :class:`MicroBatcher` closes that gap with the standard serving
+trick — an admission queue that coalesces single-row queries into one padded
+batch per kernel dispatch:
+
+  flush policy (deadline/size):
+    * SIZE — the queue reaching ``max_batch`` rows flushes immediately
+      (admission of the triggering request included);
+    * DEADLINE — otherwise a flush happens once ``now`` passes
+      ``oldest.t_submit + max_delay``: no request waits longer than
+      ``max_delay`` in the queue, bounding the batching-induced latency
+      (the p99 knob);
+    * callers drive time explicitly via :meth:`step` (or implicitly on
+      every :meth:`submit`) — the batcher never sleeps or spawns threads,
+      so tests run it under a SIMULATED clock.
+
+  batch shaping: flushed rows are stacked and padded up to a multiple of
+  ``pad_to`` φ rows (zero rows; results discarded), and the per-request
+  exclude-id lists are right-padded with −1 to the widest list in the batch
+  — exactly the (B, L) global-id form the kernel's exclude variant takes,
+  so no (B, n_items) mask is built per request.
+
+  routing: every request gets a ticket id at admission; after the flush the
+  (k,) score/id rows are routed back to their tickets, so out-of-order
+  submission, mixed flushes, and pad rows can never cross results between
+  requests (parity-pinned in tests under a simulated clock).
+
+  caching: an LRU φ→result cache keyed on ``(key, table_version,
+  exclude_list)``. The version comes from the serving table
+  (``cluster.version`` — bumped by every ``publish``), so a live ψ refresh
+  implicitly invalidates the whole cache without any flush traffic; the
+  exclude list is folded in by the batcher itself, so a caller key only
+  has to identify the φ row. Only requests that carry an explicit hashable
+  ``key`` participate (an unkeyed φ row has no cheap identity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    phi_row: np.ndarray            # (D,)
+    exclude: Optional[np.ndarray]  # (L,) global ids or None
+    key: Optional[object]
+    t_submit: float
+
+
+class MicroBatcher:
+    """Coalesce single-row top-K queries into kernel-shaped batches.
+
+    ``topk_phi(phi_rows (B, D), exclude_ids (B, L) | None) -> (scores, ids)``
+    is the backing batch executor — typically
+    ``cluster.topk_phi`` / ``engine.topk_phi`` with exclusion passed through.
+
+    ::
+
+        batcher = MicroBatcher(
+            lambda phi, eids: cluster.topk_phi(phi, exclude_ids=eids),
+            max_batch=32, max_delay=2e-3, version_fn=lambda: cluster.version)
+        t1 = batcher.submit(phi_row, exclude=[3, 7], key=("user", 17))
+        ...
+        batcher.step()            # deadline check; flush if due
+        scores, ids = batcher.result(t1)   # None until flushed
+
+    The batcher is deliberately single-threaded and clock-injected: the
+    serving loop owns the cadence (call ``step`` between admissions), and
+    the unit tests replay traces under a simulated clock.
+    """
+
+    def __init__(
+        self,
+        topk_phi: Callable,
+        *,
+        max_batch: int = 64,
+        max_delay: float = 2e-3,
+        pad_to: int = 8,
+        clock: Callable[[], float] = time.monotonic,
+        cache_size: int = 4096,
+        version_fn: Optional[Callable[[], int]] = None,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.topk_phi = topk_phi
+        self.max_batch = int(max_batch)
+        self.max_delay = float(max_delay)
+        self.pad_to = int(pad_to)
+        self.clock = clock
+        self.version_fn = version_fn or (lambda: 0)
+        self._queue: List[_Pending] = []
+        self._results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._completed_at: Dict[int, float] = {}
+        self._next_ticket = 0
+        self._cache: OrderedDict = OrderedDict()
+        self._cache_size = int(cache_size)
+        self.stats = {
+            "submitted": 0, "flushes": 0, "flushed_rows": 0,
+            "flush_by_size": 0, "flush_by_deadline": 0, "flush_forced": 0,
+            "cache_hits": 0, "cache_misses": 0,
+        }
+
+    # ----------------------------------------------------------- admission
+    def submit(
+        self,
+        phi_row,
+        *,
+        exclude=None,
+        key: Optional[object] = None,
+        now: Optional[float] = None,
+    ) -> int:
+        """Admit one single-row query; returns its ticket id.
+
+        ``exclude`` is this request's global excluded-id list (seen items).
+        ``key`` opts into the result cache and only has to identify the φ
+        row (e.g. the user id): the exclude list and the table version are
+        folded into the cache key here, so a request with a different
+        exclusion set or against a newer ψ table can never be served a
+        stale cached result."""
+        now = self.clock() if now is None else now
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.stats["submitted"] += 1
+        excl = None
+        if exclude is not None:
+            excl = np.asarray(exclude, np.int32).reshape(-1)
+        if key is not None:
+            hit = self._cache_get(self._cache_key(key, excl))
+            if hit is not None:
+                self.stats["cache_hits"] += 1
+                self._results[ticket] = hit
+                self._completed_at[ticket] = now
+                self.step(now)  # a hit must still retire queue deadlines
+                return ticket
+            self.stats["cache_misses"] += 1
+        self._queue.append(_Pending(
+            ticket=ticket,
+            phi_row=np.asarray(phi_row, np.float32).reshape(-1),
+            exclude=excl, key=key, t_submit=now,
+        ))
+        if len(self._queue) >= self.max_batch:
+            self._flush(now, "flush_by_size")
+        else:
+            self.step(now)  # admission also retires an overdue deadline
+        return ticket
+
+    # ---------------------------------------------------------------- time
+    def step(self, now: Optional[float] = None) -> bool:
+        """Flush iff the oldest queued request's deadline has passed.
+        Returns whether a flush happened."""
+        if not self._queue:
+            return False
+        now = self.clock() if now is None else now
+        if now - self._queue[0].t_submit >= self.max_delay:
+            self._flush(now, "flush_by_deadline")
+            return True
+        return False
+
+    def flush(self, now: Optional[float] = None) -> None:
+        """Force-flush everything queued (drain on shutdown)."""
+        now = self.clock() if now is None else now
+        while self._queue:
+            self._flush(now, "flush_forced")
+
+    # -------------------------------------------------------------- results
+    def result(
+        self, ticket: int, *, pop: bool = True
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """(scores (k,), ids (k,)) for a ticket, or None while queued."""
+        if ticket not in self._results:
+            return None
+        out = self._results.pop(ticket) if pop else self._results[ticket]
+        if pop:
+            self._completed_at.pop(ticket, None)
+        return out
+
+    def completed_at(self, ticket: int) -> Optional[float]:
+        """Completion timestamp of a finished ticket (latency accounting)."""
+        return self._completed_at.get(ticket)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------ internals
+    def _flush(self, now: float, reason: str) -> None:
+        batch, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch:]
+        b = len(batch)
+        b_pad = -(-b // self.pad_to) * self.pad_to
+        phi = np.zeros((b_pad, batch[0].phi_row.shape[0]), np.float32)
+        for r, req in enumerate(batch):
+            phi[r] = req.phi_row
+        excl_ids = None
+        l_max = max((req.exclude.shape[0] for req in batch
+                     if req.exclude is not None), default=0)
+        if l_max > 0:
+            excl_ids = np.full((b_pad, l_max), -1, np.int32)
+            for r, req in enumerate(batch):
+                if req.exclude is not None:
+                    excl_ids[r, : req.exclude.shape[0]] = req.exclude
+            excl_ids = jnp.asarray(excl_ids)
+        scores, ids = self.topk_phi(jnp.asarray(phi), excl_ids)
+        scores = np.asarray(scores)
+        ids = np.asarray(ids)
+        for r, req in enumerate(batch):  # route rows back to their tickets
+            out = (scores[r], ids[r])
+            self._results[req.ticket] = out
+            self._completed_at[req.ticket] = now
+            if req.key is not None:
+                self._cache_put(self._cache_key(req.key, req.exclude), out)
+        self.stats["flushes"] += 1
+        self.stats["flushed_rows"] += b
+        self.stats[reason] += 1
+        if self._queue:  # drain backlog left by a size-capped flush
+            self.step(now)
+
+    def _cache_key(self, key, excl: Optional[np.ndarray]):
+        """(caller key, table version, exclude list) — version comes from
+        the live table so a publish implicitly invalidates every entry."""
+        excl_key = () if excl is None else tuple(excl.tolist())
+        return (key, self.version_fn(), excl_key)
+
+    def _cache_get(self, key):
+        if key not in self._cache:
+            return None
+        self._cache.move_to_end(key)
+        return self._cache[key]
+
+    def _cache_put(self, key, value) -> None:
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)

@@ -30,9 +30,44 @@ reproduces the full FM score including both special components.
 The engine itself is just (ψ table, φ builder, blocking policy): ``topk``
 streams ψ blocks through the Pallas kernel (``kernels/topk_score``) with a
 running in-VMEM top-K merge — the ``(B, n_items)`` score matrix is never
-materialized — and supports per-row exclude masks for the
-seen-items-filtered serving protocol. ``exclude_mask_from_lists`` builds
-those masks from ragged per-row id lists (train histories).
+materialized — and supports the seen-items-filtered serving protocol via
+either exclusion form (below).
+
+Exclusion forms
+---------------
+
+  * ``exclude_ids`` (B, L) int32, −1-padded per-row GLOBAL id lists
+    (:func:`exclude_ids_from_lists`) — the web-scale form. The kernel
+    builds each ψ-block-aligned (block_b, block_items) admissibility slice
+    in-VMEM by comparing candidate ids against the row's list, so an
+    exclude mask never materializes a full-catalogue row anywhere, and the
+    same (global-id) lists serve every shard of a sharded table unchanged.
+  * ``exclude_mask`` (B, n_items) bool (:func:`exclude_mask_from_lists`) —
+    the legacy dense form; fine for query-batch-sized B at test scale and
+    kept as the oracle-side representation.
+
+Scaling past one device (serve/cluster.py, serve/batcher.py, serve/publish.py)
+------------------------------------------------------------------------------
+
+  * shard layout — the ψ table row-range partitions over S devices: shard
+    s owns global ids [s·rows_per, (s+1)·rows_per), rows_per = ⌈n_items/S⌉,
+    all shards padded to the uniform rows_per (only the last has padding;
+    the kernel's ``n_valid`` meta keeps pad rows inadmissible). Each shard
+    runs THIS engine's kernel with ``id_offset = s·rows_per`` so candidate
+    ids come out global, and ``kernels.topk_score.topk_merge_shards`` ranks
+    the S·K candidates by (−score, id) — reproducing the single-device
+    tie-stable ascending-id policy bit-exactly at any shard count.
+  * table versioning — serving tables are immutable, versioned snapshots
+    (:class:`~repro.serve.cluster.PsiShardSet`); ``publish`` double-buffers
+    the next snapshot and flips it live with one atomic reference swap, so
+    a query reads one consistent version end-to-end and caches key on
+    ``(query, version)`` — a publish invalidates them implicitly.
+  * batcher flush protocol — single-row online queries are admitted to a
+    queue and coalesced into kernel-shaped batches; a flush fires when the
+    queue reaches ``max_batch`` rows (SIZE) or the oldest admission ages
+    past ``max_delay`` (DEADLINE), whichever first; batches pad φ rows to a
+    multiple of ``pad_to`` and right-pad per-request exclude-id lists with
+    −1; results route back by ticket (``serve/batcher.py``).
 """
 from __future__ import annotations
 
@@ -45,11 +80,27 @@ import numpy as np
 from repro.kernels.topk_score.ops import topk_score
 
 
+def exclude_ids_from_lists(
+    item_lists: Sequence, *, min_width: int = 1
+) -> jax.Array:
+    """(B, L) int32, −1-padded: ragged per-row GLOBAL excluded-id lists
+    (train histories) in the kernel's exclude form. L is the widest row
+    (≥ ``min_width``); host cost is O(Σ|list|) — never O(B·n_items)."""
+    width = max(min_width, max((len(ids) for ids in item_lists), default=0))
+    out = np.full((len(item_lists), width), -1, np.int32)
+    for r, ids in enumerate(item_lists):
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        out[r, : ids.size] = ids
+    return jnp.asarray(out)
+
+
 def exclude_mask_from_lists(
     item_lists: Sequence, n_items: int
 ) -> jax.Array:
-    """(B, n_items) bool mask from ragged per-row item-id lists (host-side;
-    rows are query-batch sized, NEVER the full eval set)."""
+    """(B, n_items) bool mask from ragged per-row item-id lists — the DENSE
+    form: each row IS a full-catalogue row, so this is for query-batch-sized
+    test/oracle use only; serving and eval pass
+    :func:`exclude_ids_from_lists` instead."""
     mask = np.zeros((len(item_lists), n_items), dtype=bool)
     for r, ids in enumerate(item_lists):
         ids = np.asarray(ids, dtype=np.int64)
@@ -69,7 +120,9 @@ class RetrievalEngine:
 
     ``topk`` semantics follow the kernel (see ``kernels/topk_score``):
     exact dense-``lax.top_k`` parity, ascending-id tie policy, (−inf, −1)
-    on slots with no admissible candidate.
+    on slots with no admissible candidate. The multi-device mirror with
+    the same semantics (bit-exact) is
+    :class:`repro.serve.cluster.ShardedRetrievalCluster`.
     """
 
     def __init__(
@@ -98,9 +151,13 @@ class RetrievalEngine:
         *query,
         k: Optional[int] = None,
         exclude_mask: Optional[jax.Array] = None,
+        exclude_ids: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """(scores, ids), both (B, k), for a query batch."""
-        return self.topk_phi(self.phi(*query), k=k, exclude_mask=exclude_mask)
+        return self.topk_phi(
+            self.phi(*query), k=k, exclude_mask=exclude_mask,
+            exclude_ids=exclude_ids,
+        )
 
     def topk_phi(
         self,
@@ -108,12 +165,13 @@ class RetrievalEngine:
         *,
         k: Optional[int] = None,
         exclude_mask: Optional[jax.Array] = None,
+        exclude_ids: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Like :meth:`topk` but from pre-built φ rows (the eval harness
         path, which batches a big φ matrix through here)."""
         return topk_score(
             phi_rows, self.psi, k or self.k, exclude_mask,
-            block_items=self.block_items,
+            exclude_ids=exclude_ids, block_items=self.block_items,
         )
 
     def scores(self, phi_rows: jax.Array) -> jax.Array:

@@ -1,0 +1,101 @@
+"""Live ψ refresh: double-buffered, versioned publish from training to serving.
+
+Training mutates factor tables every epoch; serving must keep answering
+queries meanwhile. The protocol here is the classic double-buffer flip:
+
+  1. ``publish`` builds the NEXT shard set (``cluster.shard_psi`` — slicing,
+     padding, device placement) entirely off to the side, in the back
+     buffer. Readers still see the old table; nothing they can reach is
+     being written.
+  2. The flip is ONE reference assignment of the (table, version) pair —
+     atomic under the interpreter, so a reader grabbing the active table
+     either gets the complete old snapshot or the complete new one, never a
+     half-written mix. jax arrays are immutable, so a snapshot stays valid
+     for as long as any in-flight request holds it.
+  3. The version counter rides on the snapshot
+     (:class:`~repro.serve.cluster.PsiShardSet.version`); the request cache
+     (``serve/batcher.py``) keys on it, so a publish implicitly invalidates
+     every cached result without any flush traffic.
+
+:class:`PsiPublisher` adapts this to the models' ``fit(callback=...)`` hook:
+at each epoch boundary it snapshots ``export_psi(params)`` into the cluster,
+so online serving tracks training with epoch granularity ("live ψ refresh").
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+
+class VersionedTable:
+    """Double-buffered holder of the active :class:`PsiShardSet`.
+
+    ``publish(build)`` calls ``build(next_version)`` to construct the new
+    snapshot into the back buffer, then flips it live with one atomic
+    reference swap. ``active`` raises until the first publish — a serving
+    path must never silently answer from an empty catalogue.
+    """
+
+    def __init__(self):
+        self._buffers = [None, None]  # [back, live] payloads
+        self._state = (None, 0)       # (live snapshot, version) — ONE ref
+
+    @property
+    def version(self) -> int:
+        return self._state[1]
+
+    @property
+    def active(self):
+        snapshot, version = self._state  # single read: consistent pair
+        if snapshot is None:
+            raise RuntimeError(
+                "no table published yet — call publish() before serving"
+            )
+        return snapshot
+
+    def publish(self, build: Callable[[int], object]) -> int:
+        """Build the next snapshot with ``build(version)``, then flip."""
+        _, version = self._state
+        nxt = build(version + 1)
+        # back buffer keeps the previous snapshot alive for stragglers that
+        # grabbed it pre-flip; the flip itself is one atomic assignment
+        self._buffers = [self._state[0], nxt]
+        self._state = (nxt, version + 1)
+        return version + 1
+
+
+class PsiPublisher:
+    """``fit(callback=...)`` adapter: publish ψ snapshots at epoch boundaries.
+
+    ::
+
+        cluster = ShardedRetrievalCluster(phi_fn, n_shards=4, k=100)
+        pub = PsiPublisher(cluster, mf.export_psi, every=1)
+        mf.fit(params, data, hp, n_epochs, callback=pub)
+        pub.versions   # [(epoch, version), ...] — the refresh trajectory
+
+    ``export`` maps the training params to the (n_items, D) ψ table (each
+    model's ``export_psi``; close over design matrices / hyper-params where
+    the model needs them). ``every`` throttles the refresh cadence.
+    """
+
+    def __init__(
+        self,
+        cluster,
+        export: Callable,
+        *,
+        every: int = 1,
+        log: Optional[Callable[[str], None]] = None,
+    ):
+        self.cluster = cluster
+        self.export = export
+        self.every = int(every)
+        self.log = log
+        self.versions: list = []  # [(epoch, version), ...]
+
+    def __call__(self, epoch: int, params) -> None:
+        if epoch % self.every:
+            return
+        version = self.cluster.publish(self.export(params))
+        self.versions.append((epoch, version))
+        if self.log is not None:
+            self.log(f"epoch {epoch}: published psi table version {version}")

@@ -1,0 +1,8 @@
+"""Shared test helper: tiny (φ, ψ) exports for every k-separable model —
+one implementation in ``repro.core.models.zoo``, re-exported for the test
+suites (the serve bench imports it from the package directly)."""
+from repro.core.models.zoo import (  # noqa: F401
+    ZOO,
+    model_phi_psi,
+    rand_f32 as _rand,
+)

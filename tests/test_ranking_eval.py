@@ -35,6 +35,45 @@ def test_streaming_equals_dense_metrics():
     assert res["n_eval"] == 40 and res["k"] == 10
 
 
+def test_streaming_eval_never_builds_full_mask_rows():
+    """The exclusion protocol rides the kernel's (B, L) id-list form: the
+    harness must produce dense-parity metrics WITHOUT ever calling the
+    dense mask builder (the old (B, n_items) host-side path)."""
+    import repro.eval.ranking as ranking_mod
+
+    _, params, truth, excl = _setup(seed=5)
+    phi = mf.build_phi(params, jnp.arange(40))
+    psi = mf.export_psi(params)
+    assert not hasattr(ranking_mod, "exclude_mask_from_lists")
+    res = ranking_eval(phi, psi, truth, k=10, batch_rows=16, exclude=excl,
+                       block_items=32)
+    mask = exclude_mask_from_lists(excl, 120)
+    dense = phi @ psi.T
+    r = float(recall_at_k(dense, jnp.asarray(truth), 10, mask))
+    np.testing.assert_allclose(res["recall@10"], r, atol=1e-6)
+
+
+def test_sharded_eval_matches_single_device():
+    """cluster= streams the same batches through the sharded table; the
+    merge contract makes the metrics identical at any shard count."""
+    from repro.serve.cluster import ShardedRetrievalCluster
+
+    _, params, truth, excl = _setup(seed=6)
+    phi = mf.build_phi(params, jnp.arange(40))
+    psi = mf.export_psi(params)
+    single = ranking_eval(phi, psi, truth, k=10, batch_rows=13, exclude=excl,
+                          block_items=32)
+    for n_shards in (1, 3):
+        cl = ShardedRetrievalCluster(n_shards=n_shards, k=10, block_items=32,
+                                     psi_table=psi)
+        sharded = ranking_eval(phi, None, truth, k=10, batch_rows=13,
+                               exclude=excl, cluster=cl)
+        np.testing.assert_allclose(sharded["recall@10"], single["recall@10"],
+                                   atol=1e-6)
+        np.testing.assert_allclose(sharded["ndcg@10"], single["ndcg@10"],
+                                   atol=1e-6)
+
+
 def test_no_exclude_and_single_batch():
     _, params, truth, _ = _setup(seed=1)
     phi = mf.build_phi(params, jnp.arange(40))

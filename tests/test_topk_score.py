@@ -5,15 +5,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.design import make_design
-from repro.core.models import fm, mf, mfsi, parafac, tucker
-from repro.core.models.parafac import TensorContext
-from repro.kernels.topk_score import topk_score, topk_score_ref
-from repro.serve.engine import RetrievalEngine, exclude_mask_from_lists
+from _zoo import ZOO, model_phi_psi, _rand
 
-
-def _rand(shape, seed=0):
-    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), jnp.float32)
+from repro.kernels.topk_score import topk_merge_shards, topk_score, topk_score_ref
+from repro.serve.engine import (
+    RetrievalEngine,
+    exclude_ids_from_lists,
+    exclude_mask_from_lists,
+)
 
 
 def test_matches_ref_and_dense_topk_nondivisible_blocks():
@@ -66,6 +65,42 @@ def test_exclude_mask_and_fully_masked_row():
         assert not mask[r, real].any()
 
 
+def test_exclude_ids_matches_mask_path():
+    """The web-scale id-list exclusion form (in-kernel block-aligned mask
+    slices, no (B, n_items) array) must agree with the dense-mask form."""
+    rng = np.random.default_rng(16)
+    phi, psi = _rand((7, 12), 6), _rand((90, 12), 7)
+    lists = [rng.choice(90, size=int(rng.integers(0, 9)), replace=False)
+             for _ in range(7)]
+    eids = exclude_ids_from_lists(lists)
+    mask = exclude_mask_from_lists(lists, 90)
+    s_ids, i_ids = topk_score(phi, psi, 12, exclude_ids=eids, block_items=32)
+    s_m, i_m = topk_score(phi, psi, 12, mask, block_items=32)
+    np.testing.assert_array_equal(np.asarray(i_ids), np.asarray(i_m))
+    np.testing.assert_array_equal(np.asarray(s_ids), np.asarray(s_m))
+    rs, ri = topk_score_ref(phi, psi, 12, exclude_ids=eids)
+    np.testing.assert_array_equal(np.asarray(i_ids), np.asarray(ri))
+
+
+def test_id_offset_and_n_valid_shard_semantics():
+    """A row-range shard (id_offset, n_valid) emits GLOBAL ids and keeps
+    pad rows inadmissible — the kernel contract serve/cluster builds on."""
+    phi, psi = _rand((5, 8), 12), _rand((64, 8), 13)
+    # shard owning global rows [40, 64), padded to 32 rows
+    shard = jnp.pad(psi[40:], ((0, 8), (0, 0)))
+    s, i = topk_score(phi, shard, 30, id_offset=40, n_valid=24, block_items=32)
+    rs, ri = topk_score_ref(phi, psi[40:], 30)
+    ri_global = np.where(np.asarray(ri) >= 0, np.asarray(ri) + 40, -1)
+    np.testing.assert_array_equal(np.asarray(i), ri_global)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-6)
+    # pad rows (global id >= 64) never surface
+    assert (np.asarray(i) < 64).all()
+    # traced offsets hit the same jit cache (one program serves all shards)
+    s2, i2 = topk_score(phi, shard, 30, id_offset=jnp.int32(40),
+                        n_valid=jnp.int32(24), block_items=32)
+    np.testing.assert_array_equal(np.asarray(i2), ri_global)
+
+
 def test_k_larger_than_n_items():
     phi, psi = _rand((3, 5), 8), _rand((11, 5), 9)
     s, i = topk_score(phi, psi, 20, block_items=128)
@@ -78,48 +113,33 @@ def test_k_larger_than_n_items():
     np.testing.assert_array_equal(np.asarray(i)[:, :11], np.asarray(di))
 
 
-def _model_phi_psi(name, rng):
-    """Tiny instance of each zoo model; returns (phi (B, D), psi (I, D))."""
-    n_ctx, n_items, b, k = 20, 37, 9, 6
-    if name == "mf":
-        params = mf.init(jax.random.PRNGKey(0), n_ctx, n_items, k)
-        return mf.build_phi(params, jnp.arange(b)), mf.export_psi(params)
-    if name == "parafac":
-        params = parafac.init(jax.random.PRNGKey(1), 8, 7, n_items, k)
-        c1 = jnp.asarray(rng.integers(0, 8, b), jnp.int32)
-        c2 = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
-        return parafac.build_phi(params, c1, c2), parafac.export_psi(params)
-    if name == "tucker":
-        params = tucker.init(jax.random.PRNGKey(2), 8, 7, n_items, 4, 3, k)
-        c1 = jnp.asarray(rng.integers(0, 8, b), jnp.int32)
-        c2 = jnp.asarray(rng.integers(0, 7, b), jnp.int32)
-        return tucker.build_phi(params, c1, c2), tucker.export_psi(params)
-    x = make_design(
-        [dict(name="id", ids=np.arange(n_ctx) % 11, vocab=11),
-         dict(name="grp", ids=rng.integers(0, 5, n_ctx), vocab=5)], n_ctx)
-    z = make_design(
-        [dict(name="item_id", ids=np.arange(n_items), vocab=n_items),
-         dict(name="genre", ids=rng.integers(0, 7, n_items), vocab=7)], n_items)
-    if name == "mfsi":
-        params = mfsi.init(jax.random.PRNGKey(3), x.p, z.p, k)
-        return (mfsi.build_phi(params, x, jnp.arange(b)),
-                mfsi.export_psi(params, z))
-    hp = fm.FMHyperParams(k=k)
-    params = fm.init(jax.random.PRNGKey(4), x.p, z.p, k)
-    # break the all-zero linear/bias init so ψ_spec is a real column
-    params = params._replace(
-        b=jnp.asarray(0.3), w_lin=_rand((x.p,), 10), h_lin=_rand((z.p,), 11)
-    )
-    return (fm.build_phi(params, x, hp, jnp.arange(b)),
-            fm.export_psi(params, z, hp))
+def test_merge_shards_is_tie_stable_and_pads_inadmissible():
+    """topk_merge_shards alone: score-ordered per-shard lists with cross-
+    shard ties must come out in ascending GLOBAL id; −inf slots are −1."""
+    # two shards, one row; shard 1 has a tie (score 1.0) with shard 0
+    s0 = jnp.asarray([[[1.0, 0.5, -jnp.inf]]])
+    i0 = jnp.asarray([[[7, 2, -1]]], jnp.int32)
+    s1 = jnp.asarray([[[1.0, 0.25, -jnp.inf]]])
+    i1 = jnp.asarray([[[3, 9, -1]]], jnp.int32)
+    ms, mi = topk_merge_shards(jnp.concatenate([s0, s1]),
+                               jnp.concatenate([i0, i1]), 5)
+    # tie at 1.0: id 3 (shard 1) precedes id 7 (shard 0)
+    np.testing.assert_array_equal(np.asarray(mi)[0], [3, 7, 2, 9, -1])
+    np.testing.assert_array_equal(
+        np.asarray(ms)[0], [1.0, 1.0, 0.5, 0.25, -np.inf])
+    # k larger than the candidate pool pads with (−inf, −1)
+    ms2, mi2 = topk_merge_shards(jnp.concatenate([s0, s1]),
+                                 jnp.concatenate([i0, i1]), 8)
+    assert bool((np.asarray(mi2)[0, 4:] == -1).all())
+    assert bool(np.isneginf(np.asarray(ms2)[0, 4:]).all())
 
 
-@pytest.mark.parametrize("name", ["mf", "mfsi", "fm", "parafac", "tucker"])
+@pytest.mark.parametrize("name", ZOO)
 def test_streaming_matches_dense_topk_all_models(name):
     """The acceptance check: fused kernel == dense lax.top_k for the zoo,
     with and without an exclude mask, through the RetrievalEngine."""
     rng = np.random.default_rng(42)
-    phi, psi = _model_phi_psi(name, rng)
+    phi, psi = model_phi_psi(name, rng)
     # model predict ⇔ ⟨φ, ψ⟩ consistency is covered by each model's own
     # tests; here we pin streaming top-k to the dense path over Φ·Ψᵀ
     engine = RetrievalEngine(psi, lambda p=phi: p, k=12, block_items=32)
@@ -139,3 +159,7 @@ def test_streaming_matches_dense_topk_all_models(name):
     for r in range(got.shape[0]):
         real = got[r][got[r] >= 0]
         assert not m[r, real].any()
+    # the id-list exclusion form agrees with the mask form bit-for-bit
+    s3, i3 = engine.topk(exclude_ids=exclude_ids_from_lists(excl_lists))
+    np.testing.assert_array_equal(np.asarray(i3), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s3), np.asarray(s2))

@@ -117,6 +117,36 @@ def test_topk_block_items_overflow_raises():
         vmem.topk_block_items(block_b=2048, d_pad=128, k_pad=65536)
 
 
+def test_topk_block_items_exclude_id_tile_charged():
+    """The exclude-ID variant's resident (block_b, L_pad) tile and per-row
+    membership compare must shrink the ψ tile, not ride for free."""
+    free = vmem.topk_block_items(block_b=128, d_pad=128, k_pad=128)
+    with_ids = vmem.topk_block_items(block_b=128, d_pad=128, k_pad=128,
+                                     excl_l_pad=256)
+    assert with_ids < free
+    with pytest.raises(vmem.VmemBudgetError):
+        # a pathologically wide exclude list busts even the minimal tile
+        # (the kernel wrapper's block_b-halving loop is the way out)
+        vmem.topk_block_items(block_b=128, d_pad=128, k_pad=128,
+                              excl_l_pad=2048)
+
+
+def test_cluster_block_items_merge_scratch_is_fixed_cost():
+    """The cross-shard merge scratch (S·K candidate score+id rows) is a
+    FIXED cost growing with the shard count: more shards ⇒ same-or-smaller
+    per-shard ψ tile, and a scratch alone over budget raises (the cluster
+    PROPAGATES instead of shrinking below one ψ block)."""
+    kw = dict(d_pad=128, k_pad=128, block_b=128)
+    single = vmem.topk_block_items(**kw)
+    s2 = vmem.cluster_block_items(n_shards=2, **kw)
+    s16 = vmem.cluster_block_items(n_shards=16, **kw)
+    assert s2 <= single and s16 <= s2
+    with pytest.raises(vmem.VmemBudgetError):
+        # 1024 shards × k_pad 8192 of merge scratch ≫ the budget
+        vmem.cluster_block_items(block_b=128, d_pad=128, k_pad=8192,
+                                 n_shards=1024)
+
+
 def test_topk_score_shrinks_block_b_on_overflow(monkeypatch):
     """The kernel wrapper owns the shrinkable fixed dimension: under a tiny
     budget it must halve block_b until the tile fits and still produce
