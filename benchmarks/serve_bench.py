@@ -19,7 +19,11 @@ Tracks ``BENCH_topk_score.json`` at the repo root:
     cluster vs the single-device engine (ids AND scores bit-identical at
     shard counts {1,2,3,4}), plus the streaming ranking-eval harness vs
     dense metrics. A broken kernel, merge, or export contract fails the
-    whole bench (the CI serve-smoke gate).
+    whole bench (the CI serve-smoke gate);
+  * HARD fault-tolerance asserts (``serve/mesh.py``) — replica kills under
+    R=2 bit-identical to the healthy oracle, unreplicated kills complete
+    with the coverage/dead-range contract, retry backoff bounded by the
+    deadline budget.
 
 Run: ``python -m benchmarks.run --quick`` (serve section) or
 ``python -m benchmarks.serve_bench --smoke``.
@@ -279,6 +283,121 @@ def _batcher_bench(quick: bool) -> dict:
     }
 
 
+def _failover_bench(quick: bool) -> dict:
+    """Fault-tolerance acceptance gate (serve/mesh.py), all HARD asserts:
+
+      * R=2, kill each replica in turn mid-traffic ⇒ every answer stays
+        BIT-identical (ids AND scores) to the healthy single-device oracle
+        — failover must be invisible in results;
+      * R=1, kill a shard ⇒ the query COMPLETES, reports coverage < 1 plus
+        the exact dead row range, and the surviving ids equal the oracle
+        restricted to the surviving ranges;
+      * sticky timeouts under a deadline budget ⇒ total backoff never
+        exceeds the budget (the batcher max_delay contract)."""
+    from repro.kernels.topk_score import topk_score_ref
+    from repro.serve.mesh import (
+        FaultInjector,
+        FaultTolerantRetrievalMesh,
+        RetryPolicy,
+    )
+
+    rng = np.random.default_rng(17)
+    n_ctx, n_items, d, kk = (9, 101, 16, 13) if quick else (32, 2048, 32, 50)
+    n_shards, n_replicas = 4, 2
+    phi = jnp.asarray(rng.normal(size=(n_ctx, d)), jnp.float32)
+    psi = jnp.asarray(rng.normal(size=(n_items, d)), jnp.float32)
+    rs_ref, ri_ref = topk_score_ref(phi, psi, kk)
+
+    inj = FaultInjector()
+    mesh = FaultTolerantRetrievalMesh(
+        lambda p=phi: p, n_shards=n_shards, n_replicas=n_replicas, k=kk,
+        block_items=32, injector=inj,
+        retry=RetryPolicy(max_attempts=3, backoff_base=1e-4),
+    )
+    mesh.publish(psi)
+    base = mesh.topk()
+    if not (np.asarray(base.ids) == np.asarray(ri_ref)).all():
+        raise AssertionError("serve bench FAILED: healthy mesh diverges "
+                             "from the dense oracle")
+    kills = 0
+    for s in range(n_shards):
+        for r in range(n_replicas):
+            inj.fail(s, r, "error")
+            # two queries: round-robin guarantees the kill is routed to
+            for _ in range(2):
+                res = mesh.topk()
+                if res.coverage != 1.0 or not (
+                    (np.asarray(res.ids) == np.asarray(base.ids)).all()
+                    and (np.asarray(res.scores)
+                         == np.asarray(base.scores)).all()
+                ):
+                    raise AssertionError(
+                        "serve bench FAILED: failover parity — killing "
+                        f"replica ({s},{r}) under R=2 changed the results"
+                    )
+            kills += 1
+            inj.heal(s, r)
+            mesh.replica_set.mark_live(s, r)
+    failover_parity = True
+
+    # unreplicated kill: labeled degradation, survivors oracle-exact
+    inj2 = FaultInjector()
+    mesh1 = FaultTolerantRetrievalMesh(
+        lambda p=phi: p, n_shards=n_shards, n_replicas=1, k=kk,
+        block_items=32, injector=inj2,
+        retry=RetryPolicy(max_attempts=2, backoff_base=1e-4),
+    )
+    mesh1.publish(psi)
+    inj2.fail(1, 0, "error")
+    deg = mesh1.topk()
+    table = mesh1.table
+    lo, hi = table.rows_per, min(2 * table.rows_per, n_items)
+    mask = np.zeros((n_ctx, n_items), bool)
+    mask[:, lo:hi] = True
+    ds_ref, di_ref = topk_score_ref(phi, psi, kk, jnp.asarray(mask))
+    if (deg.coverage >= 1.0 or deg.dead_ranges != ((lo, hi),)
+            or not (np.asarray(deg.ids) == np.asarray(di_ref)).all()):
+        raise AssertionError(
+            "serve bench FAILED: degraded-query contract — unreplicated "
+            "shard kill must complete with coverage < 1, the dead row "
+            "range, and oracle-exact survivors"
+        )
+    degraded_contract_ok = True
+
+    # deadline budget: sticky timeouts may never sleep past the budget
+    budget = 2e-3
+    inj3 = FaultInjector()
+    mesh3 = FaultTolerantRetrievalMesh(
+        lambda p=phi: p, n_shards=2, n_replicas=2, k=kk, block_items=32,
+        injector=inj3,
+        retry=RetryPolicy(max_attempts=5, backoff_base=1e-3,
+                          deadline=budget),
+    )
+    mesh3.publish(psi)
+    inj3.fail(0, 0, "timeout", latency=1.5e-3)
+    inj3.fail(0, 1, "timeout", latency=1.5e-3)
+    mesh3.topk()
+    if mesh3.stats["backoff_slept_s"] > budget:
+        raise AssertionError(
+            "serve bench FAILED: retry backoff "
+            f"({mesh3.stats['backoff_slept_s']}s) exceeded the deadline "
+            f"budget ({budget}s) — the batcher max_delay contract is broken"
+        )
+    deadline_ok = True
+    return {
+        "failover_parity": failover_parity,
+        "degraded_contract_ok": degraded_contract_ok,
+        "deadline_ok": deadline_ok,
+        "replica_kills": kills,
+        "mesh_stats": {k2: v for k2, v in mesh.stats.items()},
+        "degraded_coverage": float(deg.coverage),
+        "degraded_dead_ranges": [list(r) for r in deg.dead_ranges],
+        "deadline_budget_s": budget,
+        "backoff_slept_s": float(mesh3.stats["backoff_slept_s"]),
+        "deadline_gaveups": int(mesh3.stats["deadline_gaveups"]),
+    }
+
+
 def _eval_harness_parity(quick: bool) -> dict:
     """Streaming ranking_eval (never a (n_eval, n_items) array) vs dense
     metrics over the same exclusion protocol — single-table AND sharded."""
@@ -381,6 +500,7 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
     models = _zoo_parity(quick)
     cluster = _cluster_parity(quick)
     batcher = _batcher_bench(quick)
+    failover = _failover_bench(quick)
     eval_parity = _eval_harness_parity(quick)
     measured = _measure_cpu(quick)
     results = {
@@ -402,6 +522,7 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
         "models": models,
         "cluster": cluster,
         "batcher": batcher,
+        "failover": failover,
         "eval_harness": eval_parity,
         "acceptance": {
             "bytes_ratio_at_B256": analytic["B=256"]["bytes_ratio"],
@@ -411,6 +532,9 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
             "model_parity": {m: r["parity_ok"] for m, r in models.items()},
             "cluster_parity": all(r["parity_ok"] for r in cluster.values()),
             "batcher_routing_ok": batcher["routing_ok"],
+            "failover_parity": failover["failover_parity"],
+            "degraded_contract_ok": failover["degraded_contract_ok"],
+            "retry_deadline_ok": failover["deadline_ok"],
             "eval_parity": eval_parity["parity_ok"],
             "sharded_eval_parity": eval_parity["sharded_parity_ok"],
             "target": ">= 2x fewer HBM bytes per retrieval batch at B >= 256 "
@@ -421,12 +545,18 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
                       "(<= 1.05x byte overhead at S=4); batcher routes "
                       "out-of-order requests exactly; streaming ranking-eval "
                       "== dense metrics without a (n_eval, n_items) array, "
-                      "single-table and sharded",
+                      "single-table and sharded; replica kill under R=2 "
+                      "bit-identical (failover invisible), unreplicated kill "
+                      "completes with coverage < 1 + dead ranges, retry "
+                      "backoff never exceeds the deadline budget",
             "met": analytic["B=256"]["bytes_ratio"] >= 2.0
                    and analytic_cluster["S=4"]["shard_overhead_ratio"] <= 1.05
                    and all(r["parity_ok"] for r in models.values())
                    and all(r["parity_ok"] for r in cluster.values())
                    and batcher["routing_ok"]
+                   and failover["failover_parity"]
+                   and failover["degraded_contract_ok"]
+                   and failover["deadline_ok"]
                    and eval_parity["parity_ok"]
                    and eval_parity["sharded_parity_ok"],
         },

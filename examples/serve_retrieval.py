@@ -1,8 +1,11 @@
 """Serving: the sharded online retrieval service end-to-end — train an
 iCD-MF model, publish its ψ table into a multi-shard cluster at every epoch
 boundary (double-buffered, versioned), answer micro-batched single-row
-queries through the admission queue, and run the streaming leave-one-out
-ranking eval over the same sharded table.
+queries through the admission queue, run the streaming leave-one-out
+ranking eval over the same sharded table, then harden it: replicate the
+shards into a fault-tolerant mesh, kill replicas mid-traffic (bit-identical
+failover under R=2, labeled degradation when a range loses every copy),
+heal, and gate a ψ publish behind the canary staged rollout.
 
 Every path is the paper-native k-separable product ⟨φ(context), ψ(item)⟩
 (§5.1): per shard the fused Pallas score+top-k kernel streams ψ-table
@@ -23,7 +26,12 @@ from repro.eval.ranking import ranking_eval
 from repro.serve.batcher import MicroBatcher
 from repro.serve.cluster import ShardedRetrievalCluster
 from repro.serve.engine import RetrievalEngine
-from repro.serve.publish import PsiPublisher
+from repro.serve.mesh import (
+    FaultInjector,
+    FaultTolerantRetrievalMesh,
+    RetryPolicy,
+)
+from repro.serve.publish import PsiPublisher, StagedRollout
 from repro.sparse.interactions import build_interactions
 
 
@@ -53,7 +61,8 @@ def main():
     # --- batched online queries over the sharded table -------------------
     for batch in (8, 64):
         ctx = jnp.arange(batch)
-        jax.block_until_ready(cluster.topk(ctx))  # warmup (trace+compile)
+        _, warm_ids = cluster.topk(ctx)  # warmup (trace+compile)
+        jax.block_until_ready(warm_ids)
         t0 = time.perf_counter()
         scores, ids = cluster.topk(ctx)
         jax.block_until_ready(ids)
@@ -107,6 +116,44 @@ def main():
     )
     print(f"streaming sharded eval: recall@100={res['recall@100']:.4f} "
           f"ndcg@100={res['ndcg@100']:.4f} over {res['n_eval']} contexts")
+
+    # --- fault tolerance: replication, failover, graceful degradation ----
+    # The mesh is the hardened superset of the cluster: each ψ row-range on
+    # R=2 replicas; retries share the batcher's max_delay latency budget.
+    inj = FaultInjector()
+    mesh = FaultTolerantRetrievalMesh(
+        lambda ctx: mf.build_phi(params, ctx), n_shards=n_shards,
+        n_replicas=2, k=100, injector=inj,
+        retry=RetryPolicy(max_attempts=3, deadline=2e-3),
+    )
+    mesh.publish(mf.export_psi(params))
+    base = mesh.topk(jnp.arange(8))
+    inj.fail(1, 0, "error")  # kill one replica of shard 1 mid-traffic
+    ft = mesh.topk(jnp.arange(8))
+    assert ft.coverage == 1.0
+    assert bool((ft.ids == base.ids).all())
+    assert bool((ft.scores == base.scores).all())
+    print("replica kill under R=2: failover bit-identical ✓")
+    inj.fail(1, 1, "error")  # kill the other copy: the row range is gone
+    deg = mesh.topk(jnp.arange(8))
+    print(f"both replicas dead: query still completes, "
+          f"coverage={deg.coverage:.4f}, dead item ranges={deg.dead_ranges}")
+    inj.heal()
+    mesh.heal()  # re-place the orphaned range from the authoritative copy
+    healed = mesh.topk(jnp.arange(8))
+    assert healed.coverage == 1.0 and bool((healed.ids == base.ids).all())
+    print("heal(): replicas re-placed, full coverage restored ✓")
+
+    # --- staged rollout: canary + mirrored traffic gate the ψ publish ----
+    rollout = StagedRollout(
+        mesh, mirror_phi=mf.build_phi(params, jnp.arange(16))
+    )
+    ok, _ = rollout.publish(mf.export_psi(params))
+    bad = jnp.full((n_items, k), jnp.nan, jnp.float32)  # a broken export
+    ok_bad, report = rollout.publish(bad)
+    assert ok and not ok_bad and mesh.version == 2
+    print(f"staged rollout: good table promoted (v{mesh.version}), NaN "
+          f"table rolled back (checks={report['checks']}) ✓")
 
 
 if __name__ == "__main__":

@@ -62,18 +62,30 @@ def ranking_eval(
     ``cluster=`` switches the top-K to a sharded table
     (``cluster.topk_phi``; ``psi`` may be None) — the path past one
     device's HBM, bit-identical results by the cluster's merge contract.
+    The cluster may also be the fault-tolerant mesh (``serve/mesh.py``):
+    the returned metrics then carry the degradation contract — ``coverage``
+    (the minimum over eval batches) and the union of ``dead_ranges`` — so
+    an eval that ran against a partially-dead catalogue can never be
+    mistaken for a full-catalogue number.
     """
     n_eval = int(phi.shape[0])
     true_items = jnp.asarray(true_items, jnp.int32)
     recall_sum = 0.0
     ndcg_sum = 0.0
+    coverage = 1.0
+    dead_ranges: set = set()
     for lo in range(0, n_eval, batch_rows):
         hi = min(lo + batch_rows, n_eval)
         eids = None
         if exclude is not None:
             eids = exclude_ids_from_lists(exclude[lo:hi])
         if cluster is not None:
-            _, top_ids = cluster.topk_phi(phi[lo:hi], k=k, exclude_ids=eids)
+            res = cluster.topk_phi(phi[lo:hi], k=k, exclude_ids=eids)
+            top_ids = res.ids if hasattr(res, "ids") else res[1]
+            # degraded-cluster contract: metrics over a partially-dead
+            # catalogue are labeled, never silently reported as full
+            coverage = min(coverage, float(getattr(res, "coverage", 1.0)))
+            dead_ranges.update(getattr(res, "dead_ranges", ()))
         else:
             _, top_ids = topk_score(
                 phi[lo:hi], psi, k, exclude_ids=eids, block_items=block_items
@@ -87,6 +99,8 @@ def ranking_eval(
         f"ndcg@{k}": ndcg_sum / max(1, n_eval),
         "k": k,
         "n_eval": n_eval,
+        "coverage": coverage,
+        "dead_ranges": tuple(sorted(dead_ranges)),
     }
 
 

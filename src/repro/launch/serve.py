@@ -1,12 +1,24 @@
-"""Serving driver: sharded retrieval with micro-batched online requests.
+"""Serving driver: fault-tolerant replicated retrieval with micro-batched
+online requests.
 
-  python -m repro.launch.serve --arch icd-mf --smoke --requests 64 --shards 2
+  python -m repro.launch.serve --arch icd-mf --smoke --requests 64 \
+      --shards 2 --replicas 2
 
 Builds the model from the registry config, publishes its ψ table into a
-:class:`~repro.serve.cluster.ShardedRetrievalCluster`, and replays an
-open-loop single-row request trace through the
+:class:`~repro.serve.mesh.FaultTolerantRetrievalMesh` (each row-range on
+``--replicas`` replica slabs, health-checked failover, graceful
+degradation), and replays an open-loop single-row request trace through the
 :class:`~repro.serve.batcher.MicroBatcher` (deadline/size flush), printing
-throughput and queue-latency percentiles.
+throughput, queue-latency percentiles, coverage, and the mesh's failover
+counters. The retry policy's deadline is wired to the batcher's
+``--max-delay`` so a retrying shard can never blow the admission-queue
+latency contract.
+
+``--kill S:R`` arms a sticky injected fault on replica R of shard S before
+the trace (repeatable) — the self-contained failover/degradation demo:
+with ``--replicas 2`` a single kill is invisible in the results; killing
+both replicas of a shard degrades coverage below 1.0 and the driver
+reports the dead row ranges.
 """
 from __future__ import annotations
 
@@ -29,9 +41,15 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--policy", default="round_robin",
+                    choices=("round_robin", "least_outstanding"))
     ap.add_argument("--topk", type=int, default=100)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-delay", type=float, default=2e-3)
+    ap.add_argument("--kill", action="append", default=[], metavar="S:R",
+                    help="inject a sticky fault on replica R of shard S "
+                         "(repeatable), e.g. --kill 0:0 --kill 0:1")
     args = ap.parse_args()
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not args.arch.startswith("icd"):
@@ -42,23 +60,37 @@ def main():
 
     from repro.core.models import mf
     from repro.serve.batcher import MicroBatcher
-    from repro.serve.cluster import ShardedRetrievalCluster
+    from repro.serve.mesh import (
+        FaultInjector,
+        FaultTolerantRetrievalMesh,
+        RetryPolicy,
+    )
 
     params = mf.init(jax.random.PRNGKey(0), cfg.n_ctx, cfg.n_items, cfg.k)
     k = min(args.topk, cfg.n_items)
-    cluster = ShardedRetrievalCluster(
-        lambda ctx: mf.build_phi(params, ctx), n_shards=args.shards, k=k
+    injector = FaultInjector()
+    mesh = FaultTolerantRetrievalMesh(
+        lambda ctx: mf.build_phi(params, ctx),
+        n_shards=args.shards, n_replicas=args.replicas, k=k,
+        policy=args.policy, injector=injector,
+        # a shard's retries share the batcher's latency bound: a request
+        # can burn at most max_delay on backoff before degrading instead
+        retry=RetryPolicy(max_attempts=3, deadline=args.max_delay),
     )
-    version = cluster.publish(mf.export_psi(params))
+    version = mesh.publish(mf.export_psi(params))
     print(f"[serve] published psi v{version}: {cfg.n_items} items over "
-          f"{args.shards} shard(s), top-{k}")
+          f"{args.shards} shard(s) x {args.replicas} replica(s), top-{k}")
+    for spec in args.kill:
+        s, r = (int(x) for x in spec.split(":"))
+        injector.fail(s, r, "error")
+        print(f"[serve] chaos: armed sticky fault on replica ({s}, {r})")
 
     batcher = MicroBatcher(
-        lambda phi, eids: cluster.topk_phi(phi, exclude_ids=eids),
+        lambda phi, eids: mesh.topk_phi(phi, exclude_ids=eids),
         max_batch=args.max_batch, max_delay=args.max_delay,
         # same clock as t0 below: completed_at − t0 must be well-defined
         clock=time.perf_counter,
-        version_fn=lambda: cluster.version,
+        version_fn=lambda: mesh.version,
     )
     phi_all = np.asarray(mf.build_phi(params, np.arange(cfg.n_ctx)))
     rng = np.random.default_rng(0)
@@ -68,16 +100,22 @@ def main():
     for u in users:
         tickets.append((u, batcher.submit(phi_all[u], key=("user", int(u)))))
         batcher.step()
-    batcher.flush()
+    batcher.flush()  # retire the sub-batch tail
     dt = time.perf_counter() - t0
-    lat, top_id = [], None
+    lat, top_id, coverage, dead_ranges = [], None, 1.0, set()
     for u, t in tickets:
         done_at = batcher.completed_at(t)
-        scores, ids = batcher.result(t)
+        res = batcher.result(t)
+        scores, ids = res
         assert ids.shape == (k,)
-        lat.append(done_at - t0)
+        if done_at is not None:
+            lat.append(done_at - t0)
+        coverage = min(coverage, res.coverage)
+        dead_ranges.update(res.dead_ranges)
         if top_id is None:
             top_id = int(ids[0])
+    leftovers = batcher.drain()  # close admission; nothing may be stranded
+    assert not leftovers and batcher.closed
     print(f"[serve] {args.requests} requests in {dt:.3f}s "
           f"({args.requests / dt:.1f} req/s), "
           f"{batcher.stats['flushes']} flushes "
@@ -85,6 +123,18 @@ def main():
           f"deadline={batcher.stats['flush_by_deadline']} "
           f"forced={batcher.stats['flush_forced']}), "
           f"cache_hits={batcher.stats['cache_hits']}")
+    ms = mesh.stats
+    print(f"[serve] mesh: {ms['dispatches']} dispatches, "
+          f"{ms['faults']} faults, {ms['failovers']} failovers, "
+          f"{ms['retries']} retries "
+          f"(backoff {ms['backoff_slept_s'] * 1e3:.2f} ms, "
+          f"gaveups={ms['deadline_gaveups']}), "
+          f"{ms['degraded_queries']} degraded queries")
+    if coverage < 1.0:
+        print(f"[serve] DEGRADED: coverage={coverage:.4f}, dead item "
+              f"ranges={sorted(dead_ranges)} — heal() or restart replicas")
+    else:
+        print("[serve] coverage=1.0000 (full catalogue served)")
     print(f"[serve] completion p50={_percentile(lat, 50):.4f}s "
           f"p99={_percentile(lat, 99):.4f}s after start; "
           f"top id for user {int(users[0])}: {top_id}")

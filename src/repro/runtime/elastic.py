@@ -24,14 +24,20 @@ import numpy as np
 
 
 def largest_mesh_shape(n_devices: int, model_axis: int) -> Tuple[int, int]:
-    """Largest (data, model) grid with a fixed model axis that fits the
-    surviving device count. Keeps TP groups intact (model stays intra-host
-    on real pods); sheds whole DP replicas instead."""
-    model = model_axis
-    while model > 1 and n_devices % model:
-        model //= 2
-    data = n_devices // model
-    return data, model
+    """Largest (data, model) grid with model ≤ ``model_axis`` that tiles the
+    surviving device count exactly. Keeps TP groups as large as possible
+    (model stays intra-host on real pods); sheds whole DP replicas instead.
+
+    The model axis shrinks to the LARGEST DIVISOR of ``n_devices`` that is
+    ≤ ``model_axis`` — not just a halving chain, which skips every
+    non-power-of-two divisor (e.g. ``n_devices=8, model_axis=6`` must give
+    ``(2, 4)``, and ``n_devices=250, model_axis=16`` gives ``(25, 10)``,
+    not the halving chain's ``(125, 2)``)."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    cap = max(1, min(model_axis, n_devices))
+    model = max(d for d in range(1, cap + 1) if n_devices % d == 0)
+    return n_devices // model, model
 
 
 class ElasticMeshManager:

@@ -1,9 +1,11 @@
 """Online retrieval serving: single-device engine, sharded cluster,
-request micro-batching, and live ψ publish from training."""
+fault-tolerant replicated mesh, request micro-batching, and live ψ publish
+from training (see serve/README.md for the operations guide)."""
 from repro.serve.batcher import MicroBatcher  # noqa: F401
 from repro.serve.cluster import (  # noqa: F401
     PsiShardSet,
     ShardedRetrievalCluster,
+    TopKResult,
     cluster_topk,
     shard_map_topk,
     shard_psi,
@@ -13,5 +15,16 @@ from repro.serve.engine import (  # noqa: F401
     exclude_ids_from_lists,
     exclude_mask_from_lists,
 )
-from repro.serve.publish import PsiPublisher, VersionedTable  # noqa: F401
+from repro.serve.mesh import (  # noqa: F401
+    FaultInjector,
+    FaultTolerantRetrievalMesh,
+    ReplicaSet,
+    RetryPolicy,
+    ShardHealthMonitor,
+)
+from repro.serve.publish import (  # noqa: F401
+    PsiPublisher,
+    StagedRollout,
+    VersionedTable,
+)
 from repro.serve.recsys_serve import bulk_score, retrieval_topk  # noqa: F401

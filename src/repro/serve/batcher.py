@@ -32,10 +32,29 @@ batch per kernel dispatch:
   caching: an LRU φ→result cache keyed on ``(key, table_version,
   exclude_list)``. The version comes from the serving table
   (``cluster.version`` — bumped by every ``publish``), so a live ψ refresh
-  implicitly invalidates the whole cache without any flush traffic; the
-  exclude list is folded in by the batcher itself, so a caller key only
-  has to identify the φ row. Only requests that carry an explicit hashable
-  ``key`` participate (an unkeyed φ row has no cheap identity).
+  implicitly invalidates the whole cache without any flush traffic; on the
+  first admission AFTER a version bump every entry keyed on a superseded
+  version is EVICTED outright (dead weight would otherwise squat in the
+  LRU until capacity pressure aged it out, evicting live entries first).
+  The exclude list is folded in by the batcher itself, so a caller key
+  only has to identify the φ row. Only requests that carry an explicit
+  hashable ``key`` participate (an unkeyed φ row has no cheap identity),
+  and only full-coverage results are cached — a degraded answer
+  (``coverage < 1``, see below) must not outlive the failure that caused
+  it.
+
+  degraded results: when the backing executor is the fault-tolerant mesh
+  (``serve/mesh.py``), a flush's results may carry ``coverage < 1.0`` and
+  dead item ranges. The batcher forwards that contract per ticket: each
+  routed result is a single-row :class:`~repro.serve.cluster.TopKResult`
+  (still unpackable as ``(scores, ids)``) tagged with the flush's
+  coverage/dead ranges — a caller can always tell a full answer from a
+  partial one.
+
+  shutdown: :meth:`drain` flushes everything queued and closes the
+  batcher — queued requests are never stranded; admissions after close
+  raise. The serving driver calls it on the way out (and on SIGTERM in a
+  real deployment).
 """
 from __future__ import annotations
 
@@ -46,6 +65,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.cluster import TopKResult
 
 
 @dataclasses.dataclass
@@ -99,15 +120,18 @@ class MicroBatcher:
         self.clock = clock
         self.version_fn = version_fn or (lambda: 0)
         self._queue: List[_Pending] = []
-        self._results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._results: Dict[int, TopKResult] = {}
         self._completed_at: Dict[int, float] = {}
         self._next_ticket = 0
         self._cache: OrderedDict = OrderedDict()
         self._cache_size = int(cache_size)
+        self._cache_version = self.version_fn()
+        self._closed = False
         self.stats = {
             "submitted": 0, "flushes": 0, "flushed_rows": 0,
             "flush_by_size": 0, "flush_by_deadline": 0, "flush_forced": 0,
-            "cache_hits": 0, "cache_misses": 0,
+            "cache_hits": 0, "cache_misses": 0, "cache_evicted_stale": 0,
+            "degraded_results": 0,
         }
 
     # ----------------------------------------------------------- admission
@@ -127,7 +151,12 @@ class MicroBatcher:
         folded into the cache key here, so a request with a different
         exclusion set or against a newer ψ table can never be served a
         stale cached result."""
+        if self._closed:
+            raise RuntimeError(
+                "batcher is closed (drained); no new admissions"
+            )
         now = self.clock() if now is None else now
+        self._evict_superseded()
         ticket = self._next_ticket
         self._next_ticket += 1
         self.stats["submitted"] += 1
@@ -167,16 +196,35 @@ class MicroBatcher:
         return False
 
     def flush(self, now: Optional[float] = None) -> None:
-        """Force-flush everything queued (drain on shutdown)."""
+        """Force-flush everything queued."""
         now = self.clock() if now is None else now
         while self._queue:
             self._flush(now, "flush_forced")
 
+    # ------------------------------------------------------------- shutdown
+    def drain(self, now: Optional[float] = None) -> Dict[int, TopKResult]:
+        """Graceful shutdown: flush every queued request so none is
+        stranded, CLOSE the batcher (subsequent ``submit`` raises), and
+        return all still-unclaimed results keyed by ticket so the caller
+        can deliver them before exiting. Idempotent."""
+        self.flush(now)
+        self._closed = True
+        out = dict(self._results)
+        self._results.clear()
+        self._completed_at.clear()
+        return out
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     # -------------------------------------------------------------- results
     def result(
         self, ticket: int, *, pop: bool = True
-    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-        """(scores (k,), ids (k,)) for a ticket, or None while queued."""
+    ) -> Optional[TopKResult]:
+        """Single-row :class:`~repro.serve.cluster.TopKResult` for a ticket
+        (unpacks as ``scores (k,), ids (k,)``; carries the flush's
+        ``coverage``/``dead_ranges``), or None while queued."""
         if ticket not in self._results:
             return None
         out = self._results.pop(ticket) if pop else self._results[ticket]
@@ -209,14 +257,21 @@ class MicroBatcher:
                 if req.exclude is not None:
                     excl_ids[r, : req.exclude.shape[0]] = req.exclude
             excl_ids = jnp.asarray(excl_ids)
-        scores, ids = self.topk_phi(jnp.asarray(phi), excl_ids)
+        res = self.topk_phi(jnp.asarray(phi), excl_ids)
+        scores, ids = res  # TopKResult or a bare (scores, ids) tuple
+        coverage = float(getattr(res, "coverage", 1.0))
+        dead_ranges = tuple(getattr(res, "dead_ranges", ()))
         scores = np.asarray(scores)
         ids = np.asarray(ids)
+        if coverage < 1.0:
+            self.stats["degraded_results"] += len(batch)
         for r, req in enumerate(batch):  # route rows back to their tickets
-            out = (scores[r], ids[r])
+            out = TopKResult(scores[r], ids[r], coverage, dead_ranges)
             self._results[req.ticket] = out
             self._completed_at[req.ticket] = now
-            if req.key is not None:
+            # degraded answers are never cached: the hole they carry must
+            # not outlive the replica failure that caused it
+            if req.key is not None and coverage == 1.0:
                 self._cache_put(self._cache_key(req.key, req.exclude), out)
         self.stats["flushes"] += 1
         self.stats["flushed_rows"] += b
@@ -229,6 +284,20 @@ class MicroBatcher:
         the live table so a publish implicitly invalidates every entry."""
         excl_key = () if excl is None else tuple(excl.tolist())
         return (key, self.version_fn(), excl_key)
+
+    def _evict_superseded(self) -> None:
+        """Drop cache entries keyed on a superseded table version the
+        moment a publish is observed — they can never hit again (the key
+        embeds the version), so letting them age out of the LRU would only
+        crowd out live entries."""
+        version = self.version_fn()
+        if version == self._cache_version:
+            return
+        self._cache_version = version
+        stale = [k for k in self._cache if k[1] != version]
+        for k in stale:
+            del self._cache[k]
+        self.stats["cache_evicted_stale"] += len(stale)
 
     def _cache_get(self, key):
         if key not in self._cache:

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,123 @@ from repro.kernels import vmem
 from repro.kernels.topk_score.ops import topk_merge_shards, topk_score
 
 _LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKResult:
+    """Top-K results plus the degraded-service contract.
+
+    Unpacks like the bare ``(scores, ids)`` tuple every pre-existing call
+    site expects (``scores, ids = cluster.topk(...)``), and additionally
+    carries:
+
+      * ``coverage`` — fraction of the catalogue's items that were actually
+        searched (1.0 on a healthy cluster). A dead, unreplicated shard
+        lowers it; results are then exact over the SURVIVING row ranges
+        but items in the dead ranges can never appear.
+      * ``dead_ranges`` — the global item-id ranges ``(lo, hi)`` that were
+        unavailable, coalesced and clipped to ``n_items``. Empty when
+        ``coverage == 1.0``.
+
+    The contract: a degraded query COMPLETES (never hangs, never raises at
+    the query layer) and says so — it must never return a full-looking
+    top-K that silently omits part of the catalogue.
+    """
+
+    scores: jax.Array                               # (B, k)
+    ids: jax.Array                                  # (B, k)
+    coverage: float = 1.0
+    dead_ranges: Tuple[Tuple[int, int], ...] = ()
+
+    def __iter__(self):
+        # (scores, ids) tuple-compat: `s, i = cluster_topk(...)` still works
+        return iter((self.scores, self.ids))
+
+    def __getitem__(self, i):
+        # positional tuple-compat: result[0] / result[1]
+        return (self.scores, self.ids)[i]
+
+    def __len__(self) -> int:
+        return 2
+
+    @property
+    def degraded(self) -> bool:
+        return self.coverage < 1.0
+
+
+def dead_item_ranges(
+    table: PsiShardSet, dead_shards
+) -> Tuple[Tuple[int, int], ...]:
+    """Coalesced global item-id ranges owned by ``dead_shards``, clipped to
+    the real catalogue (a dead LAST shard's padding rows don't count)."""
+    ranges = []
+    for s in sorted(set(dead_shards)):
+        lo = s * table.rows_per
+        hi = min(lo + table.rows_per, table.n_items)
+        if hi <= lo:
+            continue
+        if ranges and ranges[-1][1] == lo:
+            ranges[-1] = (ranges[-1][0], hi)
+        else:
+            ranges.append((lo, hi))
+    return tuple(ranges)
+
+
+def coverage_fraction(table: PsiShardSet, dead_shards) -> float:
+    """Fraction of real catalogue rows in surviving shards."""
+    if table.n_items == 0:
+        return 1.0
+    dead = sum(hi - lo for lo, hi in dead_item_ranges(table, dead_shards))
+    return 1.0 - dead / table.n_items
+
+
+def empty_topk(b: int, k: int) -> Tuple[jax.Array, jax.Array]:
+    """The no-admissible-candidates result: (−inf, −1) everywhere — what a
+    query against zero surviving shards degrades to."""
+    return (jnp.full((b, k), -jnp.inf, jnp.float32),
+            jnp.full((b, k), -1, jnp.int32))
+
+
+def colocate_parts(parts: List[jax.Array]) -> List[jax.Array]:
+    """Per-shard results are committed to their shard's (or replica's)
+    device; ``jnp.stack`` refuses a cross-device concatenate, so the merge
+    input must first land on one device. No-op in the single-device case."""
+    devs = {getattr(p, "device", None) for p in parts}
+    if len(devs) <= 1:
+        return parts
+    dev = jax.devices()[0]
+    return [jax.device_put(p, dev) for p in parts]
+
+
+def shard_topk(
+    table: PsiShardSet,
+    s: int,
+    phi_rows: jax.Array,
+    k: int,
+    *,
+    slab: Optional[jax.Array] = None,
+    exclude_mask: Optional[jax.Array] = None,
+    exclude_ids: Optional[jax.Array] = None,
+    block_items: int,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One shard's fused-kernel dispatch: (B, k) candidates with GLOBAL
+    ids. ``slab`` overrides the table's own copy of shard ``s`` — the
+    replication layer (``serve/mesh.py``) routes the same row range to any
+    replica slab through here, so every replica runs the identical program
+    the unreplicated cluster does."""
+    lo = s * table.rows_per
+    shard = table.shards[s] if slab is None else slab
+    mask_s = None
+    if exclude_mask is not None:
+        mask_s = _shard_exclude_mask(exclude_mask, lo, table.rows_per)
+    dev = getattr(shard, "device", None)
+    phi_s = phi_rows if dev is None else jax.device_put(phi_rows, dev)
+    return topk_score(
+        phi_s, shard, k, mask_s, exclude_ids=exclude_ids,
+        id_offset=lo, n_valid=table.valid_rows(s),
+        block_items=block_items, interpret=interpret,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,32 +289,46 @@ def cluster_topk(
     exclude_ids: Optional[jax.Array] = None,
     block_items: Optional[int] = None,
     interpret: Optional[bool] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    dead_shards: Sequence[int] = (),
+) -> TopKResult:
     """Sharded top-K over one table snapshot: S fused-kernel dispatches +
     the cross-shard merge. Functional core of the cluster — callers that
-    need snapshot consistency grab ``table`` ONCE and pass it here."""
+    need snapshot consistency grab ``table`` ONCE and pass it here.
+
+    ``dead_shards`` is the graceful-degradation hook (the failure detector
+    in ``serve/mesh.py`` supplies it): those shards are skipped, the query
+    completes over the survivors, and the result reports ``coverage < 1``
+    plus the dead global-id ranges instead of hanging or silently serving
+    a full-looking top-K."""
     phi_rows = jnp.asarray(phi_rows, jnp.float32)
     b = phi_rows.shape[0]
     if block_items is None:
         excl_l = 0 if exclude_ids is None else int(exclude_ids.shape[1])
         block_items = resolve_cluster_block_items(table, b, k, excl_l=excl_l)
+    dead = set(dead_shards)
     parts_s, parts_i = [], []
-    for s, (shard, lo) in enumerate(zip(table.shards, table.offsets)):
-        mask_s = None
-        if exclude_mask is not None:
-            mask_s = _shard_exclude_mask(exclude_mask, lo, table.rows_per)
-        dev = getattr(shard, "device", None)
-        phi_s = phi_rows if dev is None else jax.device_put(phi_rows, dev)
-        ss, ii = topk_score(
-            phi_s, shard, k, mask_s, exclude_ids=exclude_ids,
-            id_offset=lo, n_valid=table.valid_rows(s),
-            block_items=block_items, interpret=interpret,
+    for s in range(table.n_shards):
+        if s in dead:
+            continue
+        ss, ii = shard_topk(
+            table, s, phi_rows, k, exclude_mask=exclude_mask,
+            exclude_ids=exclude_ids, block_items=block_items,
+            interpret=interpret,
         )
         parts_s.append(ss)
         parts_i.append(ii)
-    if table.n_shards == 1:  # nothing to merge; skip the sort
-        return parts_s[0], parts_i[0]
-    return topk_merge_shards(jnp.stack(parts_s), jnp.stack(parts_i), k)
+    coverage = coverage_fraction(table, dead)
+    ranges = dead_item_ranges(table, dead)
+    if not parts_s:  # every shard dead: complete, loudly empty
+        es, ei = empty_topk(b, k)
+        return TopKResult(es, ei, coverage, ranges)
+    if len(parts_s) == 1:  # nothing to merge; skip the sort
+        return TopKResult(parts_s[0], parts_i[0], coverage, ranges)
+    ms, mi = topk_merge_shards(
+        jnp.stack(colocate_parts(parts_s)),
+        jnp.stack(colocate_parts(parts_i)), k,
+    )
+    return TopKResult(ms, mi, coverage, ranges)
 
 
 def shard_map_topk(
@@ -209,7 +340,7 @@ def shard_map_topk(
     exclude_ids: Optional[jax.Array] = None,
     block_items: Optional[int] = None,
     interpret: Optional[bool] = None,
-) -> Tuple[jax.Array, jax.Array]:
+) -> TopKResult:
     """All per-shard kernels in ONE ``shard_map`` over ``mesh``'s flat axis
     (one ψ shard per device; φ and the exclude-id lists replicate), then the
     cross-shard merge on the gathered (S, B, K) candidates.
@@ -238,7 +369,8 @@ def shard_map_topk(
     if exclude_ids is not None:
         args += (jnp.asarray(exclude_ids, jnp.int32),)
     ss, ii = fn(*args)
-    return topk_merge_shards(ss, ii, k)
+    ms, mi = topk_merge_shards(ss, ii, k)
+    return TopKResult(ms, mi)
 
 
 @functools.lru_cache(maxsize=64)
@@ -352,8 +484,10 @@ class ShardedRetrievalCluster:
         exclude_mask: Optional[jax.Array] = None,
         exclude_ids: Optional[jax.Array] = None,
         mesh=None,
-    ) -> Tuple[jax.Array, jax.Array]:
-        """(scores, ids), both (B, k), for a query batch."""
+    ) -> TopKResult:
+        """(scores, ids) :class:`TopKResult`, both (B, k), for a query
+        batch (coverage always 1.0 here — the unreplicated cluster has no
+        failure detector; see ``serve/mesh.py`` for the degraded path)."""
         return self.topk_phi(
             self.phi(*query), k=k, exclude_mask=exclude_mask,
             exclude_ids=exclude_ids, mesh=mesh,
@@ -367,7 +501,7 @@ class ShardedRetrievalCluster:
         exclude_mask: Optional[jax.Array] = None,
         exclude_ids: Optional[jax.Array] = None,
         mesh=None,
-    ) -> Tuple[jax.Array, jax.Array]:
+    ) -> TopKResult:
         """Like :meth:`topk` from pre-built φ rows (batcher / eval path)."""
         table = self.table  # ONE snapshot: version-consistent whole request
         k = k or self.k

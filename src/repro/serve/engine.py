@@ -78,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.topk_score.ops import topk_score
+from repro.serve.cluster import TopKResult
 
 
 def exclude_ids_from_lists(
@@ -152,8 +153,12 @@ class RetrievalEngine:
         k: Optional[int] = None,
         exclude_mask: Optional[jax.Array] = None,
         exclude_ids: Optional[jax.Array] = None,
-    ) -> Tuple[jax.Array, jax.Array]:
-        """(scores, ids), both (B, k), for a query batch."""
+    ) -> TopKResult:
+        """(scores, ids) :class:`~repro.serve.cluster.TopKResult`, both
+        (B, k), for a query batch. A single-device engine has no failure
+        modes to degrade over, so ``coverage`` is always 1.0 — the field
+        exists so every serving tier (engine, cluster, mesh, batcher
+        tickets, sharded eval) answers with ONE result contract."""
         return self.topk_phi(
             self.phi(*query), k=k, exclude_mask=exclude_mask,
             exclude_ids=exclude_ids,
@@ -166,13 +171,14 @@ class RetrievalEngine:
         k: Optional[int] = None,
         exclude_mask: Optional[jax.Array] = None,
         exclude_ids: Optional[jax.Array] = None,
-    ) -> Tuple[jax.Array, jax.Array]:
+    ) -> TopKResult:
         """Like :meth:`topk` but from pre-built φ rows (the eval harness
         path, which batches a big φ matrix through here)."""
-        return topk_score(
+        s, i = topk_score(
             phi_rows, self.psi, k or self.k, exclude_mask,
             exclude_ids=exclude_ids, block_items=self.block_items,
         )
+        return TopKResult(s, i)
 
     def scores(self, phi_rows: jax.Array) -> jax.Array:
         """Dense (B, n_items) scores — small batches / tests ONLY; serving

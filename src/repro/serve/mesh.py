@@ -1,0 +1,765 @@
+"""Fault-tolerant serving mesh: replication, health-checked failover, and
+graceful degradation for the sharded retrieval cluster.
+
+``serve/cluster.py`` gives one copy of each ψ row-range: lose a shard and
+its slice of the catalogue silently vanishes. This module is the tier that
+makes the cluster OPERABLE under the failures a "millions of users" serving
+regime implies (Rendle 2021 frames large-catalogue retrieval as exactly
+this availability/tail-latency problem):
+
+  replication — :class:`ReplicaSet` places each row range on R replica
+    slabs (round-robin across devices so copies of the same shard land on
+    DIFFERENT devices), with per-replica health state and two routing
+    policies: ``round_robin`` (throughput fan-out) and
+    ``least_outstanding`` (tail-latency under skew). Every replica runs
+    the identical fused-kernel program (``cluster.shard_topk``) with the
+    same ``id_offset``/``n_valid`` meta, so WHICH replica answered is
+    unobservable in the results — failover is bit-invisible.
+
+  failure detection — three signals feed the per-replica health state:
+    (1) hard failures (a dispatch raises — or the injectable
+    :class:`FaultInjector` makes it raise, so every failure path is
+    testable without killing real processes); (2) latency: per-replica
+    query wall-times stream into a :class:`ShardHealthMonitor`
+    (``runtime.health.StragglerWatchdog`` keyed by ``(shard, replica)``) —
+    a replica whose median latency exceeds the fleet's by ``threshold``×
+    for ``patience`` checks is flagged and routed around; (3) staleness: a
+    replica still serving an old table version (stuck canary, failed
+    flip) is refused before dispatch.
+
+  failover + re-placement — a failed dispatch fails over to the next live
+    replica of the same range (no backoff for failover: another copy is
+    already warm). A replica struck out ``fail_threshold`` times is marked
+    dead; :meth:`FaultTolerantRetrievalMesh.heal` then re-places the
+    orphaned row range onto a surviving device from the publisher's
+    authoritative copy — the ``ElasticMeshManager`` recovery shape
+    (rebuild placement over the surviving device set), applied per shard.
+
+  bounded, deadline-aware retries — :class:`RetryPolicy` gives each
+    request a budget: at most ``max_attempts`` dispatches per shard,
+    exponential backoff between SAME-SET retries, and every sleep capped
+    by the request's remaining ``deadline`` budget — a retry can never
+    blow the micro-batcher's ``max_delay`` contract (wire
+    ``retry.deadline = batcher.max_delay``). Injected fault latencies
+    count against the budget exactly like real ones.
+
+  graceful degradation — a row range with NO live replica does not hang or
+    raise: the query completes over the surviving shards and the
+    :class:`~repro.serve.cluster.TopKResult` reports ``coverage < 1.0``
+    plus the dead global-id ranges. The same contract flows through the
+    batcher's ticket results and ``eval/ranking.py``'s sharded path.
+
+  staged rollout — ``publish.StagedRollout`` drives the canary protocol
+    (:meth:`begin_canary` → :meth:`mirror_check` → :meth:`promote_canary`
+    / :meth:`rollback_canary`): the next ψ table is installed on ONE
+    canary replica per shard, health-checked under mirrored traffic
+    against the live table, and only then flipped everywhere — a bad
+    table rolls back without downtime and without ever serving a user.
+
+Everything is single-process and clock-injectable (like ``MicroBatcher``):
+tests drive simulated clocks and the :class:`FaultInjector` instead of
+killing processes, so the chaos suite is deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.health import StragglerWatchdog
+from repro.serve.cluster import (
+    PsiShardSet,
+    TopKResult,
+    colocate_parts,
+    coverage_fraction,
+    dead_item_ranges,
+    empty_topk,
+    resolve_cluster_block_items,
+    shard_psi,
+    shard_topk,
+)
+from repro.kernels.topk_score.ops import topk_merge_shards
+
+
+# ------------------------------------------------------------------ failures
+class ReplicaFailure(RuntimeError):
+    """A single replica failed one dispatch (crash, injected error)."""
+
+    def __init__(self, msg: str = "replica failure", latency: float = 0.0):
+        super().__init__(msg)
+        self.latency = float(latency)
+
+
+class ReplicaTimeout(ReplicaFailure):
+    """A dispatch exceeded its time allowance; ``latency`` is what it
+    burned from the request's deadline budget before being abandoned."""
+
+
+class StaleReplicaError(ReplicaFailure):
+    """The replica's installed table version lags the live version — it
+    must not answer (a stale ψ would silently serve old scores)."""
+
+
+class FaultInjector:
+    """Injectable failure source — the chaos-testing hook.
+
+    ``fail(shard, replica, mode)`` arms a fault on one replica:
+
+      * ``"error"``   — its next dispatches raise :class:`ReplicaFailure`;
+      * ``"timeout"`` — raise :class:`ReplicaTimeout` carrying ``latency``
+        seconds of burned deadline budget;
+      * ``"stale"``   — raise :class:`StaleReplicaError` (simulates a
+        replica stuck on an old table version).
+
+    Faults are sticky until :meth:`heal`; ``count=n`` makes a fault
+    transient (auto-disarms after n dispatches — the retry-path test)."""
+
+    def __init__(self):
+        self._faults: Dict[Tuple[int, int], dict] = {}
+        self.triggered = 0
+
+    def fail(self, shard: int, replica: int, mode: str = "error", *,
+             latency: float = 0.0, count: Optional[int] = None) -> None:
+        if mode not in ("error", "timeout", "stale"):
+            raise ValueError(f"unknown fault mode {mode!r}")
+        self._faults[(shard, replica)] = {
+            "mode": mode, "latency": float(latency), "count": count,
+        }
+
+    def heal(self, shard: Optional[int] = None,
+             replica: Optional[int] = None) -> None:
+        """Disarm faults: all of them, one shard's, or one replica's."""
+        if shard is None:
+            self._faults.clear()
+            return
+        for key in list(self._faults):
+            if key[0] == shard and (replica is None or key[1] == replica):
+                del self._faults[key]
+
+    def before_dispatch(self, shard: int, replica: int) -> None:
+        f = self._faults.get((shard, replica))
+        if f is None:
+            return
+        if f["count"] is not None:
+            f["count"] -= 1
+            if f["count"] < 0:
+                del self._faults[(shard, replica)]
+                return
+        self.triggered += 1
+        if f["mode"] == "timeout":
+            raise ReplicaTimeout(
+                f"injected timeout on replica ({shard}, {replica})",
+                latency=f["latency"],
+            )
+        if f["mode"] == "stale":
+            raise StaleReplicaError(
+                f"injected stale table on replica ({shard}, {replica})"
+            )
+        raise ReplicaFailure(
+            f"injected error on replica ({shard}, {replica})",
+            latency=f["latency"],
+        )
+
+
+# ------------------------------------------------------------------- policy
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with deadline-aware exponential backoff.
+
+    ``max_attempts`` caps dispatches per shard per request. ``backoff_base``
+    seconds doubles per retry (attempt i sleeps ``base · 2^(i-1)``), but a
+    sleep is only taken when it FITS the remaining ``deadline`` budget —
+    otherwise the shard gives up immediately (degrade beats blowing the
+    caller's latency contract). ``deadline=None`` means unbudgeted (retries
+    still bounded by ``max_attempts``). Set ``deadline`` to the
+    micro-batcher's ``max_delay`` so queue wait + retries share one bound.
+    """
+
+    max_attempts: int = 3
+    backoff_base: float = 1e-4
+    deadline: Optional[float] = None
+
+    def backoff(self, attempt: int) -> float:
+        """Sleep before retry number ``attempt`` (1-based)."""
+        return self.backoff_base * (2.0 ** max(0, attempt - 1))
+
+
+# ------------------------------------------------------------------ replicas
+@dataclasses.dataclass
+class Replica:
+    """One placed copy of one ψ row-range, with live health state."""
+
+    shard: int
+    idx: int                      # replica slot within the shard
+    slab: jax.Array               # (rows_per, D)
+    device: Optional[object]
+    version: int
+    alive: bool = True
+    canary: bool = False          # staged next-version copy; not routed
+    outstanding: int = 0          # in-flight dispatches (least_outstanding)
+    served: int = 0
+    failures: int = 0             # consecutive failures (reset on success)
+    dead_reason: Optional[str] = None
+
+    @property
+    def key(self) -> Tuple[int, int]:
+        return (self.shard, self.idx)
+
+
+class ReplicaSet:
+    """R health-tracked replicas of every shard of one table snapshot.
+
+    Placement: replica r of shard s goes on ``devices[(s + r) % D]`` — the
+    rotation guarantees (whenever R ≤ D) that copies of the SAME row range
+    live on DIFFERENT devices, so one device loss never kills a range.
+
+    Routing (:meth:`pick`): ``round_robin`` cycles the live replicas of a
+    shard (throughput); ``least_outstanding`` picks the live replica with
+    the fewest in-flight dispatches (tail latency). Dead replicas are
+    never picked; a shard with zero live replicas has no route and the
+    query layer degrades.
+    """
+
+    def __init__(
+        self,
+        table: PsiShardSet,
+        n_replicas: int = 2,
+        *,
+        devices: Optional[Sequence] = None,
+        policy: str = "round_robin",
+    ):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        if policy not in ("round_robin", "least_outstanding"):
+            raise ValueError(f"unknown routing policy {policy!r}")
+        self.table = table              # authoritative source copy
+        self.n_replicas = int(n_replicas)
+        self.devices = list(devices) if devices is not None else None
+        self.policy = policy
+        self._rr = [0] * table.n_shards
+        self.replicas: List[List[Replica]] = [
+            [self._place(s, r) for r in range(self.n_replicas)]
+            for s in range(table.n_shards)
+        ]
+
+    # ----------------------------------------------------------- placement
+    def _device_for(self, s: int, r: int):
+        if not self.devices:
+            return None
+        return self.devices[(s + r) % len(self.devices)]
+
+    def _place(self, s: int, r: int, device=None) -> Replica:
+        dev = device if device is not None else self._device_for(s, r)
+        slab = self.table.shards[s]
+        if dev is not None:
+            slab = jax.device_put(slab, dev)
+        return Replica(shard=s, idx=r, slab=slab, device=dev,
+                       version=self.table.version)
+
+    # ------------------------------------------------------------- health
+    @property
+    def n_shards(self) -> int:
+        return self.table.n_shards
+
+    @property
+    def version(self) -> int:
+        return self.table.version
+
+    def live(self, s: int) -> List[Replica]:
+        return [r for r in self.replicas[s] if r.alive and not r.canary]
+
+    def dead_shards(self) -> List[int]:
+        return [s for s in range(self.n_shards) if not self.live(s)]
+
+    def mark_dead(self, s: int, idx: int, reason: str = "failed") -> None:
+        for rep in self.replicas[s]:
+            if rep.idx == idx and rep.alive:
+                rep.alive = False
+                rep.dead_reason = reason
+
+    def mark_live(self, s: int, idx: int) -> None:
+        for rep in self.replicas[s]:
+            if rep.idx == idx:
+                rep.alive = True
+                rep.failures = 0
+                rep.dead_reason = None
+
+    # ------------------------------------------------------------- routing
+    def pick(self, s: int) -> Replica:
+        live = self.live(s)
+        if not live:
+            raise ReplicaFailure(f"shard {s} has no live replica")
+        if self.policy == "least_outstanding":
+            return min(live, key=lambda r: (r.outstanding, r.idx))
+        rep = live[self._rr[s] % len(live)]
+        self._rr[s] += 1
+        return rep
+
+    # ----------------------------------------------------- re-placement
+    def replace(self, s: int, *, device=None) -> Replica:
+        """Re-place shard ``s``'s orphaned row range as a fresh replica
+        built from the authoritative table copy, on a SURVIVING device —
+        the per-shard mirror of ``ElasticMeshManager.on_failure`` (rebuild
+        placement over the device set minus the casualties). The new
+        replica takes the lowest free slot index."""
+        if device is None and self.devices:
+            tainted = {id(r.device) for r in self.replicas[s]
+                       if not r.alive and r.device is not None}
+            candidates = [d for d in self.devices if id(d) not in tainted]
+            if not candidates:       # every device saw a death: any port
+                candidates = list(self.devices)
+            loads: Dict[int, int] = {}
+            for row in self.replicas:
+                for rep in row:
+                    if rep.alive and rep.device is not None:
+                        loads[id(rep.device)] = loads.get(id(rep.device), 0) + 1
+            device = min(candidates, key=lambda d: loads.get(id(d), 0))
+        used = {r.idx for r in self.replicas[s]}
+        idx = next(i for i in itertools.count() if i not in used)
+        rep = self._place(s, idx, device=device)
+        self.replicas[s].append(rep)
+        return rep
+
+
+# ------------------------------------------------------------------- health
+class ShardHealthMonitor:
+    """Per-replica query-latency watchdog for the serving mesh.
+
+    Wraps :class:`repro.runtime.health.StragglerWatchdog` with
+    ``(shard, replica)`` keys and query wall-times as the reported step
+    times: a replica whose median latency exceeds the fleet median by
+    ``threshold``× for ``patience`` consecutive checks comes back from
+    :meth:`flagged` — the mesh then routes around it exactly like a hard
+    failure (health-checked failover). Quiet (dead) replicas drop out of
+    the baseline automatically (the watchdog's staleness horizon)."""
+
+    def __init__(self, threshold: float = 3.0, patience: int = 3,
+                 window: int = 16):
+        self._wd = StragglerWatchdog(
+            threshold=threshold, patience=patience, window=window
+        )
+
+    def observe(self, key: Tuple[int, int], latency: float) -> None:
+        self._wd.report(key, latency)
+
+    def flagged(self) -> List[Tuple[int, int]]:
+        return list(self._wd.check())
+
+
+# --------------------------------------------------------------------- mesh
+class FaultTolerantRetrievalMesh:
+    """Replicated, health-checked, degradation-aware retrieval service.
+
+    The drop-in hardened superset of
+    :class:`~repro.serve.cluster.ShardedRetrievalCluster`::
+
+        mesh = FaultTolerantRetrievalMesh(
+            lambda ctx: mf.build_phi(params, ctx),
+            n_shards=4, n_replicas=2, k=100,
+            retry=RetryPolicy(max_attempts=3, deadline=batcher.max_delay))
+        mesh.publish(mf.export_psi(params))
+        res = mesh.topk(user_ids)          # TopKResult
+        res.coverage, res.dead_ranges      # the degradation contract
+
+    Query semantics: bit-identical to the unreplicated cluster (and the
+    single-device engine) whenever every row range has ≥ 1 live replica —
+    replicas are exact copies running the same program, so a mid-stream
+    replica kill under R ≥ 2 is invisible in the results. When a range has
+    NO live replica the query completes over the survivors with
+    ``coverage < 1.0`` and the dead ranges reported.
+
+    ``publish`` snapshots are versioned double-buffered ReplicaSets (same
+    flip protocol as the cluster); the canary methods implement the staged
+    rollout (see module docstring and ``publish.StagedRollout``).
+    """
+
+    def __init__(
+        self,
+        phi_fn: Optional[Callable[..., jax.Array]] = None,
+        *,
+        n_shards: int = 2,
+        n_replicas: int = 2,
+        k: int = 100,
+        block_items: Optional[int] = None,
+        devices: Optional[Sequence] = None,
+        policy: str = "round_robin",
+        retry: Optional[RetryPolicy] = None,
+        injector: Optional[FaultInjector] = None,
+        monitor: Optional[ShardHealthMonitor] = None,
+        fail_threshold: int = 1,
+        auto_heal: bool = False,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Optional[Callable[[float], None]] = None,
+        psi_table: Optional[jax.Array] = None,
+    ):
+        from repro.serve.publish import VersionedTable
+
+        self.phi_fn = phi_fn
+        self.n_shards = int(n_shards)
+        self.n_replicas = int(n_replicas)
+        self.k = int(k)
+        self.block_items = block_items
+        self.devices = devices
+        self.policy = policy
+        self.retry = retry or RetryPolicy()
+        self.injector = injector
+        self.monitor = monitor or ShardHealthMonitor()
+        self.fail_threshold = int(fail_threshold)
+        self.auto_heal = bool(auto_heal)
+        self.clock = clock
+        self.sleep = sleep if sleep is not None else (lambda dt: None)
+        self._set = VersionedTable()
+        self._canary: Optional[PsiShardSet] = None
+        self.stats = {
+            "queries": 0, "dispatches": 0, "failovers": 0, "retries": 0,
+            "faults": 0, "replicas_died": 0, "replicas_replaced": 0,
+            "degraded_queries": 0, "backoff_slept_s": 0.0,
+            "deadline_gaveups": 0,
+        }
+
+    # ------------------------------------------------------------- publish
+    def publish(self, psi_table: jax.Array) -> int:
+        """Shard, replicate, version, and atomically flip a ψ snapshot
+        live (the unstaged path — see :meth:`begin_canary` for the staged
+        rollout). Returns the new version."""
+        return self._set.publish(
+            lambda version: ReplicaSet(
+                shard_psi(psi_table, self.n_shards, version=version),
+                self.n_replicas, devices=self.devices, policy=self.policy,
+            )
+        )
+
+    @property
+    def replica_set(self) -> ReplicaSet:
+        return self._set.active
+
+    @property
+    def table(self) -> PsiShardSet:
+        return self.replica_set.table
+
+    @property
+    def version(self) -> int:
+        return self._set.version
+
+    @property
+    def n_items(self) -> int:
+        return self.table.n_items
+
+    # -------------------------------------------------------------- health
+    def apply_health_check(self) -> List[Tuple[int, int]]:
+        """Route around latency stragglers: every replica the monitor
+        flags is marked dead (reason ``"slow"``). Returns the casualties.
+        Call from the serving loop's cadence (or rely on per-query hard
+        failures — both paths end in the same routing state)."""
+        reaped = []
+        rs = self._set.active
+        for (s, idx) in self.monitor.flagged():
+            live = {r.idx for r in rs.live(s)}
+            if idx in live:
+                rs.mark_dead(s, idx, reason="slow")
+                self.stats["replicas_died"] += 1
+                reaped.append((s, idx))
+        if reaped and self.auto_heal:
+            self.heal()
+        return reaped
+
+    def heal(self) -> List[Tuple[int, int]]:
+        """Re-place orphaned capacity: every shard below its replication
+        target gets fresh replicas rebuilt from the authoritative table
+        copy on surviving devices. Returns the new (shard, idx) pairs."""
+        rs = self._set.active
+        placed = []
+        for s in range(rs.n_shards):
+            while len(rs.live(s)) < self.n_replicas:
+                rep = rs.replace(s)
+                self.stats["replicas_replaced"] += 1
+                placed.append(rep.key)
+        return placed
+
+    # --------------------------------------------------------------- query
+    def phi(self, *query) -> jax.Array:
+        return jnp.asarray(self.phi_fn(*query), jnp.float32)
+
+    def topk(self, *query, k: Optional[int] = None,
+             exclude_mask: Optional[jax.Array] = None,
+             exclude_ids: Optional[jax.Array] = None,
+             budget: Optional[float] = None) -> TopKResult:
+        return self.topk_phi(
+            self.phi(*query), k=k, exclude_mask=exclude_mask,
+            exclude_ids=exclude_ids, budget=budget,
+        )
+
+    def topk_phi(
+        self,
+        phi_rows: jax.Array,
+        *,
+        k: Optional[int] = None,
+        exclude_mask: Optional[jax.Array] = None,
+        exclude_ids: Optional[jax.Array] = None,
+        budget: Optional[float] = None,
+    ) -> TopKResult:
+        """(B, k) :class:`TopKResult` with the degradation contract.
+
+        ``budget`` (seconds) overrides ``retry.deadline`` as this request's
+        retry allowance — the batcher path sets it so queue wait plus
+        retries stay inside ``max_delay``. The whole request is served
+        from ONE ReplicaSet snapshot (version-consistent)."""
+        rs = self._set.active  # one snapshot end-to-end
+        table = rs.table
+        k = k or self.k
+        phi_rows = jnp.asarray(phi_rows, jnp.float32)
+        b = int(phi_rows.shape[0])
+        block_items = self.block_items
+        if block_items is None:
+            excl_l = 0 if exclude_ids is None else int(exclude_ids.shape[1])
+            block_items = resolve_cluster_block_items(
+                table, b, k, excl_l=excl_l
+            )
+        self.stats["queries"] += 1
+        budget = self.retry.deadline if budget is None else budget
+        parts_s, parts_i, dead = [], [], []
+        for s in range(table.n_shards):
+            out = self._query_shard(
+                rs, s, phi_rows, k, exclude_mask, exclude_ids,
+                block_items, budget,
+            )
+            if out is None:
+                dead.append(s)
+            else:
+                parts_s.append(out[0])
+                parts_i.append(out[1])
+        if dead:
+            self.stats["degraded_queries"] += 1
+        coverage = coverage_fraction(table, dead)
+        ranges = dead_item_ranges(table, dead)
+        if not parts_s:
+            es, ei = empty_topk(b, k)
+            return TopKResult(es, ei, coverage, ranges)
+        if len(parts_s) == 1:
+            return TopKResult(parts_s[0], parts_i[0], coverage, ranges)
+        ms, mi = topk_merge_shards(
+            jnp.stack(colocate_parts(parts_s)),
+            jnp.stack(colocate_parts(parts_i)), k,
+        )
+        return TopKResult(ms, mi, coverage, ranges)
+
+    # ----------------------------------------------------------- internals
+    def _query_shard(self, rs, s, phi_rows, k, exclude_mask, exclude_ids,
+                     block_items, budget):
+        """One shard's dispatch with failover + bounded deadline-aware
+        retries. Returns (scores, ids) or None (shard unavailable for this
+        request — the degradation path)."""
+        spent = 0.0       # latency burned: real + injected + backoff
+        attempt = 0
+        while attempt < self.retry.max_attempts:
+            live = rs.live(s)
+            if not live:
+                return None
+            attempt += 1
+            rep = rs.pick(s)
+            rep.outstanding += 1
+            t0 = self.clock()
+            try:
+                if self.injector is not None:
+                    self.injector.before_dispatch(s, rep.idx)
+                if rep.version != rs.version:
+                    raise StaleReplicaError(
+                        f"replica ({s}, {rep.idx}) serves table v"
+                        f"{rep.version}, live is v{rs.version}"
+                    )
+                ss, ii = shard_topk(
+                    rs.table, s, phi_rows, k, slab=rep.slab,
+                    exclude_mask=exclude_mask, exclude_ids=exclude_ids,
+                    block_items=block_items,
+                )
+                lat = self.clock() - t0
+                self.monitor.observe(rep.key, lat)
+                rep.served += 1
+                rep.failures = 0
+                self.stats["dispatches"] += 1
+                return ss, ii
+            except ReplicaFailure as e:
+                lat = max(self.clock() - t0, e.latency)
+                spent += lat
+                self.stats["dispatches"] += 1
+                self.stats["faults"] += 1
+                rep.failures += 1
+                if isinstance(e, ReplicaTimeout):
+                    self.monitor.observe(rep.key, lat)
+                if rep.failures >= self.fail_threshold:
+                    rs.mark_dead(s, rep.idx, reason=type(e).__name__)
+                    self.stats["replicas_died"] += 1
+                    if self.auto_heal:
+                        self.heal()
+            finally:
+                rep.outstanding -= 1
+            # burned latency (real + injected) already exhausted the
+            # budget: even a free failover dispatch would answer late
+            if budget is not None and spent >= budget:
+                self.stats["deadline_gaveups"] += 1
+                return None
+            # failover beats backoff: another live replica is already warm
+            if any(r.idx != rep.idx for r in rs.live(s)):
+                self.stats["failovers"] += 1
+                continue
+            # same (possibly healed) set again: exponential backoff, but
+            # only if the sleep FITS the remaining deadline budget
+            if attempt >= self.retry.max_attempts:
+                break
+            back = self.retry.backoff(attempt)
+            if budget is not None:
+                remaining = budget - spent
+                if remaining <= 0.0 or back >= remaining:
+                    self.stats["deadline_gaveups"] += 1
+                    return None
+            self.stats["retries"] += 1
+            self.stats["backoff_slept_s"] += back
+            spent += back
+            self.sleep(back)
+        return None
+
+    # ----------------------------------------------------- staged rollout
+    def begin_canary(self, psi_table: jax.Array) -> int:
+        """Stage the next ψ table on ONE canary replica per shard (slot
+        R, off the routing path). Readers keep hitting the live version;
+        nothing observable changes until :meth:`promote_canary`. Returns
+        the staged version number."""
+        if self._canary is not None:
+            raise RuntimeError(
+                "a canary is already staged — promote or roll it back first"
+            )
+        rs = self._set.active
+        staged = shard_psi(
+            psi_table, self.n_shards, version=self.version + 1
+        )
+        self._canary = staged
+        for s in range(staged.n_shards):
+            slab = staged.shards[s]
+            dev = rs._device_for(s, self.n_replicas)
+            if dev is not None:
+                slab = jax.device_put(slab, dev)
+            rep = Replica(
+                shard=s, idx=max(r.idx for r in rs.replicas[s]) + 1,
+                slab=slab, device=dev, version=staged.version, canary=True,
+            )
+            rs.replicas[s].append(rep)
+        return staged.version
+
+    def canary_topk_phi(self, phi_rows, *, k=None,
+                        exclude_ids=None) -> TopKResult:
+        """Query the CANARY replicas only (mirrored traffic). Not routed
+        to users; exists so the rollout can health-check the staged table
+        under real query shapes before anyone sees it."""
+        if self._canary is None:
+            raise RuntimeError("no canary staged")
+        staged = self._canary
+        k = k or self.k
+        phi_rows = jnp.asarray(phi_rows, jnp.float32)
+        block_items = self.block_items
+        if block_items is None:
+            excl_l = 0 if exclude_ids is None else int(exclude_ids.shape[1])
+            block_items = resolve_cluster_block_items(
+                staged, int(phi_rows.shape[0]), k, excl_l=excl_l
+            )
+        parts_s, parts_i = [], []
+        rs = self._set.active
+        for s in range(staged.n_shards):
+            canaries = [r for r in rs.replicas[s] if r.canary]
+            slab = canaries[0].slab if canaries else staged.shards[s]
+            ss, ii = shard_topk(
+                staged, s, phi_rows, k, slab=slab, exclude_ids=exclude_ids,
+                block_items=block_items,
+            )
+            parts_s.append(ss)
+            parts_i.append(ii)
+        if len(parts_s) == 1:
+            return TopKResult(parts_s[0], parts_i[0])
+        ms, mi = topk_merge_shards(
+            jnp.stack(colocate_parts(parts_s)),
+            jnp.stack(colocate_parts(parts_i)), k,
+        )
+        return TopKResult(ms, mi)
+
+    def mirror_check(
+        self,
+        phi_rows: jax.Array,
+        *,
+        k: Optional[int] = None,
+        validate: Optional[Callable[[TopKResult, TopKResult], bool]] = None,
+    ) -> dict:
+        """Health-check the canary under mirrored traffic: run ``phi_rows``
+        against BOTH the live table and the canary replicas and judge the
+        canary's answers. Built-in checks: well-formed shapes, no NaN, no
+        +/-inf scores on admissible slots, ids in catalogue range.
+        ``validate(live_result, canary_result)`` adds a caller policy
+        (e.g. rank-overlap or quality thresholds). Returns a report dict;
+        ``report["healthy"]`` is the promote/rollback verdict."""
+        if self._canary is None:
+            raise RuntimeError("no canary staged")
+        k = k or self.k
+        live_res = self.topk_phi(phi_rows, k=k)
+        t0 = self.clock()
+        canary_res = self.canary_topk_phi(phi_rows, k=k)
+        latency = self.clock() - t0
+        ids = np.asarray(canary_res.ids)
+        scores = np.asarray(canary_res.scores)
+        n_items = self._canary.n_items
+        admissible = ids >= 0
+        checks = {
+            "shape_ok": ids.shape == np.asarray(live_res.ids).shape,
+            "ids_in_range": bool(((ids >= -1) & (ids < n_items)).all()),
+            "scores_finite": bool(
+                np.isfinite(scores[admissible]).all()
+                if admissible.any() else True
+            ),
+            "not_all_empty": bool(admissible.any()),
+        }
+        if validate is not None:
+            checks["validate_ok"] = bool(validate(live_res, canary_res))
+        report = {
+            "healthy": all(checks.values()),
+            "checks": checks,
+            "staged_version": self._canary.version,
+            "live_version": self.version,
+            "mirror_rows": int(np.asarray(phi_rows).shape[0]),
+            "canary_latency_s": latency,
+        }
+        return report
+
+    def promote_canary(self) -> int:
+        """Flip the staged table live everywhere: the canary slabs seed
+        replica 0 and the remaining R−1 replicas are placed fresh — one
+        atomic ReplicaSet swap, in-flight queries finish on the old
+        snapshot (the drainless rollout)."""
+        if self._canary is None:
+            raise RuntimeError("no canary staged")
+        staged = self._canary
+
+        def build(version: int) -> ReplicaSet:
+            table = PsiShardSet(
+                shards=staged.shards, n_items=staged.n_items,
+                rows_per=staged.rows_per, version=version,
+            )
+            return ReplicaSet(
+                table, self.n_replicas, devices=self.devices,
+                policy=self.policy,
+            )
+
+        version = self._set.publish(build)
+        self._canary = None
+        return version
+
+    def rollback_canary(self) -> None:
+        """Drop the staged table: remove the canary replicas, keep serving
+        the live version untouched — the no-downtime bad-table path."""
+        if self._canary is None:
+            raise RuntimeError("no canary staged")
+        rs = self._set.active
+        for s in range(rs.n_shards):
+            rs.replicas[s] = [r for r in rs.replicas[s] if not r.canary]
+        self._canary = None

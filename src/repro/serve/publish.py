@@ -20,10 +20,18 @@ queries meanwhile. The protocol here is the classic double-buffer flip:
 :class:`PsiPublisher` adapts this to the models' ``fit(callback=...)`` hook:
 at each epoch boundary it snapshots ``export_psi(params)`` into the cluster,
 so online serving tracks training with epoch granularity ("live ψ refresh").
+
+:class:`StagedRollout` is the OPERATED form of publish for the
+fault-tolerant mesh (``serve/mesh.py``): instead of flipping a new ψ table
+straight to every replica, it stages the table on one canary replica per
+shard, health-checks it under mirrored traffic (live vs canary answers on
+the same φ rows), and only then promotes — a bad table (NaNs, truncated
+export, wrong geometry) rolls back with zero downtime and zero user-served
+queries. See ``serve/README.md`` for the runbook.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 
 class VersionedTable:
@@ -99,3 +107,76 @@ class PsiPublisher:
         self.versions.append((epoch, version))
         if self.log is not None:
             self.log(f"epoch {epoch}: published psi table version {version}")
+
+
+class StagedRollout:
+    """Canary-gated ψ publish for the fault-tolerant mesh: stage → mirror →
+    promote (or roll back), never a straight flip.
+
+    ::
+
+        rollout = StagedRollout(mesh, mirror_phi=phi_probe_rows)
+        promoted, report = rollout.publish(new_psi_table)
+        if not promoted:
+            alert(report)          # bad table never reached a user
+
+    Protocol (the drain-and-restart shape from the ops exemplars, applied
+    to in-memory tables):
+
+      1. ``mesh.begin_canary(table)`` — the staged table lands on ONE extra
+         replica per shard, off the routing path; live traffic untouched.
+      2. ``mesh.mirror_check(mirror_phi)`` — the probe φ rows run against
+         BOTH the live table and the canary; built-in structural checks
+         (shapes, finite scores, ids in range) plus the optional
+         ``validate(live_result, canary_result)`` policy hook (e.g. demand
+         rank overlap, or a quality floor from a held-out eval).
+      3. healthy → ``mesh.promote_canary()``: one atomic ReplicaSet flip,
+         canary slab becomes replica 0, the rest re-replicate; in-flight
+         queries finish on the old snapshot (no drain needed — snapshots
+         are immutable). Unhealthy → ``mesh.rollback_canary()``: the
+         staged table is dropped, version unchanged, nothing served it.
+
+    ``history`` records every attempt as ``(staged_version, promoted,
+    report)`` — the rollout/rollback audit trail.
+    """
+
+    def __init__(
+        self,
+        mesh,
+        *,
+        mirror_phi: Optional[Sequence] = None,
+        validate: Optional[Callable] = None,
+        k: Optional[int] = None,
+        log: Optional[Callable[[str], None]] = None,
+    ):
+        self.mesh = mesh
+        self.mirror_phi = mirror_phi
+        self.validate = validate
+        self.k = k
+        self.log = log
+        self.history: list = []  # [(staged_version, promoted, report), ...]
+
+    def publish(self, psi_table, *, mirror_phi=None) -> tuple:
+        """Stage ``psi_table``, mirror-check it, and promote iff healthy.
+        Returns ``(promoted: bool, report: dict)``."""
+        phi = mirror_phi if mirror_phi is not None else self.mirror_phi
+        if phi is None:
+            raise ValueError(
+                "StagedRollout needs mirror traffic: pass mirror_phi "
+                "(probe φ rows) at construction or per publish"
+            )
+        staged = self.mesh.begin_canary(psi_table)
+        report = self.mesh.mirror_check(phi, k=self.k, validate=self.validate)
+        promoted = bool(report["healthy"])
+        if promoted:
+            version = self.mesh.promote_canary()
+            report = {**report, "promoted_version": version}
+            if self.log is not None:
+                self.log(f"staged v{staged} healthy: promoted as v{version}")
+        else:
+            self.mesh.rollback_canary()
+            if self.log is not None:
+                self.log(f"staged v{staged} UNHEALTHY: rolled back "
+                         f"({report['checks']})")
+        self.history.append((staged, promoted, report))
+        return promoted, report

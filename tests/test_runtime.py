@@ -2,6 +2,8 @@
 multi-device elasticity is exercised in tests/test_distributed.py via a
 subprocess with forced host devices)."""
 
+import pytest
+
 from repro.runtime.elastic import ElasticMeshManager, largest_mesh_shape
 from repro.runtime.health import StragglerWatchdog
 
@@ -9,9 +11,30 @@ from repro.runtime.health import StragglerWatchdog
 def test_largest_mesh_shape():
     assert largest_mesh_shape(256, 16) == (16, 16)
     assert largest_mesh_shape(240, 16) == (15, 16)   # lost one host of 16
-    assert largest_mesh_shape(250, 16) == (125, 2)   # degrade TP to keep chips
+    assert largest_mesh_shape(250, 16) == (25, 10)   # largest divisor <= 16
     assert largest_mesh_shape(7, 4) == (7, 1)
     assert largest_mesh_shape(512, 16) == (32, 16)
+
+
+def test_largest_mesh_shape_non_power_of_two_divisors():
+    """The halving-chain bug: model //= 2 skipped every non-power-of-two
+    divisor. The shrink must land on the LARGEST divisor of n_devices that
+    fits the requested model axis."""
+    assert largest_mesh_shape(8, 6) == (2, 4)     # was (8, 1)
+    assert largest_mesh_shape(12, 6) == (2, 6)
+    assert largest_mesh_shape(18, 12) == (2, 9)   # 9 is odd: unreachable by /2
+    assert largest_mesh_shape(15, 6) == (3, 5)
+    assert largest_mesh_shape(100, 48) == (4, 25)
+
+
+def test_largest_mesh_shape_edge_cases():
+    assert largest_mesh_shape(1, 16) == (1, 1)
+    assert largest_mesh_shape(5, 1) == (5, 1)
+    assert largest_mesh_shape(13, 13) == (1, 13)   # prime: whole axis fits
+    assert largest_mesh_shape(13, 12) == (13, 1)   # prime, capped: no divisor
+    assert largest_mesh_shape(6, 0) == (6, 1)      # degenerate axis request
+    with pytest.raises(ValueError):
+        largest_mesh_shape(0, 4)
 
 
 def test_manager_builds_mesh_single_device():
@@ -38,3 +61,61 @@ def test_watchdog_ignores_transient_blip():
             wd.report(host, 3.0 if slow else 1.0)
         flagged = wd.check()
     assert flagged == []
+
+
+def test_watchdog_true_median_even_window():
+    """Even-length windows must use the true median (mean of the middle
+    pair), not the upper-middle element — the old bias inflated the fleet
+    baseline and hid real stragglers behind it."""
+    wd = StragglerWatchdog(threshold=1.4, patience=1, window=4)
+    # host 0: [1, 1, 1, 3] -> true median 1.0 (upper-middle would say 1.0)
+    # host 1: [1, 1, 3, 3] -> true median 2.0 (upper-middle would say 3.0)
+    # host 2: [1, 1, 1, 1] -> 1.0
+    for t in (1.0, 1.0, 1.0, 3.0):
+        wd.report(0, t)
+    for t in (1.0, 1.0, 3.0, 3.0):
+        wd.report(1, t)
+    for t in (1.0, 1.0, 1.0, 1.0):
+        wd.report(2, t)
+    # fleet median of {1.0, 2.0, 1.0} = 1.0; host 1 at 2.0 > 1.4x -> flagged
+    assert wd.check() == [1]
+    assert wd._median([1.0, 3.0]) == 2.0
+    assert wd._median([1.0, 2.0, 4.0]) == 2.0
+
+
+def test_watchdog_quiet_host_stops_voting():
+    """A host whose history went quiet must not keep getting flagged (or
+    keep dragging the fleet baseline) on stale entries forever."""
+    wd = StragglerWatchdog(threshold=1.5, patience=2, window=4)
+    for _ in range(6):
+        for host in range(4):
+            wd.report(host, 5.0 if host == 3 else 1.0)
+        flagged = wd.check()
+    assert flagged == [3]
+    # host 3 goes silent (crashed / evicted); the others keep reporting
+    for _ in range(wd.window * 4 + 1):
+        for host in range(3):
+            wd.report(host, 1.0)
+    assert 3 not in wd.check()      # stale history no longer votes
+    assert wd.strikes[3] == 0       # and its strikes reset
+    # when it comes back slow it must re-earn the flag from fresh data
+    for _ in range(2):
+        for host in range(3):
+            wd.report(host, 1.0)
+        wd.report(3, 9.0)
+    for _ in range(2):
+        for host in range(3):
+            wd.report(host, 1.0)
+        wd.report(3, 9.0)
+        flagged = wd.check()
+    assert flagged == [3]
+
+
+def test_watchdog_accepts_tuple_keys():
+    """The serving mesh reports per-replica latencies under (shard,
+    replica) tuple keys — the watchdog must be key-agnostic."""
+    wd = StragglerWatchdog(threshold=1.5, patience=1, window=8)
+    for _ in range(4):
+        for key in ((0, 0), (0, 1), (1, 0), (1, 1)):
+            wd.report(key, 4.0 if key == (1, 0) else 1.0)
+    assert wd.check() == [(1, 0)]

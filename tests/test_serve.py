@@ -186,6 +186,42 @@ def test_batcher_cache_folds_exclude_list_into_key():
     np.testing.assert_array_equal(got3[1], np.asarray(ri)[0])
 
 
+def test_batcher_drain_flushes_queue_and_closes():
+    """Shutdown must flush (not strand) queued requests: drain() completes
+    everything, hands back unclaimed results, and closes admission."""
+    import pytest
+
+    _, _, clock, batcher, phi_all, psi = _serving_stack(seed=6)
+    t1 = batcher.submit(phi_all[2])
+    t2 = batcher.submit(phi_all[8])
+    claimed = batcher.result(t1)
+    assert claimed is None  # still queued (under max_batch, under deadline)
+    leftovers = batcher.drain()
+    assert set(leftovers) == {t1, t2}  # nothing stranded
+    rs, ri = topk_score_ref(phi_all[8:9], psi, 10)
+    np.testing.assert_array_equal(leftovers[t2].ids, np.asarray(ri)[0])
+    assert batcher.closed and batcher.n_queued == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        batcher.submit(phi_all[0])
+    assert batcher.drain() == {}  # idempotent
+
+
+def test_batcher_evicts_superseded_version_cache_entries():
+    """A publish must EVICT entries keyed on the old table version (they
+    can never hit again), not leave them squatting in the LRU."""
+    _, cluster, clock, batcher, phi_all, _ = _serving_stack(seed=7)
+    for u in (1, 2, 3):
+        batcher.submit(phi_all[u], key=("user", u))
+    batcher.flush()
+    assert len(batcher._cache) == 3
+    cluster.publish(jnp.zeros((77, 8)))  # version bump supersedes all 3
+    batcher.submit(phi_all[4], key=("user", 4))  # first post-publish admission
+    assert batcher.stats["cache_evicted_stale"] == 3
+    assert all(k[1] == cluster.version for k in batcher._cache)
+    batcher.flush()
+    assert len(batcher._cache) == 1  # only the new-version entry
+
+
 def test_batcher_pads_batch_and_discards_pad_rows():
     """3 requests pad to pad_to=8 kernel rows; pad rows never produce
     tickets or pollute results."""
