@@ -1,0 +1,240 @@
+"""Continual-learning bench + hard gates: fold-in parity, schedule
+equivalence, delta-publish semantics, and the subspace-scheduling
+updates-to-quality curve.
+
+Everything here is a GATE, not just a timing: each section hard-asserts
+its acceptance criterion and the results are merged into the tracked
+repo-root ``BENCH_cd_sweep.json`` under a ``continual`` key (the file's
+other sections — the fused cd_sweep analytics — are preserved).
+
+  * ``foldin_parity`` — every zoo model's closed-form fold-in row (user AND
+    item side) matches the float64 normal-equations oracle; and a fold-in
+    ψ row delta-published into a live fault-tolerant mesh is retrievable
+    at the bumped version WITHOUT a full-table republish.
+  * ``schedule_equivalence`` — a full SweepSchedule is bit-identical to
+    the unscheduled epoch (same compiled program, not just same math).
+  * ``delta_publish_ok`` — patch/append semantics, version-bump scope,
+    append-hole refusal.
+  * ``updates_to_quality`` — rotating single-block subspace steps reach a
+    fixed MF loss target in STRICTLY fewer column updates than full
+    epochs (the iALS++-style scheduling payoff: finer-grained stopping).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import foldin
+from repro.core.models import mf
+from repro.core.models.zoo import ZOO, zoo_model
+from repro.core.sweeps import FULL_SCHEDULE, SweepSchedule
+from repro.serve.mesh import FaultTolerantRetrievalMesh
+from repro.serve.publish import apply_delta, dense_table
+from repro.sparse.interactions import build_interactions
+
+_TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def _assert_close(name, got, ref, rtol, atol):
+    err = np.max(np.abs(np.asarray(got) - np.asarray(ref)), initial=0.0)
+    bound = atol + rtol * np.max(np.abs(np.asarray(ref)), initial=0.0)
+    assert err <= bound, f"{name}: fold-in parity FAILED (err={err:.3g})"
+    return float(err)
+
+
+def foldin_parity_gate() -> dict:
+    """CD fold-in vs exact oracle on all five models, then the serving
+    round-trip: fold an item, delta-publish it into a mesh, retrieve it."""
+    out = {}
+    rng = np.random.default_rng(11)
+    for name in ZOO:
+        model, params, _ = zoo_model(name, np.random.default_rng(3))
+        hp = model._foldin_hp()
+        psi_t = np.asarray(model.export_psi(params))
+        phi_t = np.asarray(model.phi_table(params))
+        ids_u = rng.choice(psi_t.shape[0], size=6, replace=False)
+        ids_i = rng.choice(phi_t.shape[0], size=6, replace=False)
+        u_free, u_init = model._user_free_init()
+        i_free, i_init = model._item_free_init()
+        row_u = model.fold_in_user(params, ids_u, n_sweeps=512, tol=1e-9)
+        row_i = model.fold_in_item(params, ids_i, n_sweeps=512, tol=1e-9)
+        err_u = _assert_close(
+            f"{name}.fold_in_user", row_u,
+            foldin.fold_in_exact(psi_t, ids_u, alpha0=hp["alpha0"],
+                                 l2=hp["l2"], free=u_free, init=u_init),
+            **_TOL)
+        err_i = _assert_close(
+            f"{name}.fold_in_item", row_i,
+            foldin.fold_in_exact(phi_t, ids_i, alpha0=hp["alpha0"],
+                                 l2=hp["l2"], free=i_free, init=i_init),
+            **_TOL)
+        out[name] = {"user_err": err_u, "item_err": err_i}
+
+    # serving round-trip on MF: fold-in item → publish_delta → retrieve
+    model, params, _ = zoo_model("mf", np.random.default_rng(3))
+    psi = model.export_psi(params)
+    mesh = FaultTolerantRetrievalMesh(
+        lambda ctx: model.build_phi(params, ctx),
+        n_shards=2, n_replicas=2, k=5, psi_table=psi,
+    )
+    v0, n0 = mesh.version, mesh.n_items
+    row = model.fold_in_item(params, rng.choice(20, size=4, replace=False),
+                             alpha=np.full(4, 8.0, np.float32))
+    v1 = mesh.publish_delta(row, n0)
+    assert v1 == v0 + 1 and mesh.n_items == n0 + 1, "delta version/shape"
+    res = mesh.topk_phi(jnp.asarray(row, jnp.float32)[None, :] * 100.0)
+    assert int(res.ids[0, 0]) == n0, (
+        "fold-in-published item not retrievable through the mesh"
+    )
+    out["mesh_roundtrip"] = {
+        "version": v1, "item_id": n0, "coverage": float(res.coverage),
+    }
+    out["ok"] = True
+    return out
+
+
+def schedule_equivalence_gate() -> dict:
+    """FULL_SCHEDULE must be BIT-identical to schedule=None on an MF epoch."""
+    rng = np.random.default_rng(0)
+    n_ctx, n_items, k, nnz = 24, 18, 8, 120
+    cells = rng.choice(n_ctx * n_items, size=nnz, replace=False)
+    data = build_interactions(
+        cells // n_items, cells % n_items, rng.integers(1, 4, nnz),
+        1.3 + rng.random(nnz), n_ctx, n_items, alpha0=0.3,
+    )
+    hp = mf.MFHyperParams(k=k, alpha0=0.3, l2=0.05)
+    params = mf.init(jax.random.PRNGKey(0), n_ctx, n_items, k)
+    e = mf.residuals(params, data)
+    p_ref, e_ref = mf.epoch(params, data, e, hp)
+    p_sch, e_sch = mf.epoch(params, data, e, hp, FULL_SCHEDULE, 0)
+    bit_equal = (bool((p_ref.w == p_sch.w).all())
+                 and bool((p_ref.h == p_sch.h).all())
+                 and bool((e_ref == e_sch).all()))
+    assert bit_equal, "full schedule is not bit-identical to unscheduled"
+    return {"ok": True, "bit_equal": bit_equal}
+
+
+def delta_publish_gate() -> dict:
+    """apply_delta patch/append semantics + hole refusal (pure layer)."""
+    psi = np.random.default_rng(5).normal(size=(13, 4)).astype(np.float32)
+    rows = np.arange(8, dtype=np.float32).reshape(2, 4)
+    out = apply_delta(psi, rows, [2, 13])
+    assert out.shape == (14, 4)
+    assert np.array_equal(out[2], rows[0]) and np.array_equal(out[13], rows[1])
+    hole_refused = False
+    try:
+        apply_delta(psi, rows[:1], 15)
+    except ValueError:
+        hole_refused = True
+    assert hole_refused, "append hole must raise"
+    # dense_table round-trips through the sharded representation
+    from repro.serve.cluster import shard_psi
+    ss = shard_psi(jnp.asarray(out), 3, version=1)
+    assert np.array_equal(dense_table(ss), out), "dense_table round-trip"
+    return {"ok": True, "hole_refused": hole_refused}
+
+
+def updates_to_quality(quick: bool = True) -> dict:
+    """Column-updates to reach a fixed loss target: full epochs vs rotating
+    single-block subspace steps (iALS++-style scheduling).
+
+    One FULL epoch spends 2k column updates (k per side); one scheduled
+    step spends 2·k_b. The full path can only STOP at epoch granularity,
+    so whenever the target falls mid-epoch the schedule's finer-grained
+    trajectory crosses it with updates to spare. The gate requires the
+    scheduled path to be STRICTLY cheaper."""
+    rng = np.random.default_rng(2)
+    n_ctx, n_items, k, k_b = 64, 48, 16, 4
+    nnz = 600
+    cells = rng.choice(n_ctx * n_items, size=nnz, replace=False)
+    data = build_interactions(
+        cells // n_items, cells % n_items, rng.integers(1, 4, nnz),
+        1.3 + rng.random(nnz), n_ctx, n_items, alpha0=0.3,
+    )
+    hp = mf.MFHyperParams(k=k, alpha0=0.3, l2=0.05)
+    params0 = mf.init(jax.random.PRNGKey(0), n_ctx, n_items, k)
+
+    # full-epoch trajectory: objective after each epoch, 2k updates apiece
+    n_epochs = 4 if quick else 8
+    full_curve = []
+    p, e = params0, mf.residuals(params0, data)
+    for ep in range(n_epochs):
+        p, e = mf.epoch(p, data, e, hp)
+        full_curve.append((2 * k * (ep + 1), float(mf.objective(p, data, hp))))
+
+    # target: the loss the full path reaches on its SECOND epoch boundary
+    target = full_curve[1][1]
+    full_updates = full_curve[1][0]
+
+    # scheduled trajectory: one rotating k_b-block per step on both sides
+    sched = SweepSchedule(kind="rotating", block=k_b, blocks_per_sweep=1)
+    per_step = 2 * k_b
+    sched_curve, sched_updates = [], None
+    p, e = params0, mf.residuals(params0, data)
+    max_steps = (full_updates // per_step) * 2
+    for step in range(max_steps):
+        p, e = mf.epoch(p, data, e, hp, sched, step)
+        obj = float(mf.objective(p, data, hp))
+        sched_curve.append((per_step * (step + 1), obj))
+        if obj <= target:
+            sched_updates = per_step * (step + 1)
+            break
+    assert sched_updates is not None, (
+        f"scheduled sweeps never reached the target loss {target:.6f}"
+    )
+    assert sched_updates < full_updates, (
+        f"subspace scheduling must be strictly cheaper: scheduled "
+        f"{sched_updates} vs full {full_updates} column updates"
+    )
+    return {
+        "shape": f"C={n_ctx}, I={n_items}, k={k}, k_b={k_b}, nnz={nnz}",
+        "target_loss": target,
+        "full_updates_to_target": full_updates,
+        "scheduled_updates_to_target": sched_updates,
+        "speedup_updates": full_updates / sched_updates,
+        "full_curve": full_curve,
+        "scheduled_curve": sched_curve,
+        "ok": True,
+    }
+
+
+def continual_bench(quick: bool = True,
+                    out_path: Optional[str] = None) -> dict:
+    """Run all gates; merge results under ``continual`` in the tracked
+    repo-root ``BENCH_cd_sweep.json`` (preserving its other sections)."""
+    if out_path is None:
+        repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out_path = os.path.join(
+            repo_root,
+            "BENCH_cd_sweep.json" if quick else "BENCH_cd_sweep_full.json",
+        )
+    res = {
+        "foldin_parity": foldin_parity_gate(),
+        "schedule_equivalence": schedule_equivalence_gate(),
+        "delta_publish_ok": delta_publish_gate(),
+        "updates_to_quality": updates_to_quality(quick=quick),
+    }
+    res["gates"] = {
+        g: bool(res[g].get("ok"))
+        for g in ("foldin_parity", "schedule_equivalence", "delta_publish_ok")
+    }
+    res["gates"]["updates_to_quality"] = bool(res["updates_to_quality"]["ok"])
+    doc = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            doc = json.load(f)
+    doc["continual"] = res
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    out = continual_bench()
+    print(json.dumps(out["gates"], indent=1))
+    print(json.dumps(out["updates_to_quality"], indent=1))

@@ -105,6 +105,16 @@ def roofline(quick):
     }
 
 
+def continual(quick):
+    """Continual-learning gates: fold-in parity (all zoo models + the mesh
+    round-trip), full-schedule bit equivalence, delta-publish semantics,
+    and the subspace-scheduling updates-to-quality curve — each section
+    hard-asserts; results merge into BENCH_cd_sweep.json."""
+    from benchmarks.continual_bench import continual_bench
+
+    return continual_bench(quick=quick)
+
+
 FIGURES = {
     "fig7_coldstart": fig7,
     "fig6a_offline": fig6a,
@@ -113,11 +123,12 @@ FIGURES = {
     "kernels": kernels,
     "cd_sweep": cd_sweep,
     "serve": serve,
+    "continual": continual,
     "roofline": roofline,
 }
 
 # dataset-free, seconds-fast subset — the smoke gate for CI / pre-commit
-QUICK_SET = ("kernels", "cd_sweep", "serve", "roofline")
+QUICK_SET = ("kernels", "cd_sweep", "serve", "continual", "roofline")
 
 
 def main() -> None:

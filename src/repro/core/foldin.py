@@ -1,0 +1,159 @@
+"""Closed-form fold-in: single-row iCD solves for rows that arrive after
+training (Rendle 2021, *Item Recommendation from Implicit Feedback*, §serving).
+
+Every zoo model scores through the k-separable product ŷ = ⟨φ(ctx), ψ(item)⟩,
+so a NEW user (or item) is one unknown D-vector θ against the FROZEN other
+side's export table T — exactly the per-row subproblem the training sweeps
+solve, restricted to one row:
+
+    minimize_θ   Σ_j α_j (θ·t_j − y_j)²  +  α₀ θᵀGθ  +  λ‖θ‖²,   G = TᵀT
+
+:func:`fold_in_row` runs the same per-coordinate Newton updates as
+``mf._side_sweep`` (same residual cache, same Gram contraction, same
+``newton_delta`` denominator clamp — λ=0 with an empty history stays finite)
+iterated to convergence; :func:`fold_in_exact` solves the normal equations
+directly and is the oracle the parity tests/bench gates compare against.
+
+Feature/extended models reuse this in their export coordinates: FM's
+``φ_ext``/``ψ_ext`` carry structurally-fixed columns (the constant-1 slots),
+so the solver takes a ``free`` mask — fixed coordinates keep their ``init``
+value and only ride along in the residuals and the Gram coupling.
+
+The per-model entry points (which side is frozen, which coordinates are
+free) live on the :class:`repro.core.models.api.Model` adapters as
+``fold_in_user`` / ``fold_in_item``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+
+class FoldInResult(NamedTuple):
+    row: np.ndarray       # (D,) solved embedding row, float32
+    n_sweeps: int         # CD sweeps actually run
+    delta_max: float      # last sweep's max |Δθ| (convergence certificate)
+
+
+def _prepare(table, ids, y, alpha, free, init):
+    table = np.asarray(table, np.float32)
+    n, d = table.shape
+    ids = np.asarray(ids, np.int64).reshape(-1)
+    if ids.size and (ids.min() < 0 or ids.max() >= n):
+        raise ValueError(f"fold-in ids out of range [0, {n}) : {ids!r}")
+    y = np.ones(ids.shape, np.float32) if y is None else np.asarray(y, np.float32)
+    alpha = (
+        np.ones(ids.shape, np.float32) if alpha is None
+        else np.asarray(alpha, np.float32)
+    )
+    if y.shape != ids.shape or alpha.shape != ids.shape:
+        raise ValueError("y/alpha must match ids shape")
+    free = np.ones(d, bool) if free is None else np.asarray(free, bool)
+    if free.shape != (d,):
+        raise ValueError(f"free mask must be ({d},), got {free.shape}")
+    theta = np.zeros(d, np.float32) if init is None else np.asarray(
+        init, np.float32
+    ).copy()
+    if theta.shape != (d,):
+        raise ValueError(f"init must be ({d},), got {theta.shape}")
+    return table, ids, y, alpha, free, theta
+
+
+def fold_in_row(
+    table,
+    ids,
+    y=None,
+    alpha=None,
+    *,
+    alpha0: float,
+    l2: float,
+    eta: float = 1.0,
+    free=None,
+    init=None,
+    gram: Optional[np.ndarray] = None,
+    n_sweeps: int = 64,
+    tol: float = 1e-6,
+) -> FoldInResult:
+    """Solve one embedding row by coordinate descent against a frozen table.
+
+    ``table`` (n, D)
+        the frozen other side in export coordinates (``export_psi`` output
+        for a user fold-in; the full φ table for an item fold-in).
+    ``ids`` (m,)
+        table rows the new entity interacted with (may be empty: the pure
+        implicit-prior solve, which with l2=0 relies on the Newton clamp).
+    ``y`` / ``alpha`` (m,)
+        targets and confidences; default 1 (plain implicit feedback). Feed
+        Lemma-1 rescaled values to match a specific training objective.
+    ``free`` (D,) bool
+        solvable coordinates; fixed ones keep their ``init`` value (FM's
+        constant-1 extended columns).
+    ``gram``
+        optional precomputed TᵀT — pass it when folding many rows against
+        the same frozen table.
+
+    Iterates full free-coordinate sweeps (η-damped Newton per coordinate,
+    rank-1 residual patch — the ``mf._side_sweep`` math with n_rows=1) until
+    ``max|Δθ| < tol·(1 + max|θ|)`` or ``n_sweeps`` is hit.
+    """
+    table, ids, y, alpha, free, theta = _prepare(table, ids, y, alpha, free, init)
+    g = (table.T @ table).astype(np.float32) if gram is None else np.asarray(
+        gram, np.float32
+    )
+    t_rows = table[ids]                      # (m, D)
+    e = t_rows @ theta - y                   # residual cache ŷ − ȳ
+    free_dims = np.flatnonzero(free)
+    sweeps_run, delta_max = 0, 0.0
+    for s in range(max(1, n_sweeps)):
+        delta_max = 0.0
+        for f in free_dims:
+            t_f = t_rows[:, f]
+            lp = float(np.dot(alpha * e, t_f))          # L'/2
+            lpp = float(np.dot(alpha * t_f, t_f))       # L''/2
+            rp = float(theta @ g[:, f])                 # R'/2  (Lemma 3)
+            rpp = float(g[f, f])                        # R''/2
+            num = lp + alpha0 * rp + l2 * theta[f]
+            den = lpp + alpha0 * rpp + l2
+            delta = -eta * num / max(den, 1e-12)        # newton_delta clamp
+            theta[f] += np.float32(delta)
+            e += np.float32(delta) * t_f
+            delta_max = max(delta_max, abs(delta))
+        sweeps_run = s + 1
+        if delta_max < tol * (1.0 + float(np.max(np.abs(theta), initial=0.0))):
+            break
+    return FoldInResult(theta, sweeps_run, float(delta_max))
+
+
+def fold_in_exact(
+    table,
+    ids,
+    y=None,
+    alpha=None,
+    *,
+    alpha0: float,
+    l2: float,
+    free=None,
+    init=None,
+) -> np.ndarray:
+    """Normal-equations oracle for :func:`fold_in_row` (float64 direct solve).
+
+    Solves ``(A + α₀G + λI)[free,free] θ_free = b_free − M[free,fixed]·θ_fixed``
+    with ``A = Σ α t tᵀ`` and ``b = Σ α y t``; the unique minimizer the CD
+    iteration converges to. Uses ``lstsq`` so the λ=0 empty-history corner
+    (singular system) returns the minimum-norm solution instead of raising.
+    """
+    table, ids, y, alpha, free, theta = _prepare(table, ids, y, alpha, free, init)
+    t64 = table.astype(np.float64)
+    g = t64.T @ t64
+    t_rows = t64[ids]
+    a64 = alpha.astype(np.float64)
+    m = t_rows.T @ (a64[:, None] * t_rows) + alpha0 * g + l2 * np.eye(t64.shape[1])
+    b = t_rows.T @ (a64 * y.astype(np.float64))
+    fr = np.flatnonzero(free)
+    fx = np.flatnonzero(~free)
+    rhs = b[fr] - m[np.ix_(fr, fx)] @ theta[fx].astype(np.float64)
+    sol, *_ = np.linalg.lstsq(m[np.ix_(fr, fr)], rhs, rcond=None)
+    out = theta.astype(np.float64)
+    out[fr] = sol
+    return out.astype(np.float32)

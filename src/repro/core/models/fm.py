@@ -216,6 +216,8 @@ def _side_sweep(
     e: jax.Array,
     spec_col: int,
     hp: FMHyperParams,
+    schedule=None,
+    sweep_index: int = 0,
 ):
     n_rows = design.n_rows
     layers = _field_layers(design, hp)
@@ -252,7 +254,10 @@ def _side_sweep(
             )
         return sweeps.put_col(table, f, table_col), self_ext, e
 
-    table, self_ext, e = sweeps.sweep_columns(hp.k, dim_body, (table, self_ext, e))
+    table, self_ext, e = sweeps.sweep_columns(
+        hp.k, dim_body, (table, self_ext, e),
+        schedule=schedule, sweep_index=sweep_index,
+    )
 
     # ---- linear weights --------------------------------------------------
     if hp.use_linear and lin is not None:
@@ -436,7 +441,7 @@ def _side_sweep_padded(
     return table, lin, bias, self_ext, e_pad
 
 
-@partial(jax.jit, static_argnames=("hp",))
+@partial(jax.jit, static_argnames=("hp", "schedule", "sweep_index"))
 def epoch(
     params: FMParams,
     x: Design,
@@ -444,6 +449,8 @@ def epoch(
     data: Interactions,
     e: jax.Array,
     hp: FMHyperParams,
+    schedule=None,
+    sweep_index: int = 0,
 ) -> Tuple[FMParams, jax.Array]:
     b, w_lin, w, h_lin, h = params
     pe = phi_ext(params, x, hp)
@@ -453,7 +460,7 @@ def epoch(
     w, w_lin, b, pe, e = _side_sweep(
         w, w_lin if hp.use_linear else None, b if hp.use_bias else None,
         pe, se, j_i, x, data.ctx, data.item, data.alpha, e,
-        spec_col=hp.k, hp=hp,
+        spec_col=hp.k, hp=hp, schedule=schedule, sweep_index=sweep_index,
     )
 
     j_c = gram(pe, implementation=hp.implementation)
@@ -462,7 +469,7 @@ def epoch(
     h, h_lin, _, se, e_t = _side_sweep(
         h, h_lin if hp.use_linear else None, None,
         se, pe, j_c, z, data.t_item, data.t_ctx, alpha_t, e_t,
-        spec_col=hp.k + 1, hp=hp,
+        spec_col=hp.k + 1, hp=hp, schedule=schedule, sweep_index=sweep_index,
     )
     e = sweeps.to_ctx_major(e_t, data.t_perm)
     return FMParams(b, w_lin, w, h_lin, h), e
@@ -532,12 +539,13 @@ def objective(params: FMParams, x: Design, z: Design, data: Interactions,
     ) + hp.l2 * sq + hp.l2_lin * sq_lin
 
 
-def fit(params, x, z, data, hp, n_epochs, callback=None, refresh_residuals=True):
+def fit(params, x, z, data, hp, n_epochs, callback=None, refresh_residuals=True,
+        schedule=None):
     e = residuals(params, x, z, data, hp)
     for ep in range(n_epochs):
         if refresh_residuals and ep > 0:
             e = residuals(params, x, z, data, hp)  # bound multi-hot drift
-        params, e = epoch(params, x, z, data, e, hp)
+        params, e = epoch(params, x, z, data, e, hp, schedule, ep)
         if callback is not None:
             callback(ep, params)
     return params

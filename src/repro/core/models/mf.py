@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -100,8 +100,13 @@ def _side_sweep(
     e: jax.Array,           # (nnz,) residual cache, this side's sort order
     n_rows: int,
     hp: MFHyperParams,
+    schedule: Optional[sweeps.SweepSchedule] = None,
+    sweep_index: int = 0,
 ) -> Tuple[jax.Array, jax.Array]:
-    """One full dimension sweep over one side; returns (new_side, new_e)."""
+    """One dimension sweep over one side; returns (new_side, new_e).
+
+    With a ``schedule`` the sweep covers only the scheduled subspace blocks
+    for this ``sweep_index`` (iALS++-style); ``None`` is a full pass."""
 
     def body(f, carry):
         side_m, e = carry
@@ -122,24 +127,39 @@ def _side_sweep(
         e = e + jnp.take(delta, rows_nnz) * o_col      # rank-1 residual patch
         return sweeps.put_col(side_m, f, s_col + delta), e
 
-    return sweeps.sweep_columns(side.shape[1], body, (side, e), unroll=hp.unroll)
+    return sweeps.sweep_columns(
+        side.shape[1], body, (side, e), unroll=hp.unroll,
+        schedule=schedule, sweep_index=sweep_index,
+    )
 
 
-@partial(jax.jit, static_argnames=("hp",))
+@partial(jax.jit, static_argnames=("hp", "schedule", "sweep_index"))
 def epoch(
-    params: MFParams, data: Interactions, e: jax.Array, hp: MFHyperParams
+    params: MFParams,
+    data: Interactions,
+    e: jax.Array,
+    hp: MFHyperParams,
+    schedule: Optional[sweeps.SweepSchedule] = None,
+    sweep_index: int = 0,
 ) -> Tuple[MFParams, jax.Array]:
-    """One iCD epoch: full W sweep (all k columns), then full H sweep.
+    """One iCD epoch: W sweep then H sweep over the scheduled columns.
 
     ``e`` is the context-major residual cache (ŷ−ȳ per observation); callers
-    obtain the initial one from :func:`residuals`.
+    obtain the initial one from :func:`residuals`. ``schedule=None`` is the
+    classic full pass over all k columns on both sides; a
+    :class:`~repro.core.sweeps.SweepSchedule` restricts/reorders the swept
+    subspace blocks (``schedule``/``sweep_index`` are static — rotating or
+    randomized schedules trace one program per distinct block plan).
     """
     w, h = params
 
     # --- context side: J_I from the fixed item factors -------------------
     j_i = gram(h, implementation=hp.implementation)
     h_cols = lambda f: jnp.take(sweeps.take_col(h, f), data.item)
-    w, e = _side_sweep(w, j_i, h_cols, data.ctx, data.alpha, e, data.n_ctx, hp)
+    w, e = _side_sweep(
+        w, j_i, h_cols, data.ctx, data.alpha, e, data.n_ctx, hp,
+        schedule, sweep_index,
+    )
 
     # --- item side: J_C from the (just-updated) context factors ----------
     j_c = gram(w, implementation=hp.implementation)
@@ -147,7 +167,8 @@ def epoch(
     alpha_t = sweeps.to_item_major(data.alpha, data.t_perm)
     w_cols = lambda f: jnp.take(sweeps.take_col(w, f), data.t_ctx)
     h, e_t = _side_sweep(
-        h, j_c, w_cols, data.t_item, alpha_t, e_t, data.n_items, hp
+        h, j_c, w_cols, data.t_item, alpha_t, e_t, data.n_items, hp,
+        schedule, sweep_index,
     )
     e = sweeps.to_ctx_major(e_t, data.t_perm)
     return MFParams(w, h), e
@@ -171,11 +192,16 @@ def fit(
     hp: MFHyperParams,
     n_epochs: int,
     callback=None,
+    schedule: Optional[sweeps.SweepSchedule] = None,
 ) -> MFParams:
-    """Run ``n_epochs`` iCD epochs (host loop; each epoch is one jit call)."""
+    """Run ``n_epochs`` iCD epochs (host loop; each epoch is one jit call).
+
+    With a ``schedule``, epoch ``ep`` sweeps the schedule's blocks for
+    ``sweep_index=ep`` — e.g. ``SweepSchedule('rotating',
+    blocks_per_sweep=1)`` turns each "epoch" into one k_b subspace step."""
     e = residuals(params, data)
     for ep in range(n_epochs):
-        params, e = epoch(params, data, e, hp)
+        params, e = epoch(params, data, e, hp, schedule, ep)
         if callback is not None:
             callback(ep, params)
     return params

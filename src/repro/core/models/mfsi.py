@@ -198,6 +198,8 @@ def _side_sweep(
     alpha: jax.Array,
     e: jax.Array,
     hp: MFSIHyperParams,
+    schedule=None,
+    sweep_index: int = 0,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     n_rows = design.n_rows
     layers = _field_layers(design, hp)
@@ -227,7 +229,10 @@ def _side_sweep(
         phi_m = sweeps.put_col(phi_m, f, phi_col)
         return table, phi_m, e
 
-    table, phi_m, e = sweeps.sweep_columns(hp.k, dim_body, (table, phi_m, e))
+    table, phi_m, e = sweeps.sweep_columns(
+        hp.k, dim_body, (table, phi_m, e),
+        schedule=schedule, sweep_index=sweep_index,
+    )
     return table, phi_m, e
 
 
@@ -307,7 +312,7 @@ def _side_sweep_padded(
     )
 
 
-@partial(jax.jit, static_argnames=("hp",))
+@partial(jax.jit, static_argnames=("hp", "schedule", "sweep_index"))
 def epoch(
     params: MFSIParams,
     x: Design,
@@ -315,22 +320,27 @@ def epoch(
     data: Interactions,
     e: jax.Array,
     hp: MFSIHyperParams,
+    schedule=None,
+    sweep_index: int = 0,
 ) -> Tuple[MFSIParams, jax.Array]:
-    """One iCD epoch: full context-feature sweep, then item-feature sweep."""
+    """One iCD epoch: context-feature sweep, then item-feature sweep, over
+    the scheduled columns (``schedule=None`` = full pass)."""
     w, h = params
     phi_m = design_matmul(x, w)
     psi_m = design_matmul(z, h)
 
     j_i = gram(psi_m, implementation=hp.implementation)
     w, phi_m, e = _side_sweep(
-        w, phi_m, psi_m, j_i, x, data.ctx, data.item, data.alpha, e, hp
+        w, phi_m, psi_m, j_i, x, data.ctx, data.item, data.alpha, e, hp,
+        schedule, sweep_index,
     )
 
     j_c = gram(phi_m, implementation=hp.implementation)
     e_t = sweeps.to_item_major(e, data.t_perm)
     alpha_t = sweeps.to_item_major(data.alpha, data.t_perm)
     h, psi_m, e_t = _side_sweep(
-        h, psi_m, phi_m, j_c, z, data.t_item, data.t_ctx, alpha_t, e_t, hp
+        h, psi_m, phi_m, j_c, z, data.t_item, data.t_ctx, alpha_t, e_t, hp,
+        schedule, sweep_index,
     )
     e = sweeps.to_ctx_major(e_t, data.t_perm)
     return MFSIParams(w, h), e
@@ -389,10 +399,10 @@ def objective(params: MFSIParams, x: Design, z: Design, data: Interactions,
     return implicit_objective(phi(params, x), psi(params, z), e, data, hp.alpha0, hp.l2, sq)
 
 
-def fit(params, x, z, data, hp, n_epochs, callback=None):
+def fit(params, x, z, data, hp, n_epochs, callback=None, schedule=None):
     e = residuals(params, x, z, data)
     for ep in range(n_epochs):
-        params, e = epoch(params, x, z, data, e, hp)
+        params, e = epoch(params, x, z, data, e, hp, schedule, ep)
         if callback is not None:
             callback(ep, params)
     return params

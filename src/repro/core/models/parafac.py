@@ -167,6 +167,8 @@ def _context_mode_sweep(
     e: jax.Array,
     n_side: int,
     hp: PARAFACHyperParams,
+    schedule=None,
+    sweep_index: int = 0,
 ) -> Tuple[jax.Array, jax.Array]:
     """Sweep one context mode (U or V). Sparse-context K via segment sums;
     dense-context K via the partner Gram (eq. 39)."""
@@ -200,10 +202,13 @@ def _context_mode_sweep(
         e = e + jnp.take(delta, grp_nnz) * other_nnz
         return sweeps.put_col(side_m, f, s_col + delta), e
 
-    return sweeps.sweep_columns(hp.k, body, (side, e))
+    return sweeps.sweep_columns(
+        hp.k, body, (side, e), schedule=schedule, sweep_index=sweep_index
+    )
 
 
-def _item_sweep(params_w, j_c, phi_cols_nnz, data, e_t, alpha_t, hp):
+def _item_sweep(params_w, j_c, phi_cols_nnz, data, e_t, alpha_t, hp,
+                schedule=None, sweep_index=0):
     """MF item sweep (paper: identical to §5.1)."""
 
     def body(f, carry):
@@ -221,7 +226,9 @@ def _item_sweep(params_w, j_c, phi_cols_nnz, data, e_t, alpha_t, hp):
         e_t = e_t + jnp.take(delta, data.t_item) * o_col
         return sweeps.put_col(w_m, f, w_col + delta), e_t
 
-    return sweeps.sweep_columns(hp.k, body, (params_w, e_t))
+    return sweeps.sweep_columns(
+        hp.k, body, (params_w, e_t), schedule=schedule, sweep_index=sweep_index
+    )
 
 
 def _context_mode_sweep_padded(
@@ -341,23 +348,28 @@ def _item_sweep_padded(
     )
 
 
-@partial(jax.jit, static_argnames=("hp",))
+@partial(jax.jit, static_argnames=("hp", "schedule", "sweep_index"))
 def epoch(
     params: PARAFACParams,
     tc: TensorContext,
     data: Interactions,
     e: jax.Array,
     hp: PARAFACHyperParams,
+    schedule=None,
+    sweep_index: int = 0,
 ) -> Tuple[PARAFACParams, jax.Array]:
-    """One iCD epoch: U sweep → V sweep → item (W) sweep."""
+    """One iCD epoch: U sweep → V sweep → item (W) sweep (scheduled
+    columns; ``schedule=None`` = full pass)."""
     u, v, w = params
     j_i = gram(w, implementation=hp.implementation)
 
     u, e = _context_mode_sweep(
-        u, v, tc.c1, tc.c2, j_i, data, w, e, u.shape[0], hp
+        u, v, tc.c1, tc.c2, j_i, data, w, e, u.shape[0], hp,
+        schedule, sweep_index,
     )
     v, e = _context_mode_sweep(
-        v, u, tc.c2, tc.c1, j_i, data, w, e, v.shape[0], hp
+        v, u, tc.c2, tc.c1, j_i, data, w, e, v.shape[0], hp,
+        schedule, sweep_index,
     )
 
     if hp.dense_context:
@@ -370,7 +382,9 @@ def epoch(
         jnp.take(sweeps.take_col(u, f), tc.c1) * jnp.take(sweeps.take_col(v, f), tc.c2),
         data.t_ctx,
     )
-    w, e_t = _item_sweep(w, j_c, phi_cols, data, e_t, alpha_t, hp)
+    w, e_t = _item_sweep(
+        w, j_c, phi_cols, data, e_t, alpha_t, hp, schedule, sweep_index
+    )
     e = sweeps.to_ctx_major(e_t, data.t_perm)
     return PARAFACParams(u, v, w), e
 
@@ -432,10 +446,10 @@ def objective(params: PARAFACParams, tc: TensorContext, data: Interactions,
     return explicit_loss(e, data.alpha) + hp.alpha0 * reg + hp.l2 * sq
 
 
-def fit(params, tc, data, hp, n_epochs, callback=None):
+def fit(params, tc, data, hp, n_epochs, callback=None, schedule=None):
     e = residuals(params, tc, data)
     for ep in range(n_epochs):
-        params, e = epoch(params, tc, data, e, hp)
+        params, e = epoch(params, tc, data, e, hp, schedule, ep)
         if callback is not None:
             callback(ep, params)
     return params

@@ -143,6 +143,7 @@ def _mode_sweep(
     group_of_pair,   # c1 or c2 per pair
     n_side, k_side,
     phi_m, j_i, data, w_items, e, hp,
+    schedule=None, sweep_index=0,
 ):
     pair_of_nnz = data.ctx
     grp_nnz = jnp.take(group_of_pair, pair_of_nnz)
@@ -169,7 +170,10 @@ def _mode_sweep(
         e = e + jnp.take(delta, grp_nnz) * s
         return sweeps.put_col(side_m, fs, s_col + delta), phi_m, e
 
-    return sweeps.sweep_columns(k_side, body, (side, phi_m, e))
+    return sweeps.sweep_columns(
+        k_side, body, (side, phi_m, e),
+        schedule=schedule, sweep_index=sweep_index,
+    )
 
 
 def _mode_sweep_padded(
@@ -270,15 +274,20 @@ def core_sweep(params, phi_m, j_i, tc, data, e, hp):
     return b, phi_m, e
 
 
-@partial(jax.jit, static_argnames=("hp",))
+@partial(jax.jit, static_argnames=("hp", "schedule", "sweep_index"))
 def epoch(
     params: TuckerParams,
     tc: TensorContext,
     data: Interactions,
     e: jax.Array,
     hp: TuckerHyperParams,
+    schedule=None,
+    sweep_index: int = 0,
 ) -> Tuple[TuckerParams, jax.Array]:
-    """One iCD epoch: U sweep → V sweep → core sweep → item (W) sweep."""
+    """One iCD epoch: U sweep → V sweep → core sweep → item (W) sweep.
+
+    A ``schedule`` restricts the FACTOR-mode sweeps (per-mode k1/k2/k3
+    column plans); the scalar core sweep always runs in full."""
     u, v, w, b = params
     j_i = gram(w, implementation=hp.implementation)
     phi_m = phi(params, tc)
@@ -286,10 +295,12 @@ def epoch(
     u, phi_m, e = _mode_sweep(
         u, lambda f1: jax.lax.dynamic_slice_in_dim(b, f1, 1, axis=0)[0],
         tc.c2, v, tc.c1, u.shape[0], hp.k1, phi_m, j_i, data, w, e, hp,
+        schedule, sweep_index,
     )
     v, phi_m, e = _mode_sweep(
         v, lambda f2: jax.lax.dynamic_slice_in_dim(b, f2, 1, axis=1)[:, 0],
         tc.c1, u, tc.c2, v.shape[0], hp.k2, phi_m, j_i, data, w, e, hp,
+        schedule, sweep_index,
     )
     b, phi_m, e = core_sweep(TuckerParams(u, v, w, b), phi_m, j_i, tc, data, e, hp)
 
@@ -297,7 +308,9 @@ def epoch(
     e_t = sweeps.to_item_major(e, data.t_perm)
     alpha_t = sweeps.to_item_major(data.alpha, data.t_perm)
     phi_cols = lambda f: jnp.take(sweeps.take_col(phi_m, f), data.t_ctx)
-    w, e_t = _item_sweep(w, j_c, phi_cols, data, e_t, alpha_t, hp)
+    w, e_t = _item_sweep(
+        w, j_c, phi_cols, data, e_t, alpha_t, hp, schedule, sweep_index
+    )
     e = sweeps.to_ctx_major(e_t, data.t_perm)
     return TuckerParams(u, v, w, b), e
 
@@ -367,10 +380,10 @@ def objective(params: TuckerParams, tc: TensorContext, data: Interactions,
     )
 
 
-def fit(params, tc, data, hp, n_epochs, callback=None):
+def fit(params, tc, data, hp, n_epochs, callback=None, schedule=None):
     e = residuals(params, tc, data)
     for ep in range(n_epochs):
-        params, e = epoch(params, tc, data, e, hp)
+        params, e = epoch(params, tc, data, e, hp, schedule, ep)
         if callback is not None:
             callback(ep, params)
     return params

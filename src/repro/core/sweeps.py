@@ -19,10 +19,12 @@ VMEM-resident across the columns of a block.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class NewtonParts(NamedTuple):
@@ -46,6 +48,92 @@ def newton_delta(
     return -eta * num / jnp.maximum(den, 1e-12)
 
 
+@dataclasses.dataclass(frozen=True)
+class SweepSchedule:
+    """Subspace schedule for :func:`sweep_columns` (iALS++-style).
+
+    A fused ``k_b``-block update is already a subspace step, so a "sweep" no
+    longer has to be one full pass over all ``n_dims`` columns: a schedule
+    names WHICH blocks run this sweep, in WHAT order, and HOW OFTEN.
+
+    ``kind``
+      * ``'full'``      — every block, ascending ``f0`` order. With default
+        ``block``/``repeats`` this reproduces the unscheduled sweep exactly
+        (bit-for-bit; see ``tests/test_schedule.py``).
+      * ``'rotating'``  — every block, order rotated by ``sweep_index`` so
+        successive sweeps start from a different subspace.
+      * ``'randomized'``— every block, order drawn from a deterministic
+        permutation seeded by ``(seed, sweep_index)``.
+
+    ``block``            columns per scheduled block (the subspace size
+                         ``k_b``); 0 = inherit the caller's ``block`` arg.
+    ``blocks_per_sweep`` truncate the ordered block list to this many blocks
+                         per sweep (0 = all): the partial-pass mode that
+                         makes updates-to-quality scheduling possible —
+                         ``rotating`` + ``blocks_per_sweep=1`` visits one
+                         ``k_b`` subspace per sweep, cycling through all.
+    ``repeats``          per-block repeat counts: an int applied to every
+                         block, or a tuple indexed by the block's ordinal
+                         ``f0 // block`` (cycled when shorter).
+    ``seed``             base seed for ``'randomized'``.
+
+    Frozen + hashable so it can ride as a jit static argument; all schedule
+    resolution happens on the host at trace time (static ``(f0, size)``).
+    """
+
+    kind: str = "full"
+    block: int = 0
+    blocks_per_sweep: int = 0
+    repeats: Union[int, Tuple[int, ...]] = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("full", "rotating", "randomized"):
+            raise ValueError(
+                "SweepSchedule.kind must be 'full' | 'rotating' | "
+                f"'randomized', got {self.kind!r}"
+            )
+        reps = self.repeats if isinstance(self.repeats, tuple) else (self.repeats,)
+        if not reps or any(int(r) < 1 for r in reps):
+            raise ValueError(f"repeats must be >= 1, got {self.repeats!r}")
+
+    def _repeat(self, ordinal: int) -> int:
+        if isinstance(self.repeats, tuple):
+            return int(self.repeats[ordinal % len(self.repeats)])
+        return int(self.repeats)
+
+    def blocks(
+        self, n_dims: int, sweep_index: int = 0, block: int = 0
+    ) -> Tuple[Tuple[int, int], ...]:
+        """Resolve to a static ``((f0, size), ...)`` sequence for one sweep."""
+        b = self.block if self.block >= 1 else (block if block >= 1 else n_dims)
+        b = min(b, n_dims)
+        base = [(f0, min(b, n_dims - f0)) for f0 in range(0, n_dims, b)]
+        if self.kind == "rotating" and base:
+            r = sweep_index % len(base)
+            order = base[r:] + base[:r]
+        elif self.kind == "randomized":
+            rng = np.random.default_rng((self.seed, sweep_index))
+            order = [base[i] for i in rng.permutation(len(base))]
+        else:
+            order = base
+        if self.blocks_per_sweep >= 1:
+            order = order[: self.blocks_per_sweep]
+        out = []
+        for f0, size in order:
+            out.extend([(f0, size)] * self._repeat(f0 // b))
+        return tuple(out)
+
+    def n_column_updates(
+        self, n_dims: int, sweep_index: int = 0, block: int = 0
+    ) -> int:
+        """Column-updates this sweep performs (the updates-to-quality unit)."""
+        return sum(size for _, size in self.blocks(n_dims, sweep_index, block))
+
+
+FULL_SCHEDULE = SweepSchedule()
+
+
 def sweep_columns(
     n_dims: int,
     body: Callable,
@@ -54,6 +142,8 @@ def sweep_columns(
     unroll: bool = False,
     block: int = 1,
     block_body: Optional[Callable] = None,
+    schedule: Optional[SweepSchedule] = None,
+    sweep_index: int = 0,
 ):
     """Single entry point for the f*-sweep of Algorithms 2/3.
 
@@ -89,7 +179,34 @@ def sweep_columns(
 
     ``n_dims`` and ``block`` are static, so the fused loop is a host loop of
     ⌈n_dims/block⌉ dispatches with static slab sizes.
+
+    ``schedule`` (a :class:`SweepSchedule`) generalizes the sweep from "one
+    full ascending pass" to an arbitrary static sequence of ``(f0, size)``
+    subspace blocks for this ``sweep_index``: the fused ``block_body`` runs
+    one dispatch per scheduled block, and the per-column ``body`` runs a
+    host loop over the scheduled columns (static indices). ``schedule=None``
+    is the unscheduled fast path, bit-identical to the pre-schedule code.
     """
+    if schedule is not None:
+        plan = schedule.blocks(n_dims, sweep_index, block)
+        # a plan that is one plain in-order full pass IS the unscheduled
+        # sweep — fall through to the canonical paths below so a full
+        # schedule stays bit-identical to schedule=None (same compiled
+        # program, not just the same math)
+        trivial = [f for f0, size in plan for f in range(f0, f0 + size)]
+        if trivial == list(range(n_dims)) and (
+            block_body is None or plan == SweepSchedule(block=block).blocks(n_dims)
+        ):
+            schedule = None
+    if schedule is not None:
+        if block_body is not None and not unroll:
+            for f0, size in plan:
+                carry = block_body(f0, size, carry)
+            return carry
+        for f0, size in plan:
+            for f in range(f0, f0 + size):
+                carry = body(f, carry)
+        return carry
     if block_body is not None and block >= 1 and not unroll:
         f0 = 0
         while f0 < n_dims:

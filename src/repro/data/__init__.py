@@ -2,4 +2,4 @@ from repro.data.synthetic import (  # noqa: F401
     SyntheticImplicitDataset,
     make_implicit_dataset,
 )
-from repro.data.loader import lm_token_batches, sharded_batches  # noqa: F401
+from repro.data.loader import interaction_stream, sharded_batches  # noqa: F401

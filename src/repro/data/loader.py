@@ -21,25 +21,30 @@ def _host_slice(global_batch: int) -> slice:
     return slice(lo, lo + per_host)
 
 
-def lm_token_batches(
-    vocab: int, global_batch: int, seq_len: int, seed: int = 0
+def interaction_stream(
+    ds, *, batch_events: int = 1024, start: int = 0
 ) -> Iterator[Dict[str, np.ndarray]]:
-    """Synthetic LM batches with a learnable bigram structure (so loss
-    actually decreases in the e2e example)."""
-    rng = np.random.default_rng(seed)
-    sl = _host_slice(global_batch)
-    # fixed random bigram table → next-token structure
-    trans = rng.integers(0, vocab, size=(vocab, 4))
-    while True:
-        b = sl.stop - sl.start
-        toks = np.empty((b, seq_len + 1), np.int32)
-        toks[:, 0] = rng.integers(0, vocab, b)
-        for t in range(seq_len):
-            choice = rng.integers(0, 4, b)
-            nxt = trans[toks[:, t], choice]
-            noise = rng.random(b) < 0.1
-            toks[:, t + 1] = np.where(noise, rng.integers(0, vocab, b), nxt)
-        yield {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+    """Time-ordered replay of a
+    :class:`~repro.data.synthetic.SyntheticImplicitDataset`: yields the
+    ``(user, item, t)`` event log in arrival order, ``batch_events`` at a
+    time — the traffic source for the continual-learning loop (fold-in +
+    delta ψ publish; see ``examples/continual_learning.py``).
+
+    Unlike the epoch loaders this iterator is FINITE (a log replay, not a
+    sampler) and the final partial batch is yielded. Each host takes its
+    contiguous slice of every batch; in a single-process container that
+    degenerates to the full batch.
+    """
+    events = np.asarray(ds.events)
+    for lo in range(int(start), len(events), int(batch_events)):
+        chunk = events[lo : lo + batch_events]
+        sl = _host_slice(len(chunk))
+        part = chunk[sl] if jax.process_count() > 1 else chunk
+        yield {
+            "ctx": part[:, 0].astype(np.int32),
+            "item": part[:, 1].astype(np.int32),
+            "t": part[:, 2].astype(np.int64),
+        }
 
 
 def sharded_batches(

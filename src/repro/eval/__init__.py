@@ -1,2 +1,7 @@
 """Offline evaluation harnesses (paper §6 protocols at serving scale)."""
-from repro.eval.ranking import ranking_eval  # noqa: F401
+from repro.eval.ranking import (  # noqa: F401
+    fit_eval_callback,
+    foldin_ranking_eval,
+    model_eval_callback,
+    ranking_eval,
+)

@@ -145,3 +145,57 @@ def fit_eval_callback(
 
     callback.history = history
     return callback
+
+
+def model_eval_callback(model, query, true_items, **kw):
+    """:func:`fit_eval_callback` through the unified
+    :class:`repro.core.models.api.Model` protocol — no per-model export
+    plumbing::
+
+        cb = model_eval_callback(model, eval_query, true_items, k=100)
+        model.fit(params, n_epochs=5, callback=cb)
+    """
+    return fit_eval_callback(
+        lambda p: (model.build_phi(p, query), model.export_psi(p)),
+        true_items, **kw,
+    )
+
+
+def foldin_ranking_eval(
+    model,
+    params,
+    histories: Sequence,          # per-user item-id arrays (observed history)
+    true_items,                   # (n_eval,) held-out item per user
+    *,
+    k: int = 100,
+    alpha=None,                   # per-event confidence, broadcast per user
+    exclude_history: bool = True,
+    batch_rows: int = 256,
+    cluster=None,
+    **foldin_kw,
+) -> Dict[str, float]:
+    """Cold-start ranking eval: every user is UNSEEN — their φ row comes
+    from the closed-form fold-in (``model.fold_in_user`` against the frozen
+    ψ table), then ranks the full catalogue exactly like the warm path.
+
+    This measures what the serving tier actually does for a user with no
+    trained embedding (``RetrievalEngine.fold_in_phi``): solve the row
+    from the observed ``histories[u]``, then retrieve. With
+    ``exclude_history`` the folded-in items are masked at ranking time
+    (the leave-one-out protocol — the true item must NOT be in the
+    history).
+    """
+    phi_rows = np.stack([
+        model.fold_in_user(
+            params, np.asarray(h, np.int64),
+            None if alpha is None else np.full(len(h), alpha, np.float32),
+            **foldin_kw,
+        )
+        for h in histories
+    ])
+    psi = None if cluster is not None else model.export_psi(params)
+    return ranking_eval(
+        jnp.asarray(phi_rows), psi, jnp.asarray(np.asarray(true_items)),
+        k=k, exclude=histories if exclude_history else None,
+        batch_rows=batch_rows, cluster=cluster,
+    )

@@ -1,13 +1,21 @@
-"""Pure-jnp oracle for the fused score+top-K kernel: dense Φ·Ψᵀ, exclusion
-mask to −inf, ``lax.top_k``, and the −1-id policy on inadmissible slots.
+"""Pure-jnp oracles for the fused score+top-K kernel.
 
-This is deliberately the "memory-naive" path — it materializes the full
-``(B, n_items)`` score matrix the kernel exists to avoid — so it doubles
-as the dense baseline in ``benchmarks/serve_bench``. For the same reason
-``exclude_ids`` (the kernel's web-scale per-row id-list form) is expanded
-to the dense (B, n_items) mask here.
+Two reference paths with the kernel's exact semantics (tie-stable
+ascending-id order, (−inf, −1) on inadmissible slots):
+
+- :func:`topk_score_ref` — deliberately "memory-naive": it materializes
+  the full ``(B, n_items)`` score matrix the kernel exists to avoid, so it
+  doubles as the dense baseline in ``benchmarks/serve_bench``. For the
+  same reason ``exclude_ids`` (the kernel's web-scale per-row id-list
+  form) is expanded to the dense (B, n_items) mask here.
+- :func:`retrieval_topk` — the chunked running-reduce oracle over an
+  arbitrary ``score_fn`` (moved here from ``serve/recsys_serve.py``; the
+  serving tier re-exports it): never materializes all scores, so it also
+  serves as the huge-catalogue baseline.
 """
 from __future__ import annotations
+
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,3 +48,40 @@ def topk_score_ref(phi, psi, k, exclude_mask=None, *, exclude_ids=None):
     top_s, top_i = jax.lax.top_k(scores, k)
     top_i = jnp.where(jnp.isneginf(top_s), -1, top_i).astype(jnp.int32)
     return top_s, top_i
+
+
+def retrieval_topk(
+    score_fn: Callable[[jax.Array], jax.Array],  # cand_ids → scores
+    n_candidates: int,
+    k: int = 100,
+    chunk: int = 262144,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k over ``n_candidates`` scored in chunks with a running reduce.
+
+    ``score_fn(ids)`` may return ``(chunk,)`` (single query) or
+    ``(B, chunk)`` (batched); the reduce carries matching ``(..., k)``
+    state. Slots with no real candidate (``n_candidates < k``) stay at
+    id −1 / score −inf — no placeholder item id ever leaks into the
+    result. Ties resolve toward the smaller candidate id (``lax.top_k``
+    positional stability + ascending chunk order), the same policy as the
+    fused kernel and :func:`topk_score_ref`.
+    """
+    best_scores = best_ids = None
+    for lo in range(0, n_candidates, chunk):
+        ids = jnp.arange(lo, min(lo + chunk, n_candidates), dtype=jnp.int32)
+        scores = score_fn(ids)
+        if best_scores is None:  # first chunk fixes the (optional) batch dim
+            lead = scores.shape[:-1]
+            best_scores = jnp.full(lead + (k,), -jnp.inf, scores.dtype)
+            best_ids = jnp.full(lead + (k,), -1, jnp.int32)
+        merged_s = jnp.concatenate([best_scores, scores], axis=-1)
+        merged_i = jnp.concatenate(
+            [best_ids, jnp.broadcast_to(ids, scores.shape).astype(jnp.int32)],
+            axis=-1,
+        )
+        best_scores, idx = jax.lax.top_k(merged_s, k)
+        best_ids = jnp.take_along_axis(merged_i, idx, axis=-1)
+    if best_scores is None:  # n_candidates == 0
+        best_scores = jnp.full((k,), -jnp.inf)
+        best_ids = jnp.full((k,), -1, jnp.int32)
+    return best_scores, best_ids

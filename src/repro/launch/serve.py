@@ -50,6 +50,10 @@ def main():
     ap.add_argument("--kill", action="append", default=[], metavar="S:R",
                     help="inject a sticky fault on replica R of shard S "
                          "(repeatable), e.g. --kill 0:0 --kill 0:1")
+    ap.add_argument("--continual", action="store_true",
+                    help="after the trace: fold in an unseen user at "
+                         "request time and delta-publish a fold-in item "
+                         "(the continual-learning serving path)")
     args = ap.parse_args()
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not args.arch.startswith("icd"):
@@ -138,6 +142,29 @@ def main():
     print(f"[serve] completion p50={_percentile(lat, 50):.4f}s "
           f"p99={_percentile(lat, 99):.4f}s after start; "
           f"top id for user {int(users[0])}: {top_id}")
+
+    if args.continual:
+        from repro.core.models.api import Dataset, build_model
+
+        hp = mf.MFHyperParams(k=cfg.k, alpha0=cfg.alpha0, l2=cfg.l2)
+        model = build_model("mf", hp=hp, dataset=Dataset())
+        # unseen user: solve their φ row against the frozen ψ snapshot at
+        # request time (closed-form fold-in) — no training state touched
+        history = rng.integers(0, cfg.n_items, size=8)
+        phi_new = np.asarray(model.fold_in_user(params, history))[None, :]
+        res = mesh.topk_phi(jax.numpy.asarray(phi_new))
+        print(f"[serve] fold-in user (|history|={history.size}): "
+              f"top id {int(res.ids[0, 0])} at v{mesh.version}")
+        # new item: fold its ψ row from early interactions, then go live
+        # through an incremental delta publish — no full-table republish
+        item_ctx = rng.integers(0, cfg.n_ctx, size=6)
+        psi_row = model.fold_in_item(params, item_ctx)
+        new_id = mesh.n_items
+        v = mesh.publish_delta(psi_row, new_id)
+        res = mesh.topk_phi(jax.numpy.asarray(psi_row, jax.numpy.float32)[None, :])
+        print(f"[serve] fold-in item {new_id} delta-published as v{v}; "
+              f"self-query top id {int(res.ids[0, 0])} "
+              f"({mesh.n_items} items live)")
 
 
 if __name__ == "__main__":

@@ -26,5 +26,8 @@ from repro.serve.publish import (  # noqa: F401
     PsiPublisher,
     StagedRollout,
     VersionedTable,
+    apply_delta,
+    dense_table,
 )
-from repro.serve.recsys_serve import bulk_score, retrieval_topk  # noqa: F401
+from repro.kernels.topk_score.ref import retrieval_topk  # noqa: F401
+from repro.serve.recsys_serve import bulk_score, mf_retrieval_score_fn  # noqa: F401

@@ -460,6 +460,18 @@ class ShardedRetrievalCluster:
             )
         )
 
+    def publish_delta(self, rows, ids) -> int:
+        """Incremental publish: patch/append ψ ``rows`` at global item
+        ``ids`` (fold-in output) onto the active table and flip the result
+        live under a normal version bump — no model re-export, in-flight
+        readers keep their snapshot, and the version key invalidates the
+        request cache exactly like a full publish. Appends (ids ≥ n_items)
+        grow the catalogue. Returns the new version."""
+        from repro.serve.publish import apply_delta, dense_table
+
+        base = dense_table(self.table)
+        return self.publish(jnp.asarray(apply_delta(base, rows, ids)))
+
     @property
     def table(self) -> PsiShardSet:
         """The active (latest published) shard set."""

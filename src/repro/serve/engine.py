@@ -5,7 +5,10 @@ The φ/ψ export contract
 
 Every k-separable model (paper §4–5) scores an item as
 ``ŷ = ⟨φ(context), ψ(item)⟩``, so ONE retrieval path serves the whole zoo.
-Each model module exports two functions the engine is built from:
+The uniform surface is the :class:`repro.core.models.api.Model` protocol
+(``RetrievalEngine.from_model(model, params)`` is the one-call construction
+path, and also enables request-time user fold-in); underneath, each model
+module exports two functions the engine is built from:
 
   ``export_psi(params, ...) -> (n_items, D)``  the catalogue ψ table
   ``build_phi(params, <query>) -> (B, D)``     φ rows for a query batch
@@ -71,7 +74,7 @@ Scaling past one device (serve/cluster.py, serve/batcher.py, serve/publish.py)
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -138,6 +141,54 @@ class RetrievalEngine:
         self.phi_fn = phi_fn
         self.k = k
         self.block_items = block_items
+        self.model = None   # set by from_model: enables fold_in_phi
+        self._params = None
+
+    @classmethod
+    def from_model(
+        cls,
+        model,
+        params,
+        *,
+        k: int = 100,
+        block_items: Optional[int] = None,
+    ) -> "RetrievalEngine":
+        """Build an engine from a :class:`repro.core.models.api.Model`
+        adapter — the unified construction path (no per-model signature
+        branches)::
+
+            engine = RetrievalEngine.from_model(model, params, k=100)
+            res = engine.topk(query)                  # model's query space
+            phi = engine.fold_in_phi(unseen_history)  # request-time fold-in
+
+        The engine keeps (model, params) so the serving tier can fold in
+        an UNSEEN user at request time (:meth:`fold_in_phi`): the user's
+        history rows are solved to a φ row against the frozen ψ table
+        (closed-form single-row CD, ``core/foldin.py``) without touching
+        training state.
+        """
+        eng = cls(
+            model.export_psi(params),
+            lambda *query: model.build_phi(
+                params, query[0] if len(query) == 1 else query
+            ),
+            k=k, block_items=block_items,
+        )
+        eng.model = model
+        eng._params = params
+        return eng
+
+    def fold_in_phi(self, item_ids, y=None, alpha=None, **kw) -> jax.Array:
+        """(1, D) φ row for an unseen user folded in from their item
+        history — closed-form, against the frozen ψ snapshot. Only
+        available on engines built with :meth:`from_model`."""
+        if self.model is None:
+            raise RuntimeError(
+                "fold_in_phi needs a Model adapter — build the engine with "
+                "RetrievalEngine.from_model(model, params)"
+            )
+        row = self.model.fold_in_user(self._params, item_ids, y, alpha, **kw)
+        return jnp.asarray(row, jnp.float32)[None, :]
 
     @property
     def n_items(self) -> int:

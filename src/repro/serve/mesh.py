@@ -421,6 +421,8 @@ class FaultTolerantRetrievalMesh:
             "degraded_queries": 0, "backoff_slept_s": 0.0,
             "deadline_gaveups": 0,
         }
+        if psi_table is not None:
+            self.publish(psi_table)
 
     # ------------------------------------------------------------- publish
     def publish(self, psi_table: jax.Array) -> int:
@@ -433,6 +435,24 @@ class FaultTolerantRetrievalMesh:
                 self.n_replicas, devices=self.devices, policy=self.policy,
             )
         )
+
+    def publish_delta(self, rows, ids) -> int:
+        """Incremental publish for fold-in rows: patch/append ψ ``rows`` at
+        global item ``ids`` onto the authoritative table copy and flip the
+        rebuilt ReplicaSet live under a normal version bump. Every replica
+        is rebuilt at the new version, so the stale-refusal guard
+        (:class:`StaleReplicaError` before dispatch) keeps holding; a
+        staged canary (if any) must be resolved first — its row geometry
+        may no longer match after an append. Returns the new version."""
+        from repro.serve.publish import apply_delta, dense_table
+
+        if self._canary is not None:
+            raise RuntimeError(
+                "cannot delta-publish with a canary staged — promote or "
+                "roll it back first"
+            )
+        base = dense_table(self.table)
+        return self.publish(jnp.asarray(apply_delta(base, rows, ids)))
 
     @property
     def replica_set(self) -> ReplicaSet:

@@ -21,6 +21,19 @@ queries meanwhile. The protocol here is the classic double-buffer flip:
 at each epoch boundary it snapshots ``export_psi(params)`` into the cluster,
 so online serving tracks training with epoch granularity ("live ψ refresh").
 
+**Delta publish** (continual learning): a fold-in produces ONE new/updated ψ
+row (``Model.fold_in_item``), and republishing the whole catalogue through a
+:class:`StagedRollout` for one row would be absurd. ``publish_delta(rows,
+ids)`` — on :class:`~repro.serve.cluster.ShardedRetrievalCluster`,
+:class:`~repro.serve.mesh.FaultTolerantRetrievalMesh`, and
+:class:`PsiPublisher` — patches existing rows and/or appends new ids onto
+the authoritative table copy and flips the result live under a NORMAL
+version bump: the double-buffer/atomicity story is unchanged, the batcher
+cache invalidates through the version key exactly as for a full publish,
+and the mesh's stale-replica refusal keeps protecting reads (every replica
+is rebuilt at the new version; an old-version replica is refused before
+dispatch). :func:`apply_delta` is the pure patch/append helper.
+
 :class:`StagedRollout` is the OPERATED form of publish for the
 fault-tolerant mesh (``serve/mesh.py``): instead of flipping a new ψ table
 straight to every replica, it stages the table on one canary replica per
@@ -32,6 +45,55 @@ queries. See ``serve/README.md`` for the runbook.
 from __future__ import annotations
 
 from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+def dense_table(shard_set) -> np.ndarray:
+    """Reassemble the dense (n_items, D) ψ table from a
+    :class:`~repro.serve.cluster.PsiShardSet` (drops the last shard's
+    padding rows) — the authoritative base a delta patches against."""
+    stacked = np.asarray(shard_set.stacked())          # (S, rows_per, D)
+    return stacked.reshape(-1, stacked.shape[-1])[: shard_set.n_items]
+
+
+def apply_delta(psi: np.ndarray, rows, ids) -> np.ndarray:
+    """Pure delta: patch/append ψ ``rows`` at global item ``ids``.
+
+    ``ids < n_items`` overwrite existing rows; ``ids >= n_items`` grow the
+    catalogue and must cover the appended range ``[n_items, max(ids)]``
+    without holes — a hole would silently serve an all-zero embedding for a
+    real item id, so it raises instead. Returns a NEW dense table (the
+    caller publishes it under a version bump; buffers stay immutable).
+    """
+    psi = np.asarray(psi)
+    rows = np.asarray(rows, psi.dtype)
+    ids = np.atleast_1d(np.asarray(ids, np.int64))
+    if rows.ndim == 1:
+        rows = rows[None, :]
+    n, d = psi.shape
+    if rows.shape != (ids.size, d):
+        raise ValueError(
+            f"delta rows must be ({ids.size}, {d}), got {rows.shape}"
+        )
+    if ids.size == 0:
+        return psi.copy()
+    if ids.min() < 0:
+        raise ValueError(f"negative item id in delta: {ids.min()}")
+    if np.unique(ids).size != ids.size:
+        raise ValueError("duplicate item ids in one delta")
+    n_new = max(int(ids.max()) + 1 - n, 0)
+    if n_new:
+        appended = set(int(i) for i in ids[ids >= n])
+        missing = [i for i in range(n, n + n_new) if i not in appended]
+        if missing:
+            raise ValueError(
+                f"append hole: ids {missing} in [{n}, {n + n_new}) carry no "
+                "row — a hole would serve a zero embedding for a real item"
+            )
+    out = np.concatenate([psi, np.zeros((n_new, d), psi.dtype)], axis=0)
+    out[ids] = rows
+    return out
 
 
 class VersionedTable:
@@ -99,6 +161,7 @@ class PsiPublisher:
         self.every = int(every)
         self.log = log
         self.versions: list = []  # [(epoch, version), ...]
+        self.deltas: list = []    # [(version, n_rows), ...] delta publishes
 
     def __call__(self, epoch: int, params) -> None:
         if epoch % self.every:
@@ -107,6 +170,19 @@ class PsiPublisher:
         self.versions.append((epoch, version))
         if self.log is not None:
             self.log(f"epoch {epoch}: published psi table version {version}")
+
+    def publish_delta(self, rows, ids) -> int:
+        """Incremental publish between epochs: patch/append the fold-in
+        ``rows`` at item ``ids`` (see :func:`apply_delta`) without a fresh
+        ``export(params)`` full-table pass. Returns the new version and
+        records it in ``deltas``."""
+        version = self.cluster.publish_delta(rows, ids)
+        self.deltas.append((version, int(np.atleast_1d(ids).size)))
+        if self.log is not None:
+            self.log(
+                f"delta: {self.deltas[-1][1]} psi row(s) -> version {version}"
+            )
+        return version
 
 
 class StagedRollout:

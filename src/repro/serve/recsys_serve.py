@@ -1,15 +1,17 @@
 """RecSys serving paths: p99 online batches, offline bulk, retrieval top-k.
 
-``retrieval_topk`` covers the retrieval_cand cell: 10⁶ candidates scored in
-chunks (batched-dot for separable scorers, chunked forward for rankers) and
-reduced with a running top-k — never materializing all scores when chunked.
+The chunked ``retrieval_topk`` oracle now lives with its dense sibling in
+:mod:`repro.kernels.topk_score.ref` (one home for the kernel's reference
+semantics); it is re-exported here unchanged for existing callers.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.topk_score.ref import retrieval_topk  # noqa: F401
 
 
 def bulk_score(forward: Callable, batch, chunk: int = 65536):
@@ -20,44 +22,6 @@ def bulk_score(forward: Callable, batch, chunk: int = 65536):
         piece = jax.tree_util.tree_map(lambda x: x[lo : lo + chunk], batch)
         outs.append(forward(piece))
     return jnp.concatenate(outs, axis=0)
-
-
-def retrieval_topk(
-    score_fn: Callable[[jax.Array], jax.Array],  # cand_ids → scores
-    n_candidates: int,
-    k: int = 100,
-    chunk: int = 262144,
-) -> Tuple[jax.Array, jax.Array]:
-    """Top-k over ``n_candidates`` scored in chunks with a running reduce.
-
-    ``score_fn(ids)`` may return ``(chunk,)`` (single query) or
-    ``(B, chunk)`` (batched); the reduce carries matching ``(..., k)``
-    state. Slots with no real candidate (``n_candidates < k``) stay at
-    id −1 / score −inf — no placeholder item id ever leaks into the
-    result. Ties resolve toward the smaller candidate id (``lax.top_k``
-    positional stability + ascending chunk order), the same policy as the
-    fused ``kernels/topk_score`` kernel, for which this chunked jnp path
-    is the reference oracle.
-    """
-    best_scores = best_ids = None
-    for lo in range(0, n_candidates, chunk):
-        ids = jnp.arange(lo, min(lo + chunk, n_candidates), dtype=jnp.int32)
-        scores = score_fn(ids)
-        if best_scores is None:  # first chunk fixes the (optional) batch dim
-            lead = scores.shape[:-1]
-            best_scores = jnp.full(lead + (k,), -jnp.inf, scores.dtype)
-            best_ids = jnp.full(lead + (k,), -1, jnp.int32)
-        merged_s = jnp.concatenate([best_scores, scores], axis=-1)
-        merged_i = jnp.concatenate(
-            [best_ids, jnp.broadcast_to(ids, scores.shape).astype(jnp.int32)],
-            axis=-1,
-        )
-        best_scores, idx = jax.lax.top_k(merged_s, k)
-        best_ids = jnp.take_along_axis(merged_i, idx, axis=-1)
-    if best_scores is None:  # n_candidates == 0
-        best_scores = jnp.full((k,), -jnp.inf)
-        best_ids = jnp.full((k,), -1, jnp.int32)
-    return best_scores, best_ids
 
 
 def mf_retrieval_score_fn(user_vec: jax.Array, item_table: jax.Array):

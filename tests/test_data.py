@@ -7,7 +7,7 @@ pytest.importorskip("hypothesis")  # property tests need hypothesis; CI installs
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.design import design_matmul, make_design, to_dense
-from repro.data.loader import lm_token_batches
+from repro.data.loader import interaction_stream
 from repro.data.synthetic import make_implicit_dataset
 
 
@@ -49,19 +49,24 @@ def test_attribute_signal_exists():
         assert np.mean(same) > np.mean(diff)
 
 
-def test_lm_token_batches_learnable_structure():
-    it = lm_token_batches(vocab=64, global_batch=8, seq_len=32, seed=0)
-    b = next(it)
-    assert b["tokens"].shape == (8, 32)
-    np.testing.assert_array_equal(b["targets"][:, :-1], b["tokens"][:, 1:])
-    # bigram structure: next-token entropy given current token is reduced
-    tok, tgt = b["tokens"].ravel(), b["targets"].ravel()
-    pairs = {}
-    for a, c in zip(tok, tgt):
-        pairs.setdefault(int(a), []).append(int(c))
-    # most contexts concentrate on ≤ 5 successors (4 choices + noise)
-    concentrated = [len(set(v)) <= 6 for v in pairs.values() if len(v) >= 4]
-    assert np.mean(concentrated) > 0.5
+def test_interaction_stream_replays_event_log_in_order():
+    ds = make_implicit_dataset(n_users=40, n_items=30, seed=7)
+    batches = list(interaction_stream(ds, batch_events=64))
+    # finite replay: every event appears exactly once, in arrival order
+    assert sum(len(b["item"]) for b in batches) == len(ds.events)
+    assert all(len(b["item"]) == 64 for b in batches[:-1])
+    ctx = np.concatenate([b["ctx"] for b in batches])
+    item = np.concatenate([b["item"] for b in batches])
+    t = np.concatenate([b["t"] for b in batches])
+    np.testing.assert_array_equal(ctx, ds.events[:, 0])
+    np.testing.assert_array_equal(item, ds.events[:, 1])
+    np.testing.assert_array_equal(t, ds.events[:, 2])
+    assert np.all(np.diff(t) > 0)
+    # start= resumes mid-log (the warm-start boundary of the continual loop)
+    tail = list(interaction_stream(ds, batch_events=64, start=128))
+    np.testing.assert_array_equal(
+        np.concatenate([b["item"] for b in tail]), ds.events[128:, 1]
+    )
 
 
 @settings(max_examples=15, deadline=None)
