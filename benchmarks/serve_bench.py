@@ -23,7 +23,11 @@ Tracks ``BENCH_topk_score.json`` at the repo root:
   * HARD fault-tolerance asserts (``serve/mesh.py``) — replica kills under
     R=2 bit-identical to the healthy oracle, unreplicated kills complete
     with the coverage/dead-range contract, retry backoff bounded by the
-    deadline budget.
+    deadline budget;
+  * HARD IVF/quantization asserts (``serve/ann.py``) — n_probe=n_clusters
+    bit-identical to exact, recall@K >= 0.95 at >= 4x analytic byte
+    reduction on the probe sweep, int8-per-row-scale ψ within 5% relative
+    score error and >= 3x rows per HBM shard.
 
 Run: ``python -m benchmarks.run --quick`` (serve section) or
 ``python -m benchmarks.serve_bench --smoke``.
@@ -398,6 +402,130 @@ def _failover_bench(quick: bool) -> dict:
     }
 
 
+def _ann_clustered(n, d, n_centers, seed=0, spread=6.0):
+    """Clustered ψ + centroid-seeking queries — the regime the IVF tier is
+    built for. Fixed seeds: the recall gate must be deterministic."""
+    rng = np.random.default_rng(seed)
+    cents = rng.normal(size=(n_centers, d)) * spread
+    per = -(-n // n_centers)
+    rows = np.concatenate(
+        [cents[i] + rng.normal(size=(per, d)) for i in range(n_centers)]
+    )[:n]
+    rng.shuffle(rows)
+    return jnp.asarray(rows, jnp.float32), cents, rng
+
+
+def _ann_bench(quick: bool) -> dict:
+    """IVF + quantized-ψ acceptance gates (serve/ann.py), all HARD asserts:
+
+      * ``ann_exact_parity`` — n_probe = n_clusters is BIT-identical (ids
+        AND scores) to the exact fused kernel: the approximate tier
+        degrades to exact, never to almost-exact;
+      * ``ann_recall_floor`` — some point on the probe sweep reaches
+        recall@K >= 0.95 against the exact oracle while the analytic
+        HBM-byte model (centroid read + probed quantized blocks vs the
+        full fp32 ψ stream) shows >= 4x fewer bytes;
+      * ``quant_parity`` — the int8-per-row-scale index at oracle probe
+        count returns >= 90% of the exact ids with scores within 5%
+        RELATIVE error (per-row scales bound relative, not absolute,
+        error — rows of very different norms are the point);
+      * ``int8_capacity_x`` — ``vmem.shard_capacity_rows``: int8+scale
+        rows per HBM byte >= 3x fp32 rows (the shard-capacity gate).
+    """
+    from repro.eval.ranking import ann_recall_curve, overlap_recall
+    from repro.kernels.topk_score import topk_score
+    from repro.kernels.vmem import psi_row_bytes, shard_capacity_rows
+    from repro.serve.ann import AnnConfig, PsiIndex
+
+    n, d, n_c, b, kk = (4096, 32, 16, 12, 100) if quick else (16384, 64, 32, 32, 100)
+    psi, cents, rng = _ann_clustered(n, d, n_c, seed=23)
+    phi = jnp.asarray(
+        cents[rng.integers(0, n_c, size=b)] * 0.5
+        + rng.normal(size=(b, d)) * 0.5,
+        jnp.float32,
+    )
+    exact_s, exact_i = topk_score(phi, psi, kk)
+
+    # --- exact-parity gate: oracle probe count, fp32 storage -------------
+    idx32 = PsiIndex.build(psi, AnnConfig(n_clusters=n_c, seed=3))
+    s, i = idx32.topk(phi, kk, n_probe=n_c)
+    if not ((np.asarray(i) == np.asarray(exact_i)).all()
+            and (np.asarray(s) == np.asarray(exact_s)).all()):
+        raise AssertionError(
+            "serve bench FAILED: IVF with n_probe=n_clusters is not "
+            "bit-identical to the exact kernel"
+        )
+    ann_exact_parity = True
+
+    # --- recall-vs-bytes sweep on the SHIPPED config (int8 + scales) -----
+    idx8 = PsiIndex.build(psi, AnnConfig(n_clusters=n_c, quant="int8", seed=3))
+    probes = sorted({1, 2, 4, max(1, n_c // 2), n_c})
+    curve = ann_recall_curve(idx8, phi, psi, k=kk, n_probes=probes)
+    exact_bytes = float(n * psi_row_bytes(d))            # full fp32 ψ stream
+    sweep = []
+    for pt in curve:
+        p = pt["n_probe"]
+        ivf_bytes = (
+            float(n_c * d * 4)                           # centroid scoring
+            + float(p * idx8.block_rows
+                    * psi_row_bytes(d, psi_bytes=1, per_row_scale=True))
+        )
+        sweep.append({
+            **pt,
+            "ivf_bytes": ivf_bytes,
+            "bytes_reduction_x": exact_bytes / ivf_bytes,
+        })
+    floor_pts = [pt for pt in sweep
+                 if pt[f"recall@{kk}"] >= 0.95 and pt["bytes_reduction_x"] >= 4.0]
+    if not floor_pts:
+        raise AssertionError(
+            "serve bench FAILED: no probe count reaches recall@"
+            f"{kk} >= 0.95 at >= 4x analytic byte reduction; sweep={sweep}"
+        )
+    ann_recall_floor = True
+
+    # --- quantized-score parity at oracle probes -------------------------
+    s8, i8 = idx8.topk(phi, kk, n_probe=n_c)
+    id_recall = overlap_recall(np.asarray(i8), np.asarray(exact_i))
+    hit = np.asarray(i8) == np.asarray(exact_i)
+    rel = (np.abs(np.asarray(s8) - np.asarray(exact_s))[hit]
+           / np.maximum(np.abs(np.asarray(exact_s))[hit], 1e-3))
+    if id_recall < 0.9 or rel.max() >= 0.05:
+        raise AssertionError(
+            "serve bench FAILED: int8 ψ quant parity — id recall "
+            f"{id_recall:.3f} (need >= 0.9) / max relative score error "
+            f"{rel.max():.4f} (need < 0.05)"
+        )
+    quant_parity = True
+
+    # --- capacity gate: int8+scale rows per shard vs fp32 ----------------
+    hbm = 16 * 2**30
+    cap32 = shard_capacity_rows(hbm, 128)
+    cap8 = shard_capacity_rows(hbm, 128, psi_bytes=1, per_row_scale=True)
+    capacity_x = cap8 / cap32
+    if capacity_x < 3.0:
+        raise AssertionError(
+            f"serve bench FAILED: int8 shard capacity {capacity_x:.2f}x "
+            "fp32 (need >= 3x)"
+        )
+    return {
+        "shape": dict(n_items=n, d=d, n_clusters=n_c, b=b, k=kk,
+                      block_rows=int(idx8.block_rows)),
+        "ann_exact_parity": ann_exact_parity,
+        "ann_recall_floor": ann_recall_floor,
+        "quant_parity": quant_parity,
+        "recall_bytes_sweep": sweep,
+        "best_floor_point": max(floor_pts, key=lambda p: p["bytes_reduction_x"]),
+        "quant_id_recall": float(id_recall),
+        "quant_max_rel_err": float(rel.max()),
+        "int8_capacity_x": float(capacity_x),
+        "capacity_rows": {"f32_D128_16GiB": cap32, "int8_D128_16GiB": cap8},
+        "note": "bytes analytic (centroids + probed quantized blocks vs "
+                "full fp32 stream); recall measured vs the exact kernel "
+                "on fixed-seed clustered data",
+    }
+
+
 def _eval_harness_parity(quick: bool) -> dict:
     """Streaming ranking_eval (never a (n_eval, n_items) array) vs dense
     metrics over the same exclusion protocol — single-table AND sharded."""
@@ -501,6 +629,7 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
     cluster = _cluster_parity(quick)
     batcher = _batcher_bench(quick)
     failover = _failover_bench(quick)
+    ann = _ann_bench(quick)
     eval_parity = _eval_harness_parity(quick)
     measured = _measure_cpu(quick)
     results = {
@@ -523,6 +652,7 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
         "cluster": cluster,
         "batcher": batcher,
         "failover": failover,
+        "ann": ann,
         "eval_harness": eval_parity,
         "acceptance": {
             "bytes_ratio_at_B256": analytic["B=256"]["bytes_ratio"],
@@ -537,7 +667,11 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
             "retry_deadline_ok": failover["deadline_ok"],
             "eval_parity": eval_parity["parity_ok"],
             "sharded_eval_parity": eval_parity["sharded_parity_ok"],
-            "target": ">= 2x fewer HBM bytes per retrieval batch at B >= 256 "
+            "ann_exact_parity": ann["ann_exact_parity"],
+            "ann_recall_floor": ann["ann_recall_floor"],
+            "quant_parity": ann["quant_parity"],
+            "int8_capacity_x": ann["int8_capacity_x"],
+            "target":">= 2x fewer HBM bytes per retrieval batch at B >= 256 "
                       "(analytic; scores never leave VMEM); streaming top-K "
                       "== dense lax.top_k ids for every k-separable model "
                       "incl. exclude masks; sharded cluster bit-identical "
@@ -548,7 +682,10 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
                       "single-table and sharded; replica kill under R=2 "
                       "bit-identical (failover invisible), unreplicated kill "
                       "completes with coverage < 1 + dead ranges, retry "
-                      "backoff never exceeds the deadline budget",
+                      "backoff never exceeds the deadline budget; IVF tier "
+                      "n_probe=n_clusters bit-identical to exact, recall@K "
+                      ">= 0.95 at >= 4x analytic byte reduction, int8 ψ "
+                      "scores within 5% relative + >= 3x rows per shard",
             "met": analytic["B=256"]["bytes_ratio"] >= 2.0
                    and analytic_cluster["S=4"]["shard_overhead_ratio"] <= 1.05
                    and all(r["parity_ok"] for r in models.values())
@@ -558,7 +695,11 @@ def serve_topk_bench(quick: bool = True, out_path: Optional[str] = None) -> dict
                    and failover["degraded_contract_ok"]
                    and failover["deadline_ok"]
                    and eval_parity["parity_ok"]
-                   and eval_parity["sharded_parity_ok"],
+                   and eval_parity["sharded_parity_ok"]
+                   and ann["ann_exact_parity"]
+                   and ann["ann_recall_floor"]
+                   and ann["quant_parity"]
+                   and ann["int8_capacity_x"] >= 3.0,
         },
     }
     if out_path:

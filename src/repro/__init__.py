@@ -6,12 +6,13 @@ feature of a framework-scale training/inference system:
 
 - ``repro.core``       — k-separable models, implicit regularizer, iCD solver
 - ``repro.sparse``     — CSR / segment ops / EmbeddingBag / neighbor sampler
-- ``repro.models``     — architecture zoo (LM transformers, recsys, GNN)
-- ``repro.kernels``    — Pallas TPU kernels (gram, embedding_bag, cd_update,
-                         flash_attention) with pure-jnp oracles
+- ``repro.models``     — sharding-hint DSL for the model zoo (models/hints.py)
+- ``repro.kernels``    — Pallas TPU kernels (gram, cd_update, cd_sweep,
+                         topk_score) with pure-jnp oracles
 - ``repro.optim``      — optimizers, schedules, gradient compression
 - ``repro.train``      — train-step builders, remat, microbatching
-- ``repro.serve``      — decode / recsys serving paths
+- ``repro.serve``      — retrieval serving: engine / sharded cluster /
+                         fault-tolerant mesh / IVF approximate tier
 - ``repro.checkpoint`` — fault-tolerant sharded checkpointing
 - ``repro.runtime``    — elastic mesh management, straggler watchdog
 - ``repro.configs``    — assigned architecture configs + the paper's own

@@ -1,59 +1,12 @@
-"""Config dataclasses shared by the zoo, launcher and dry-run."""
+"""Config dataclasses for the paper's own iCD models and the dry-run.
+
+The LM/RecSys/GNN zoo dataclasses left with the unused architecture zoo
+(PR 8 retirement).
+"""
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
-
-
-@dataclasses.dataclass(frozen=True)
-class MoEConfig:
-    n_experts: int
-    top_k: int
-    d_expert: int                 # per-expert FFN hidden dim
-    n_shared: int = 0             # always-on shared experts (DeepSeekMoE)
-    first_k_dense: int = 0        # leading dense layers (DeepSeekMoE)
-    d_ff_dense: int = 0           # hidden dim of those dense layers
-    capacity_factor: float = 1.25
-    aux_loss_weight: float = 0.01
-
-
-@dataclasses.dataclass(frozen=True)
-class LMConfig:
-    name: str
-    n_layers: int
-    d_model: int
-    n_heads: int
-    n_kv_heads: int
-    head_dim: int
-    d_ff: int
-    vocab: int
-    act: str = "swiglu"                   # 'swiglu' | 'geglu'
-    qkv_bias: bool = False                # Qwen1.5
-    attn_window: Optional[int] = None     # sliding window (local layers)
-    local_global_alternating: bool = False  # Gemma-2
-    attn_softcap: Optional[float] = None  # Gemma-2: 50.0
-    final_softcap: Optional[float] = None # Gemma-2: 30.0
-    post_norms: bool = False              # Gemma-2 post-block RMSNorm
-    rope_theta: float = 10000.0
-    norm_eps: float = 1e-6
-    tie_embeddings: bool = True
-    moe: Optional[MoEConfig] = None
-    # performance knobs (per-arch defaults, overridable by the launcher)
-    num_microbatches: int = 1
-    remat: bool = True
-    sequence_parallel: bool = True
-    scan_layers: bool = True
-    wire_barriers: bool = False  # optimization_barrier at block boundaries:
-    # stops XLA hoisting the rms_norm fp32 upcast through the activation
-    # collectives (measured 2× wire inflation — EXPERIMENTS.md §Perf #2)
-
-    @property
-    def q_dim(self) -> int:
-        return self.n_heads * self.head_dim
-
-    @property
-    def kv_dim(self) -> int:
-        return self.n_kv_heads * self.head_dim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,88 +22,6 @@ class ShapeSpec:
 
     def extra(self, key, default=None):
         return dict(self.extras).get(key, default)
-
-
-LM_SHAPES = (
-    ShapeSpec("train_4k", "train", seq_len=4096, global_batch=256),
-    ShapeSpec("prefill_32k", "prefill", seq_len=32768, global_batch=32),
-    ShapeSpec("decode_32k", "decode", seq_len=32768, global_batch=128),
-    ShapeSpec("long_500k", "decode", seq_len=524288, global_batch=1),
-)
-
-
-def lm_shapes(long_context_skip: Optional[str] = None):
-    out = []
-    for s in LM_SHAPES:
-        if s.name == "long_500k" and long_context_skip:
-            s = dataclasses.replace(s, skip=long_context_skip)
-        out.append(s)
-    return {s.name: s for s in out}
-
-
-@dataclasses.dataclass(frozen=True)
-class RecsysConfig:
-    name: str
-    kind: str                      # 'dlrm' | 'din' | 'dcn' | 'bst'
-    n_dense: int = 0
-    n_sparse: int = 0
-    embed_dim: int = 0
-    table_vocabs: Tuple[int, ...] = ()
-    bot_mlp: Tuple[int, ...] = ()
-    top_mlp: Tuple[int, ...] = ()
-    n_cross_layers: int = 0
-    mlp: Tuple[int, ...] = ()
-    seq_len: int = 0
-    attn_mlp: Tuple[int, ...] = ()
-    n_blocks: int = 0
-    n_heads: int = 0
-    item_vocab: int = 0
-
-
-RECSYS_SHAPES = {
-    "train_batch": ShapeSpec("train_batch", "train", global_batch=65536),
-    "serve_p99": ShapeSpec("serve_p99", "serve", global_batch=512),
-    "serve_bulk": ShapeSpec("serve_bulk", "serve", global_batch=262144),
-    "retrieval_cand": ShapeSpec(
-        "retrieval_cand", "retrieval", global_batch=1,
-        extras=(("n_candidates", 1_000_000),),
-    ),
-}
-
-
-@dataclasses.dataclass(frozen=True)
-class GNNConfig:
-    name: str
-    n_layers: int
-    d_hidden: int
-    aggregator: str
-    sample_sizes: Tuple[int, ...]
-    n_classes: int = 41
-
-
-GNN_SHAPES = {
-    "full_graph_sm": ShapeSpec(
-        "full_graph_sm", "train",
-        extras=(("n_nodes", 2708), ("n_edges", 10556), ("d_feat", 1433),
-                ("mode", "full")),
-    ),
-    "minibatch_lg": ShapeSpec(
-        "minibatch_lg", "train",
-        extras=(("n_nodes", 232_965), ("n_edges", 114_615_892),
-                ("batch_nodes", 1024), ("fanout", (15, 10)), ("d_feat", 602),
-                ("mode", "minibatch")),
-    ),
-    "ogb_products": ShapeSpec(
-        "ogb_products", "train",
-        extras=(("n_nodes", 2_449_029), ("n_edges", 61_859_140),
-                ("d_feat", 100), ("mode", "full")),
-    ),
-    "molecule": ShapeSpec(
-        "molecule", "train",
-        extras=(("n_nodes", 30), ("n_edges", 64), ("batch", 128),
-                ("d_feat", 16), ("mode", "batched")),
-    ),
-}
 
 
 @dataclasses.dataclass(frozen=True)

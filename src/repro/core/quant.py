@@ -1,0 +1,64 @@
+"""Shared symmetric int8 quantization helpers (per-tensor and per-row).
+
+Two consumers with one scale-fitting rule (absmax → ±127):
+
+  * ``optim/compression.py`` — error-feedback int8 GRADIENT compression for
+    the DP all-reduce (per-tensor scale: one gradient tensor, one dynamic
+    range); re-exports these under its historical names.
+  * ``serve/ann.py`` — quantized ψ SERVING storage. Catalogue rows span
+    orders of magnitude in norm (head vs tail items), so one per-tensor
+    scale would crush tail rows to zero: the per-ROW variant fits one scale
+    per ψ row and the fused kernel dequantizes tiles in-VMEM
+    (``q.astype(f32) · scale[row]``) with fp32 accumulation.
+
+The int8 code is symmetric (no zero point): ``q = clip(round(x/scale))``,
+``scale = absmax/127`` — dequantization is one multiply, which is what the
+kernel inlines per ψ tile. ``bf16`` storage needs no helper (a dtype cast);
+its capacity/accuracy trade sits between int8 and fp32.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12  # scale floor: keeps all-zero inputs from dividing by zero
+
+
+def int8_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: ``(q int8, scale f32 ())``."""
+    absmax = jnp.maximum(jnp.max(jnp.abs(x)), _EPS)
+    scale = (absmax / 127.0).astype(jnp.float32)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Per-tensor inverse: ``q·scale`` in fp32."""
+    return q.astype(jnp.float32) * scale
+
+
+def int8_quantize_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-ROW int8 quantization of a 2-D table.
+
+    Returns ``(q (n, d) int8, scales (n,) f32)`` with each row fitted to
+    its own absmax — the ψ-table form: a tail row's small coefficients keep
+    their full 8-bit resolution instead of inheriting the head rows' range.
+    All-zero rows get the ``_EPS`` floor scale (quantize to zeros,
+    dequantize to zeros)."""
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"per-row quantization needs a 2-D table, got {x.shape}")
+    absmax = jnp.maximum(jnp.max(jnp.abs(x), axis=1), _EPS)   # (n,)
+    scales = (absmax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def int8_dequantize_rows(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Per-row inverse: ``q · scales[:, None]`` in fp32 — the reference for
+    what the fused kernel computes per ψ tile in-VMEM."""
+    return q.astype(jnp.float32) * jnp.asarray(scales, jnp.float32)[:, None]

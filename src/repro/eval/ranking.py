@@ -104,6 +104,51 @@ def ranking_eval(
     }
 
 
+def overlap_recall(approx_ids, oracle_ids) -> float:
+    """Mean fraction of the exact oracle's admissible top-K found by an
+    approximate retriever — THE metric of the IVF tier (``serve/ann.py``):
+    recall@K against the exact path, not against held-out truth. −1 slots
+    (inadmissible) in the oracle are ignored; rows whose oracle list is
+    empty count as perfectly recalled."""
+    approx_ids = np.asarray(approx_ids)
+    oracle_ids = np.asarray(oracle_ids)
+    total, hit = 0, 0
+    for r in range(oracle_ids.shape[0]):
+        truth = set(int(i) for i in oracle_ids[r] if i >= 0)
+        if not truth:
+            continue
+        total += len(truth)
+        hit += len(truth & set(int(i) for i in approx_ids[r]))
+    return hit / total if total else 1.0
+
+
+def ann_recall_curve(
+    index,                        # serve.ann.PsiIndex
+    phi: jnp.ndarray,             # (B, D) query rows
+    psi: jnp.ndarray,             # (n_items, D) exact oracle table
+    *,
+    k: int = 100,
+    n_probes: Sequence[int] = (1, 2, 4, 8),
+    exclude: Optional[Sequence] = None,
+) -> list:
+    """Recall-vs-probe curve for one :class:`~repro.serve.ann.PsiIndex`:
+    for each ``n_probe``, :func:`overlap_recall` of the index's top-K
+    against the exact fused kernel over the same ψ table (the oracle the
+    ROADMAP's recall-vs-speedup figure plots; the serve bench pairs each
+    point with the analytic HBM-byte model). ``exclude`` takes the same
+    per-row id lists as :func:`ranking_eval`."""
+    eids = exclude_ids_from_lists(exclude) if exclude is not None else None
+    _, oracle = topk_score(phi, psi, k, exclude_ids=eids)
+    out = []
+    for p in n_probes:
+        _, ids = index.topk(phi, k, n_probe=int(p), exclude_ids=eids)
+        out.append({
+            "n_probe": int(p),
+            f"recall@{k}": overlap_recall(ids, oracle),
+        })
+    return out
+
+
 def fit_eval_callback(
     export: Callable,             # params -> (phi_eval, psi_table)
     true_items,

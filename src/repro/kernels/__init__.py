@@ -29,11 +29,10 @@ Kernels:
                     output ids, and the ops-layer ``topk_merge_shards``
                     K-way-merges per-shard candidates tie-stably — the
                     serving/eval mirror of cd_sweep and the kernel under
-                    ``serve/cluster``.
-  embedding_bag   — multi-hot EmbeddingBag as one-hot×table MXU matmuls,
-                    vocab-block streamed (recsys hot path).
-  flash_attention — online-softmax attention (causal / sliding-window /
-                    logit-softcap) for the LM zoo's prefill shapes.
+                    ``serve/cluster``. Accepts quantized ψ storage (int8
+                    with per-row scales, bf16) dequantized in-VMEM with
+                    fp32 accumulate — the storage side of the IVF tier
+                    (``serve/ann.py``).
 
 Blocking policy: row-tile sizes (``block_ctx``/``block_items``) resolve
 from the shared VMEM budget in ``kernels/vmem.py`` when not pinned by the

@@ -76,13 +76,20 @@ from repro.kernels import vmem
 
 
 def _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
-                     i_ref, excl_ref=None, exclid_ref=None):
+                     i_ref, excl_ref=None, exclid_ref=None, scale_ref=None):
     """One grid step: score the ψ tile and merge into the running top-K.
 
     ``meta_ref`` is the (1, 2) int32 ``[id_offset, n_valid]`` pair: ids are
     emitted as ``id_offset + local`` (global catalogue ids — shards pass
     their row-range start) and local ids ≥ ``n_valid`` are inadmissible
-    (catalogue tail / shard padding)."""
+    (catalogue tail / shard padding).
+
+    The ψ tile may arrive QUANTIZED (serving storage, ``serve/ann.py``):
+    bf16 rows dequantize by the plain fp32 cast below; int8 rows carry a
+    per-row fp32 scale tile (``scale_ref``, (block_items, 1)) and
+    dequantize in-VMEM as ``q.astype(f32)·scale`` — either way the MXU
+    accumulates in fp32 (``preferred_element_type``), so only the stored
+    form narrows, never the score arithmetic."""
     step = pl.program_id(1)
 
     @pl.when(step == 0)
@@ -92,6 +99,8 @@ def _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
 
     phi = phi_ref[...].astype(jnp.float32)   # (block_b, d_pad)
     psi = psi_ref[...].astype(jnp.float32)   # (block_items, d_pad)
+    if scale_ref is not None:
+        psi = psi * scale_ref[...]           # per-row dequant, broadcast (.,1)
     scores = jax.lax.dot_general(
         phi, psi, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )                                        # (block_b, block_items)
@@ -126,21 +135,25 @@ def _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
     i_ref[...] = jnp.take_along_axis(cat_i, sel, axis=1)
 
 
-def _topk_kernel(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref, i_ref):
+def _topk_kernel(block_items, k_pad, has_scale, excl_kind, *refs):
+    """Generic ref unpacker for every (scale?, exclusion-form) variant.
+
+    Ref order mirrors the in_specs the wrapper builds: meta, ψ,
+    [per-row scale], φ, [exclude mask | exclude ids], then the two outputs.
+    ``excl_kind``: 0 none, 1 dense mask, 2 id list."""
+    it = iter(refs)
+    meta_ref, psi_ref = next(it), next(it)
+    scale_ref = next(it) if has_scale else None
+    phi_ref = next(it)
+    excl_ref = next(it) if excl_kind == 1 else None
+    exclid_ref = next(it) if excl_kind == 2 else None
+    s_ref, i_ref = next(it), next(it)
     _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
-                     i_ref)
+                     i_ref, excl_ref=excl_ref, exclid_ref=exclid_ref,
+                     scale_ref=scale_ref)
 
 
-def _topk_excl_kernel(block_items, k_pad, meta_ref, psi_ref, phi_ref,
-                      excl_ref, s_ref, i_ref):
-    _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
-                     i_ref, excl_ref=excl_ref)
-
-
-def _topk_exclid_kernel(block_items, k_pad, meta_ref, psi_ref, phi_ref,
-                        exclid_ref, s_ref, i_ref):
-    _score_and_merge(block_items, k_pad, meta_ref, psi_ref, phi_ref, s_ref,
-                     i_ref, exclid_ref=exclid_ref)
+_QUANT_DTYPES = ("int8", "bfloat16")
 
 
 def topk_score_pallas(
@@ -150,6 +163,7 @@ def topk_score_pallas(
     exclude_mask: jax.Array | None = None,  # (B, n_rows) nonzero ⇒ never recommend
     *,
     exclude_ids: jax.Array | None = None,   # (B, L) GLOBAL ids, −1 padded
+    psi_scale: jax.Array | None = None,     # (n_rows,) per-row dequant scale
     id_offset=0,                            # global id of ψ row 0 (traced ok)
     n_valid=None,                           # admissible local rows (traced ok)
     block_b: int = 128,
@@ -162,13 +176,26 @@ def topk_score_pallas(
     ``block_items`` defaults to the shared VMEM-budget fit
     (:func:`repro.kernels.vmem.topk_block_items`). ``id_offset``/``n_valid``
     make a row-range shard emit global ids (see the module docstring); both
-    may be traced scalars so one compiled program serves every shard."""
+    may be traced scalars so one compiled program serves every shard.
+
+    Quantized ψ storage: ``psi`` may be bf16 (cast-dequantized per tile) or
+    int8 with a REQUIRED per-row ``psi_scale`` (the ``core.quant``
+    per-row-scale form); either streams the narrow stored tile through VMEM
+    and dequantizes in-kernel before the fp32-accumulating MXU dot, so
+    score semantics (tie policy, admissibility) are unchanged — only the
+    stored precision differs."""
     b, d = phi.shape
     n_rows, d2 = psi.shape
     assert d == d2, f"phi D={d} vs psi D={d2}"
     assert exclude_mask is None or exclude_ids is None, (
         "pass exclude_mask OR exclude_ids, not both"
     )
+    if psi.dtype == jnp.int8 and psi_scale is None:
+        raise ValueError("int8 psi needs psi_scale (per-row dequant scales)")
+    if psi_scale is not None and psi_scale.shape[0] != n_rows:
+        raise ValueError(
+            f"psi_scale has {psi_scale.shape[0]} rows, psi has {n_rows}"
+        )
     if n_valid is None:
         n_valid = n_rows
 
@@ -178,6 +205,7 @@ def topk_score_pallas(
     l_pad = 0
     if exclude_ids is not None:
         l_pad = -(-max(1, exclude_ids.shape[1]) // lane) * lane
+    psi_bytes = psi.dtype.itemsize if str(psi.dtype) in _QUANT_DTYPES else 4
     block_b = min(block_b, -(-b // 8) * 8)
     if block_items is None:
         # The φ tile + running top-k_pad state are FIXED VMEM costs scaling
@@ -187,7 +215,8 @@ def topk_score_pallas(
         while True:
             try:
                 block_items = vmem.topk_block_items(
-                    block_b, d_pad, k_pad, n_items=n_rows, excl_l_pad=l_pad
+                    block_b, d_pad, k_pad, n_items=n_rows, excl_l_pad=l_pad,
+                    psi_bytes=psi_bytes, per_row_scale=psi_scale is not None,
                 )
                 break
             except vmem.VmemBudgetError:
@@ -198,7 +227,9 @@ def topk_score_pallas(
     n_pad = -(-n_rows // block_items) * block_items
 
     phi = jnp.pad(phi.astype(jnp.float32), ((0, b_pad - b), (0, d_pad - d)))
-    psi = jnp.pad(psi.astype(jnp.float32), ((0, n_pad - n_rows), (0, d_pad - d)))
+    if str(psi.dtype) not in _QUANT_DTYPES:
+        psi = psi.astype(jnp.float32)       # quantized forms pad as stored
+    psi = jnp.pad(psi, ((0, n_pad - n_rows), (0, d_pad - d)))
     meta = jnp.stack([
         jnp.asarray(id_offset, jnp.int32),
         jnp.minimum(jnp.asarray(n_valid, jnp.int32), n_rows),
@@ -213,54 +244,49 @@ def topk_score_pallas(
         jax.ShapeDtypeStruct((b_pad, k_pad), jnp.float32),
         jax.ShapeDtypeStruct((b_pad, k_pad), jnp.int32),
     ]
-    meta_spec = pl.BlockSpec((1, 2), lambda bb, ii: (0, 0))
-    psi_spec = pl.BlockSpec((block_items, d_pad), lambda bb, ii: (ii, 0))
-    phi_spec = pl.BlockSpec((block_b, d_pad), lambda bb, ii: (bb, 0))
+    in_specs = [
+        pl.BlockSpec((1, 2), lambda bb, ii: (0, 0)),                 # meta
+        pl.BlockSpec((block_items, d_pad), lambda bb, ii: (ii, 0)),  # ψ
+    ]
+    args = [meta, psi]
+    if psi_scale is not None:
+        scale = jnp.pad(
+            psi_scale.astype(jnp.float32).reshape(-1, 1),
+            ((0, n_pad - n_rows), (0, 0)), constant_values=1.0,
+        )
+        in_specs.append(
+            pl.BlockSpec((block_items, 1), lambda bb, ii: (ii, 0))
+        )
+        args.append(scale)
+    in_specs.append(pl.BlockSpec((block_b, d_pad), lambda bb, ii: (bb, 0)))
+    args.append(phi)
 
+    excl_kind = 0
     if exclude_mask is not None:
-        excl = jnp.pad(
+        excl_kind = 1
+        in_specs.append(
+            pl.BlockSpec((block_b, block_items), lambda bb, ii: (bb, ii))
+        )
+        args.append(jnp.pad(
             exclude_mask.astype(jnp.int8),
             ((0, b_pad - b), (0, n_pad - n_rows)),
-        )
-        scores, ids = pl.pallas_call(
-            partial(_topk_excl_kernel, block_items, k_pad),
-            grid=grid,
-            in_specs=[
-                meta_spec,
-                psi_spec,
-                phi_spec,
-                pl.BlockSpec((block_b, block_items), lambda bb, ii: (bb, ii)),
-            ],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(meta, psi, phi, excl)
+        ))
     elif exclude_ids is not None:
-        excl_ids = jnp.pad(
+        excl_kind = 2
+        in_specs.append(pl.BlockSpec((block_b, l_pad), lambda bb, ii: (bb, 0)))
+        args.append(jnp.pad(
             exclude_ids.astype(jnp.int32),
             ((0, b_pad - b), (0, l_pad - exclude_ids.shape[1])),
             constant_values=-1,
-        )
-        scores, ids = pl.pallas_call(
-            partial(_topk_exclid_kernel, block_items, k_pad),
-            grid=grid,
-            in_specs=[
-                meta_spec,
-                psi_spec,
-                phi_spec,
-                pl.BlockSpec((block_b, l_pad), lambda bb, ii: (bb, 0)),
-            ],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(meta, psi, phi, excl_ids)
-    else:
-        scores, ids = pl.pallas_call(
-            partial(_topk_kernel, block_items, k_pad),
-            grid=grid,
-            in_specs=[meta_spec, psi_spec, phi_spec],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(meta, psi, phi)
+        ))
+
+    scores, ids = pl.pallas_call(
+        partial(_topk_kernel, block_items, k_pad, psi_scale is not None,
+                excl_kind),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
     return scores[:b, :k], ids[:b, :k]

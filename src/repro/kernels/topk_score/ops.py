@@ -21,8 +21,8 @@ from repro.kernels.topk_score.kernel import topk_score_pallas
 
 @kernel_jit(static_argnames=("k", "block_b", "block_items"))
 def topk_score(phi, psi, k, exclude_mask=None, *, exclude_ids=None,
-               id_offset=0, n_valid=None, block_b=128, block_items=None,
-               interpret=None):
+               psi_scale=None, id_offset=0, n_valid=None, block_b=128,
+               block_items=None, interpret=None):
     """Fused streaming top-K over the ψ table: ``(scores, ids) (B, k)``.
 
     ``exclude_mask`` (B, n_rows), nonzero ⇒ never recommend; the web-scale
@@ -31,10 +31,14 @@ def topk_score(phi, psi, k, exclude_mask=None, *, exclude_ids=None,
     block, so no (B, n_items) mask is ever materialized. Inadmissible
     slots come back as (−inf, −1). ``id_offset``/``n_valid`` (traced
     scalars allowed) serve a row-range ψ shard with global output ids; see
-    ``kernel.py`` for the tie policy."""
+    ``kernel.py`` for the tie policy.
+
+    ``psi`` may be quantized serving storage: bf16, or int8 with the
+    per-row ``psi_scale`` from ``core.quant.int8_quantize_rows`` —
+    dequantized in-kernel per tile, fp32 accumulate (``serve/ann.py``)."""
     return topk_score_pallas(
         phi, psi, k, exclude_mask, exclude_ids=exclude_ids,
-        id_offset=id_offset, n_valid=n_valid,
+        psi_scale=psi_scale, id_offset=id_offset, n_valid=n_valid,
         block_b=block_b, block_items=block_items, interpret=interpret,
     )
 

@@ -174,13 +174,24 @@ def topk_block_items(
     *,
     n_items: int | None = None,
     excl_l_pad: int = 0,
+    psi_bytes: int = 4,
+    per_row_scale: bool = False,
 ) -> int:
     """ψ-table row tile for the ``topk_score`` kernel.
 
-    Per ψ row: the ψ tile lane (d_pad·4) plus this row's column in the
+    Per ψ row: the STORED ψ tile lane (``d_pad·psi_bytes`` — 4 for fp32,
+    2 for bf16, 1 for int8 serving storage) plus this row's column in the
     (block_b, block_items) score tile and the concat/merge temporaries
     (≈3 score-tile copies: scores + concatenated scores/ids). Fixed: the
     resident φ tile and the running top-k_pad score/id blocks.
+
+    ``psi_bytes < 4`` models the quantized-ψ variants: the kernel holds the
+    narrow stored tile AND its in-VMEM fp32 dequantization (``+4·d_pad``
+    per row, plus the f32 per-row scale column when ``per_row_scale``), so
+    the VMEM block for int8 is NOT 4× the fp32 one — the capacity win of
+    quantized ψ is the HBM/shard-residency side
+    (:func:`psi_row_bytes` / :func:`shard_capacity_rows`), while the VMEM
+    fit only has to keep working under the same budget.
 
     ``excl_l_pad`` models the exclude-ID variant: the resident (block_b,
     L_pad) id tile is FIXED and the in-kernel membership compare adds a
@@ -189,10 +200,34 @@ def topk_block_items(
     Raises :class:`VmemBudgetError` at large ``block_b·k_pad`` (the fixed
     φ/top-k state alone busts the budget); ``topk_score_pallas`` catches
     it and halves ``block_b``."""
-    per_row = 4 * (d_pad + 4 * block_b) + block_b * excl_l_pad
+    stored = psi_bytes * d_pad + (4 * d_pad if psi_bytes < 4 else 0)
+    per_row = stored + 16 * block_b + block_b * excl_l_pad
+    if per_row_scale:
+        per_row += 4
     fixed = 4 * (block_b * d_pad + 4 * block_b * k_pad + block_b * excl_l_pad)
     return fit_block_rows(
         per_row, fixed_bytes=fixed, n_rows=n_items, multiple=128, lo=128, hi=4096
+    )
+
+
+def psi_row_bytes(d: int, *, psi_bytes: int = 4,
+                  per_row_scale: bool = False) -> int:
+    """HBM bytes one ψ catalogue row occupies in serving storage:
+    ``d·psi_bytes`` plus the fp32 per-row scale (int8 form). The analytic
+    basis for the quantized-capacity and ANN traffic models
+    (``benchmarks/serve_bench`` ``ann`` section)."""
+    return d * psi_bytes + (4 if per_row_scale else 0)
+
+
+def shard_capacity_rows(hbm_bytes: int, d: int, *, psi_bytes: int = 4,
+                        per_row_scale: bool = False) -> int:
+    """ψ rows one shard device can hold in ``hbm_bytes`` of slab budget.
+    int8 (+ per-row scale) at D=128 fits ``512/132 ≈ 3.9×`` the fp32 rows —
+    the "≥ 3× rows per shard" capacity gate in the serve bench asserts this
+    model while :func:`topk_block_items` proves the same tile still fits
+    the unchanged VMEM budget."""
+    return hbm_bytes // psi_row_bytes(
+        d, psi_bytes=psi_bytes, per_row_scale=per_row_scale
     )
 
 

@@ -16,8 +16,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config, get_shapes
 from repro.launch import sharding as sh
 from repro.launch.mesh import dp_axes
-from repro.optim import adamw
-from repro.train.train_step import build_train_step, init_state
 
 
 @dataclasses.dataclass
@@ -35,264 +33,6 @@ class Cell:
 
 def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
-
-
-def _pad512(n: int) -> int:
-    """Round up to a multiple of 512 so a dim shards on every production
-    mesh. The data pipeline pads with sentinels (dummy candidate ids /
-    self-edges at a dummy node) that the losses mask out."""
-    return -(-n // 512) * 512
-
-
-def _abstract(fn, *args, **kwargs):
-    return jax.eval_shape(fn, *args, **kwargs)
-
-
-# ===========================================================================
-# LM cells
-# ===========================================================================
-def _lm_cell(arch: str, shape_spec, mesh, cfg_override=None, probe=False) -> Cell:
-    from repro.models import transformer as T
-
-    cfg = cfg_override or get_config(arch)
-    dp = dp_axes(mesh)
-    b, s = shape_spec.global_batch, shape_spec.seq_len
-
-    params_abs = _abstract(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
-    p_specs = sh.lm_param_specs(cfg, params_abs)
-
-    if shape_spec.kind == "train":
-        opt = adamw(1e-4)
-        step = build_train_step(
-            lambda p, batch: T.loss_fn(cfg, p, batch["tokens"], batch["targets"]),
-            opt, num_microbatches=cfg.num_microbatches,
-            unroll_microbatches=probe,
-        )
-        state_abs = _abstract(lambda: init_state(
-            T.init_params(jax.random.PRNGKey(0), cfg), opt))
-        batch_abs = {"tokens": _sds((b, s), jnp.int32),
-                     "targets": _sds((b, s), jnp.int32)}
-        st_specs = sh.train_state_specs(p_specs)
-        return Cell(
-            arch, shape_spec.name, "train", step,
-            (state_abs, batch_abs),
-            (st_specs, sh.lm_batch_specs(mesh)),
-            (st_specs, {"loss": P(), "grad_norm": P()}),
-        )
-
-    if shape_spec.kind == "prefill":
-        def step(params, tokens):
-            return T.forward(cfg, params, tokens, last_only=True)[0]
-
-        return Cell(
-            arch, shape_spec.name, "prefill", step,
-            (params_abs, _sds((b, s), jnp.int32)),
-            (p_specs, P(dp, None)),
-            P(dp, None, "model"),
-        )
-
-    # decode: one new token against a seq_len KV cache
-    long_ctx = s >= 100_000
-    cache_abs = _abstract(lambda: T.init_cache(cfg, b, s))
-    c_specs = sh.lm_cache_specs(cfg, cache_abs, mesh,
-                                shard_seq_over_dp=long_ctx)
-    tok_abs = _sds((b, 1), jnp.int32)
-    pos_abs = _sds((), jnp.int32)
-    tok_spec = P(None, None) if long_ctx else P(dp, None)
-
-    def step(params, cache, tok, pos):
-        return T.decode_step(cfg, params, cache, tok, pos)
-
-    logits_spec = P(None, None, "model") if long_ctx else P(dp, None, "model")
-    return Cell(
-        arch, shape_spec.name, "decode", step,
-        (params_abs, cache_abs, tok_abs, pos_abs),
-        (p_specs, c_specs, tok_spec, P()),
-        (logits_spec, c_specs),
-        skip=shape_spec.skip,
-        notes="rolling local cache bounds half the layers" if
-              cfg.local_global_alternating else "",
-    )
-
-
-# ===========================================================================
-# recsys cells
-# ===========================================================================
-def _recsys_module(cfg):
-    from repro.models import bst, dcn, din, dlrm
-
-    return {"dlrm": dlrm, "dcn": dcn, "din": din, "bst": bst}[cfg.kind]
-
-
-def _recsys_batch_abs(cfg, b):
-    if cfg.kind in ("dlrm", "dcn"):
-        return {
-            "dense": _sds((b, cfg.n_dense), jnp.float32),
-            "sparse": _sds((b, cfg.n_sparse), jnp.int32),
-            "label": _sds((b,), jnp.float32),
-        }
-    return {
-        "hist": _sds((b, cfg.seq_len), jnp.int32),
-        "mask": _sds((b, cfg.seq_len), jnp.float32),
-        "target": _sds((b,), jnp.int32),
-        "label": _sds((b,), jnp.float32),
-    }
-
-
-def _recsys_cell(arch: str, shape_spec, mesh) -> Cell:
-    cfg = get_config(arch)
-    mod = _recsys_module(cfg)
-    dp = dp_axes(mesh)
-    b = shape_spec.global_batch
-
-    params_abs = _abstract(lambda: mod.init_params(jax.random.PRNGKey(0), cfg))
-    p_specs = sh.recsys_param_specs(cfg, params_abs)
-
-    if shape_spec.kind == "train":
-        opt = adamw(1e-3)
-        step = build_train_step(lambda p, batch: mod.loss_fn(cfg, p, batch), opt)
-        state_abs = _abstract(lambda: init_state(
-            mod.init_params(jax.random.PRNGKey(0), cfg), opt))
-        st_specs = sh.train_state_specs(p_specs)
-        return Cell(
-            arch, shape_spec.name, "train", step,
-            (state_abs, _recsys_batch_abs(cfg, b)),
-            (st_specs, sh.recsys_batch_specs(cfg, mesh)),
-            (st_specs, {"loss": P(), "grad_norm": P()}),
-        )
-
-    if shape_spec.kind == "serve":
-        def step(params, batch):
-            if cfg.kind in ("dlrm", "dcn"):
-                return mod.forward(cfg, params, batch["dense"], batch["sparse"])
-            return mod.forward(cfg, params, batch["hist"], batch["mask"],
-                               batch["target"])
-
-        batch_abs = _recsys_batch_abs(cfg, b)
-        batch_abs.pop("label")
-        batch_specs = sh.recsys_batch_specs(cfg, mesh)
-        batch_specs.pop("label")
-        return Cell(
-            arch, shape_spec.name, "serve", step,
-            (params_abs, batch_abs), (p_specs, batch_specs), P(dp),
-        )
-
-    # retrieval: 1 context vs n_candidates
-    n_cand = _pad512(shape_spec.extra("n_candidates"))
-    cand_axes = dp + ("model",)
-    if cfg.kind in ("dlrm", "dcn"):
-        args_abs = (
-            params_abs,
-            _sds((1, cfg.n_dense), jnp.float32),
-            _sds((1, cfg.n_sparse), jnp.int32),
-            _sds((n_cand,), jnp.int32),
-        )
-        in_specs = (p_specs, P(None, None), P(None, None), P(cand_axes))
-
-        def step(params, dense, user_sparse, cand):
-            return mod.score_candidates(cfg, params, dense, user_sparse, cand)
-    else:
-        args_abs = (
-            params_abs,
-            _sds((1, cfg.seq_len), jnp.int32),
-            _sds((1, cfg.seq_len), jnp.float32),
-            _sds((n_cand,), jnp.int32),
-        )
-        in_specs = (p_specs, P(None, None), P(None, None), P(cand_axes))
-
-        def step(params, hist, mask, cand):
-            return mod.score_candidates(cfg, params, hist, mask, cand)
-
-    return Cell(
-        arch, shape_spec.name, "retrieval", step, args_abs, in_specs,
-        P(cand_axes),
-    )
-
-
-# ===========================================================================
-# GNN cells
-# ===========================================================================
-def _gnn_cell(arch: str, shape_spec, mesh) -> Cell:
-    from repro.models import graphsage as G
-
-    cfg = get_config(arch)
-    dp = dp_axes(mesh)
-    all_axes = dp + ("model",)
-    mode = shape_spec.extra("mode")
-    d_feat = shape_spec.extra("d_feat")
-    opt = adamw(1e-3)
-
-    params_abs = _abstract(lambda: G.init_params(jax.random.PRNGKey(0), cfg, d_feat))
-    p_specs = sh.gnn_param_specs(params_abs)
-    state_abs = _abstract(lambda: init_state(
-        G.init_params(jax.random.PRNGKey(0), cfg, d_feat), opt))
-    st_specs = sh.train_state_specs(p_specs)
-
-    if mode == "full":
-        # +1 dummy node absorbs the sentinel padding edges; e padded to 512
-        n = shape_spec.extra("n_nodes") + 1
-        e = _pad512(shape_spec.extra("n_edges"))
-
-        def loss(p, batch):
-            logits, _ = G.forward_full(cfg, p, batch["feats"], batch["edges"])
-            return G.ce_loss(logits, batch["labels"], batch["mask"])
-
-        batch_abs = {
-            "feats": _sds((n, d_feat), jnp.float32),
-            "edges": _sds((e, 2), jnp.int32),
-            "labels": _sds((n,), jnp.int32),
-            "mask": _sds((n,), jnp.float32),
-        }
-        batch_specs = {"feats": P(None, None), "edges": P(all_axes, None),
-                       "labels": P(None), "mask": P(None)}
-        notes = "edges sharded over all axes; node states all-reduced"
-    elif mode == "minibatch":
-        bn = shape_spec.extra("batch_nodes")
-        fanout = shape_spec.extra("fanout")
-        n_nodes = shape_spec.extra("n_nodes")
-        sizes = [bn]
-        for f in fanout:
-            sizes.append(sizes[-1] * f)
-
-        def loss(p, batch):
-            feats = [jnp.take(batch["table"], idx, axis=0)
-                     for idx in batch["frontiers"]]
-            logits, _ = G.forward_minibatch(cfg, p, feats)
-            return G.ce_loss(logits, batch["labels"])
-
-        batch_abs = {
-            "table": _sds((n_nodes, d_feat), jnp.float32),
-            "frontiers": [_sds((sz,), jnp.int32) for sz in sizes],
-            "labels": _sds((bn,), jnp.int32),
-        }
-        batch_specs = {"table": P(None, None),
-                       "frontiers": [P(dp) for _ in sizes],
-                       "labels": P(dp)}
-        notes = "host-side neighbor sampler feeds frontier indices"
-    else:  # batched molecules
-        bsz = shape_spec.extra("batch")
-        n = shape_spec.extra("n_nodes")
-
-        def loss(p, batch):
-            logits, _ = G.forward_batched(cfg, p, batch["feats"], batch["adj"])
-            return G.ce_loss(logits, batch["labels"])
-
-        batch_abs = {
-            "feats": _sds((bsz, n, d_feat), jnp.float32),
-            "adj": _sds((bsz, n, n), jnp.float32),
-            "labels": _sds((bsz,), jnp.int32),
-        }
-        batch_specs = {"feats": P(dp, None, None), "adj": P(dp, None, None),
-                       "labels": P(dp)}
-        notes = ""
-
-    step = build_train_step(loss, opt)
-    return Cell(
-        arch, shape_spec.name, "train", step,
-        (state_abs, batch_abs), (st_specs, batch_specs),
-        (st_specs, {"loss": P(), "grad_norm": P()}),
-        notes=notes,
-    )
 
 
 # ===========================================================================
@@ -365,18 +105,14 @@ def _icd_cell(arch: str, shape_spec, mesh) -> Cell:
 # ===========================================================================
 # registry
 # ===========================================================================
-# The seed-template LM/RecSys/GNN configs were removed in PR 4 (unrelated
-# to this paper); the cell builders above stay generic, but only the iCD
-# archs are registered.
-LM_ARCHS = ()
-RECSYS_ARCHS = ()
-GNN_ARCHS = ()
+# The seed-template LM/RecSys/GNN cell builders left with the unused
+# architecture zoo (PR 8 retirement); only the paper's own iCD archs exist.
 ICD_ARCHS = ("icd-mf",)
 
 
 def all_cell_ids(include_icd: bool = True):
     out = []
-    for arch in LM_ARCHS + GNN_ARCHS + RECSYS_ARCHS + (ICD_ARCHS if include_icd else ()):
+    for arch in ICD_ARCHS if include_icd else ():
         for shape_name in get_shapes(arch):
             out.append((arch, shape_name))
     return out
@@ -385,12 +121,6 @@ def all_cell_ids(include_icd: bool = True):
 def build_cell(arch: str, shape_name: str, mesh, cfg_override=None,
                probe: bool = False, shape_override=None) -> Cell:
     shape_spec = shape_override or get_shapes(arch)[shape_name]
-    if arch in LM_ARCHS:
-        return _lm_cell(arch, shape_spec, mesh, cfg_override, probe)
-    if arch in RECSYS_ARCHS:
-        return _recsys_cell(arch, shape_spec, mesh)
-    if arch in GNN_ARCHS:
-        return _gnn_cell(arch, shape_spec, mesh)
     if arch in ICD_ARCHS or arch.startswith("icd"):
         return _icd_cell(arch, shape_spec, mesh)
     raise KeyError(arch)

@@ -1,4 +1,4 @@
-"""Sharding rules: parameter/optimizer/batch PartitionSpecs per arch family.
+"""Sharding rules: optimizer/train-state PartitionSpecs and the iCD specs.
 
 Conventions (DESIGN.md §5):
   * batch/context dims shard over ``dp`` = ("pod","data") on multi-pod,
@@ -11,8 +11,6 @@ Conventions (DESIGN.md §5):
   * small vectors (norms, biases) replicate.
 """
 from __future__ import annotations
-
-from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -28,10 +26,6 @@ def named(mesh, spec_tree):
     )
 
 
-# ---------------------------------------------------------------- LM ------
-MODEL_AXIS_SIZE = 16  # both production meshes use a 16-way model axis
-
-
 def _drop_data(spec: P) -> P:
     """Replace every 'data'/('data',) entry with None (ZeRO-1 live params:
     replicated over data, sharded over model only)."""
@@ -41,85 +35,6 @@ def _drop_data(spec: P) -> P:
         return e
 
     return P(*[clean(e) for e in spec])
-
-
-def _lm_leaf_spec(cfg, name: str, stacked: bool, model_axis: int = MODEL_AXIS_SIZE) -> P:
-    """Spec for one transformer block leaf, by parameter name.
-
-    Attention projections are column-parallel (sharded over heads) only when
-    the head count divides the model axis; otherwise ROW-parallel (sharded on
-    d_model, partial-sum all-reduce of the small projection output). Naively
-    head-sharding e.g. Gemma-2's 8 q / 4 kv heads 16 ways makes GSPMD emit
-    f32 (S×S) score partial-sum all-reduces — catastrophic (measured in
-    EXPERIMENTS.md §Dry-run notes).
-    """
-    lead = (None,) if stacked else ()
-    q_col = cfg.n_heads % model_axis == 0
-    kv_col = cfg.n_kv_heads % model_axis == 0
-    table = {
-        "wq": lead + ((("data",), "model") if q_col else ("model", ("data",))),
-        "wk": lead + ((("data",), "model") if kv_col else ("model", ("data",))),
-        "wv": lead + ((("data",), "model") if kv_col else ("model", ("data",))),
-        "wo": lead + (("model", ("data",)) if q_col else (("data",), "model")),
-        "bq": lead + (("model",) if q_col else (None,)),
-        "bk": lead + (("model",) if kv_col else (None,)),
-        "bv": lead + (("model",) if kv_col else (None,)),
-        "w_gate": lead + (("data",), "model"),
-        "w_up": lead + (("data",), "model"),
-        "w_down": lead + ("model", ("data",)),
-        "router": lead + (("data",), None),
-        "e_gate": lead + ("model", ("data",), None),
-        "e_up": lead + ("model", ("data",), None),
-        "e_down": lead + ("model", None, ("data",)),
-        "s_gate": lead + (("data",), "model"),
-        "s_up": lead + (("data",), "model"),
-        "s_down": lead + ("model", ("data",)),
-        "pre_attn": lead + (None,),
-        "pre_ffn": lead + (None,),
-        "post_attn": lead + (None,),
-        "post_ffn": lead + (None,),
-    }
-    return P(*table[name])
-
-
-def lm_param_specs(cfg, params: Any, model_axis: int = MODEL_AXIS_SIZE):
-    """Same-structure PartitionSpec tree for the transformer param pytree."""
-
-    def block_specs(block, stacked):
-        return {k: _lm_leaf_spec(cfg, k, stacked, model_axis) for k in block}
-
-    specs = {
-        "embed": P("model", None),
-        "final_norm": P(None),
-        "head_dense": [block_specs(b, stacked=False) for b in params["head_dense"]],
-        "layers": tuple(block_specs(b, stacked=True) for b in params["layers"]),
-    }
-    if "unembed" in params:
-        specs["unembed"] = P(None, "model")
-    return specs
-
-
-def lm_batch_specs(mesh):
-    dp = dp_axes(mesh)
-    return {"tokens": P(dp, None), "targets": P(dp, None)}
-
-
-def lm_cache_specs(cfg, cache, mesh, shard_seq_over_dp: bool = False):
-    """KV cache (n_steps, 2, B, S, Hkv, hd): batch over dp, seq over model
-    (sequence-sharded cache). long-context B=1 cells shard seq over
-    (dp + model) instead."""
-    dp = dp_axes(mesh)
-    if shard_seq_over_dp:
-        seq_spec = P(None, None, None, dp + ("model",), None, None)
-        one_spec = P(None, None, dp + ("model",), None, None)
-    else:
-        seq_spec = P(None, None, dp, "model", None, None)
-        one_spec = P(None, dp, "model", None, None)
-    return {
-        "head_dense": [one_spec for _ in cache["head_dense"]],
-        "layers": tuple(seq_spec for _ in cache["layers"]),
-        "max_seq": P(),
-    }
 
 
 # ------------------------------------------------------------- optimizer --
@@ -147,63 +62,6 @@ def zero1_state_specs(fsdp_param_specs):
     opt = {"master": fsdp_param_specs,
            "inner": opt_state_specs(fsdp_param_specs)}
     return TrainState(params=live, opt=opt, step=P()), live
-
-
-# --------------------------------------------------------------- recsys ---
-def recsys_param_specs(cfg, params):
-    def mlp_specs(layers):
-        return [
-            {k: P(*([None] * v.ndim)) for k, v in layer.items()}
-            for layer in layers
-        ]
-
-    if cfg.kind in ("dlrm", "dcn"):
-        specs = {"table": P("model", None)}
-        if cfg.kind == "dlrm":
-            specs["bot"] = mlp_specs(params["bot"])
-            specs["top"] = mlp_specs(params["top"])
-        else:
-            specs["cross"] = [
-                {"w": P(None, None), "b": P(None)} for _ in params["cross"]
-            ]
-            specs["deep"] = mlp_specs(params["deep"])
-        return specs
-    if cfg.kind == "din":
-        return {
-            "items": P("model", None),
-            "attn": mlp_specs(params["attn"]),
-            "mlp": mlp_specs(params["mlp"]),
-        }
-    if cfg.kind == "bst":
-        return {
-            "items": P("model", None),
-            "pos": P(None, None),
-            "blocks": [
-                {k: P(*([None] * v.ndim)) for k, v in b.items()}
-                for b in params["blocks"]
-            ],
-            "mlp": mlp_specs(params["mlp"]),
-        }
-    raise ValueError(cfg.kind)
-
-
-def recsys_batch_specs(cfg, mesh):
-    dp = dp_axes(mesh)
-    if cfg.kind in ("dlrm", "dcn"):
-        return {"dense": P(dp, None), "sparse": P(dp, None), "label": P(dp)}
-    return {"hist": P(dp, None), "mask": P(dp, None), "target": P(dp),
-            "label": P(dp)}
-
-
-# ------------------------------------------------------------------ gnn ---
-def gnn_param_specs(params):
-    return {
-        "layers": [
-            {"w_self": P(None, None), "w_neigh": P(None, None), "b": P(None)}
-            for _ in params["layers"]
-        ],
-        "cls": P(None, None),
-    }
 
 
 # ------------------------------------------------------------------ icd ---

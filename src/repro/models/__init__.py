@@ -1,6 +1,5 @@
-"""Architecture zoo: LM transformers, recsys rankers, GNN.
-
-All models are config-driven pure-function modules over explicit parameter
-pytrees (init / apply / train-loss / serve paths) so the same definitions
-drive CPU smoke tests, the multi-pod dry-run and the roofline benches.
+"""Sharding-hint DSL (``models/hints.py``): constraint/hint annotations
+usable by any model code. The LM/RecSys/GNN architecture zoo that used
+to live here was retired — the paper's own k-separable models are
+``repro.core.models``.
 """

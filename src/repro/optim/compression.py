@@ -5,6 +5,12 @@
 accumulates the quantization residual locally so the compressed SGD
 trajectory converges to the uncompressed one.
 
+The quantizer itself is the shared symmetric-int8 code in
+:mod:`repro.core.quant` (one scale-fitting rule for gradients here and for
+quantized ψ serving storage in ``serve/ann.py``); this module re-exports it
+under the historical ``int8_compress``/``int8_decompress`` names and keeps
+the error-feedback state machine.
+
 Usage inside a shard_map'd step:
 
     g_q, scale = int8_compress(g + err)
@@ -14,22 +20,15 @@ Usage inside a shard_map'd step:
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 
-
-def int8_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
-    absmax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
-    scale = (absmax / 127.0).astype(jnp.float32)
-    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+from repro.core.quant import (  # noqa: F401  (re-exported compat names)
+    int8_dequantize as int8_decompress,
+    int8_dequantize_rows,
+    int8_quantize as int8_compress,
+    int8_quantize_rows,
+)
 
 
 def ef_compress_update(g: jax.Array, err: jax.Array):

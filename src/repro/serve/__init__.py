@@ -1,6 +1,15 @@
 """Online retrieval serving: single-device engine, sharded cluster,
-fault-tolerant replicated mesh, request micro-batching, and live ψ publish
-from training (see serve/README.md for the operations guide)."""
+fault-tolerant replicated mesh, request micro-batching, live ψ publish
+from training, and the IVF approximate tier with quantized ψ storage
+(see serve/README.md for the operations guide)."""
+from repro.serve.ann import (  # noqa: F401
+    AnnConfig,
+    PsiIndex,
+    build_shard_indexes,
+    fold_delta_indexes,
+    ivf_cluster_topk,
+    kmeans,
+)
 from repro.serve.batcher import MicroBatcher  # noqa: F401
 from repro.serve.cluster import (  # noqa: F401
     PsiShardSet,

@@ -437,6 +437,8 @@ class ShardedRetrievalCluster:
         block_items: Optional[int] = None,
         devices: Optional[Sequence] = None,
         psi_table: Optional[jax.Array] = None,
+        retrieval: str = "exact",
+        ann=None,                                  # serve.ann.AnnConfig
     ):
         from repro.serve.publish import VersionedTable
 
@@ -445,6 +447,11 @@ class ShardedRetrievalCluster:
         self.k = int(k)
         self.block_items = block_items
         self.devices = devices
+        if retrieval not in ("exact", "ivf"):
+            raise ValueError(f"retrieval must be 'exact' or 'ivf', got {retrieval!r}")
+        self.retrieval = retrieval
+        self.ann = ann
+        self._ivf: dict = {}      # table version → per-shard PsiIndex tuple
         self._table = VersionedTable()
         if psi_table is not None:
             self.publish(psi_table)
@@ -466,11 +473,49 @@ class ShardedRetrievalCluster:
         live under a normal version bump — no model re-export, in-flight
         readers keep their snapshot, and the version key invalidates the
         request cache exactly like a full publish. Appends (ids ≥ n_items)
-        grow the catalogue. Returns the new version."""
+        grow the catalogue. Returns the new version.
+
+        With ``retrieval='ivf'`` the delta also FOLDS into the live
+        per-shard indexes (each changed row re-quantizes in place; each
+        appended row joins its nearest cluster) instead of re-running
+        k-means per delta; every fold bumps the index staleness counter and
+        a shard past ``ann.reindex_after`` rebuilds from the new table
+        (``serve.ann.fold_delta_indexes``). A delta that changes the shard
+        GEOMETRY (rows_per growth) falls back to lazy full reindex."""
         from repro.serve.publish import apply_delta, dense_table
 
-        base = dense_table(self.table)
-        return self.publish(jnp.asarray(apply_delta(base, rows, ids)))
+        old_table = self.table
+        old_indexes = self._ivf.get(old_table.version)
+        base = dense_table(old_table)
+        version = self.publish(jnp.asarray(apply_delta(base, rows, ids)))
+        if self.retrieval == "ivf" and old_indexes is not None:
+            from repro.serve.ann import fold_delta_indexes
+
+            new_table = self.table
+            if (new_table.rows_per == old_table.rows_per
+                    and new_table.n_shards == old_table.n_shards):
+                self._ivf = {version: fold_delta_indexes(
+                    old_indexes, new_table, rows, ids, self._ann_cfg()
+                )}
+        return version
+
+    def _ann_cfg(self):
+        from repro.serve.ann import AnnConfig
+
+        return self.ann or AnnConfig()
+
+    def _ivf_indexes(self, table: PsiShardSet):
+        """Per-shard IVF indexes for one table snapshot, built lazily and
+        memoized on the publish version (an index is a pure function of
+        its snapshot; a publish invalidates implicitly, like the request
+        cache). Only the latest version's indexes are retained."""
+        cached = self._ivf.get(table.version)
+        if cached is None:
+            from repro.serve.ann import build_shard_indexes
+
+            cached = build_shard_indexes(table, self._ann_cfg())
+            self._ivf = {table.version: cached}
+        return cached
 
     @property
     def table(self) -> PsiShardSet:
@@ -514,7 +559,13 @@ class ShardedRetrievalCluster:
         exclude_ids: Optional[jax.Array] = None,
         mesh=None,
     ) -> TopKResult:
-        """Like :meth:`topk` from pre-built φ rows (batcher / eval path)."""
+        """Like :meth:`topk` from pre-built φ rows (batcher / eval path).
+
+        ``retrieval='ivf'`` routes through the per-shard IVF indexes
+        (``serve/ann.py``): each shard prunes to its configured ``n_probe``
+        cluster blocks and re-ranks them with the exact fused kernel; the
+        cross-shard merge is unchanged. The shard_map path stays exact-only
+        (an index is host-driven block dispatch, not a flat-mesh program)."""
         table = self.table  # ONE snapshot: version-consistent whole request
         k = k or self.k
         if mesh is not None:
@@ -523,9 +574,26 @@ class ShardedRetrievalCluster:
                     "the shard_map path takes exclude_ids (global id lists),"
                     " not a dense exclude_mask"
                 )
+            if self.retrieval == "ivf":
+                raise ValueError(
+                    "retrieval='ivf' serves through the host-loop path; "
+                    "the shard_map path is exact-only"
+                )
             return shard_map_topk(
                 mesh, table, phi_rows, k, exclude_ids=exclude_ids,
                 block_items=self.block_items,
+            )
+        if self.retrieval == "ivf":
+            if exclude_mask is not None:
+                raise ValueError(
+                    "retrieval='ivf' takes exclude_ids (global id lists), "
+                    "not a dense exclude_mask"
+                )
+            from repro.serve.ann import ivf_cluster_topk
+
+            return ivf_cluster_topk(
+                table, self._ivf_indexes(table), phi_rows, k,
+                exclude_ids=exclude_ids,
             )
         return cluster_topk(
             table, phi_rows, k, exclude_mask=exclude_mask,

@@ -136,6 +136,8 @@ class RetrievalEngine:
         *,
         k: int = 100,
         block_items: Optional[int] = None,
+        retrieval: str = "exact",
+        ann=None,                                  # serve.ann.AnnConfig
     ):
         self.psi = jnp.asarray(psi_table, jnp.float32)
         self.phi_fn = phi_fn
@@ -143,6 +145,19 @@ class RetrievalEngine:
         self.block_items = block_items
         self.model = None   # set by from_model: enables fold_in_phi
         self._params = None
+        if retrieval not in ("exact", "ivf"):
+            raise ValueError(f"retrieval must be 'exact' or 'ivf', got {retrieval!r}")
+        self.retrieval = retrieval
+        self.index = None
+        if retrieval == "ivf":
+            # the engine's ψ is fixed at construction, so the IVF tier
+            # (serve/ann.py) indexes it once, eagerly
+            from repro.serve.ann import AnnConfig, PsiIndex
+
+            self.ann = ann or AnnConfig()
+            self.index = PsiIndex.build(self.psi, self.ann)
+        else:
+            self.ann = ann
 
     @classmethod
     def from_model(
@@ -152,6 +167,8 @@ class RetrievalEngine:
         *,
         k: int = 100,
         block_items: Optional[int] = None,
+        retrieval: str = "exact",
+        ann=None,
     ) -> "RetrievalEngine":
         """Build an engine from a :class:`repro.core.models.api.Model`
         adapter — the unified construction path (no per-model signature
@@ -172,7 +189,7 @@ class RetrievalEngine:
             lambda *query: model.build_phi(
                 params, query[0] if len(query) == 1 else query
             ),
-            k=k, block_items=block_items,
+            k=k, block_items=block_items, retrieval=retrieval, ann=ann,
         )
         eng.model = model
         eng._params = params
@@ -224,7 +241,26 @@ class RetrievalEngine:
         exclude_ids: Optional[jax.Array] = None,
     ) -> TopKResult:
         """Like :meth:`topk` but from pre-built φ rows (the eval harness
-        path, which batches a big φ matrix through here)."""
+        path, which batches a big φ matrix through here).
+
+        ``retrieval='ivf'`` routes through the engine's
+        :class:`~repro.serve.ann.PsiIndex` (centroid pruning + exact fused
+        re-rank over the probed blocks); with ``ann.n_probe >=
+        ann.n_clusters`` the index's oracle gate makes this bit-identical
+        to the exact path. The IVF tier takes the web-scale ``exclude_ids``
+        form only — the dense mask is indexed by catalogue position, which
+        an approximate tier must not depend on."""
+        if self.retrieval == "ivf":
+            if exclude_mask is not None:
+                raise ValueError(
+                    "retrieval='ivf' takes exclude_ids (global id lists), "
+                    "not a dense exclude_mask"
+                )
+            s, i = self.index.topk(
+                phi_rows, k or self.k, exclude_ids=exclude_ids,
+                block_items=self.block_items,
+            )
+            return TopKResult(s, i)
         s, i = topk_score(
             phi_rows, self.psi, k or self.k, exclude_mask,
             exclude_ids=exclude_ids, block_items=self.block_items,

@@ -396,9 +396,16 @@ class FaultTolerantRetrievalMesh:
         clock: Callable[[], float] = time.monotonic,
         sleep: Optional[Callable[[float], None]] = None,
         psi_table: Optional[jax.Array] = None,
+        retrieval: str = "exact",
+        ann=None,                                  # serve.ann.AnnConfig
     ):
         from repro.serve.publish import VersionedTable
 
+        if retrieval not in ("exact", "ivf"):
+            raise ValueError(f"retrieval must be 'exact' or 'ivf', got {retrieval!r}")
+        self.retrieval = retrieval
+        self.ann = ann
+        self._ivf: Dict[int, tuple] = {}   # table version → per-shard indexes
         self.phi_fn = phi_fn
         self.n_shards = int(n_shards)
         self.n_replicas = int(n_replicas)
@@ -451,8 +458,41 @@ class FaultTolerantRetrievalMesh:
                 "cannot delta-publish with a canary staged — promote or "
                 "roll it back first"
             )
-        base = dense_table(self.table)
-        return self.publish(jnp.asarray(apply_delta(base, rows, ids)))
+        old_table = self.table
+        old_indexes = self._ivf.get(old_table.version)
+        base = dense_table(old_table)
+        version = self.publish(jnp.asarray(apply_delta(base, rows, ids)))
+        if self.retrieval == "ivf" and old_indexes is not None:
+            # fold the delta into the live indexes (nearest-cluster append,
+            # staleness-counted; see serve/ann.py) instead of re-running
+            # k-means per delta — unless the shard geometry changed
+            from repro.serve.ann import fold_delta_indexes
+
+            new_table = self.table
+            if (new_table.rows_per == old_table.rows_per
+                    and new_table.n_shards == old_table.n_shards):
+                self._ivf = {version: fold_delta_indexes(
+                    old_indexes, new_table, rows, ids, self._ann_cfg()
+                )}
+        return version
+
+    def _ann_cfg(self):
+        from repro.serve.ann import AnnConfig
+
+        return self.ann or AnnConfig()
+
+    def _ivf_indexes(self, table: PsiShardSet) -> tuple:
+        """Per-shard IVF indexes for one snapshot, lazily built and keyed
+        on the publish version. Shared by every replica of a shard — the
+        index is a function of the shard's CONTENT, which replicas mirror
+        bit-exactly, so failover never changes the index either."""
+        cached = self._ivf.get(table.version)
+        if cached is None:
+            from repro.serve.ann import build_shard_indexes
+
+            cached = build_shard_indexes(table, self._ann_cfg())
+            self._ivf = {table.version: cached}
+        return cached
 
     @property
     def replica_set(self) -> ReplicaSet:
@@ -534,8 +574,18 @@ class FaultTolerantRetrievalMesh:
         k = k or self.k
         phi_rows = jnp.asarray(phi_rows, jnp.float32)
         b = int(phi_rows.shape[0])
+        indexes = None
         block_items = self.block_items
-        if block_items is None:
+        if self.retrieval == "ivf":
+            if exclude_mask is not None:
+                raise ValueError(
+                    "retrieval='ivf' takes exclude_ids (global id lists), "
+                    "not a dense exclude_mask"
+                )
+            # IVF dispatch resolves its own per-block tiling; the replica
+            # failover/retry/health machinery below is retrieval-agnostic
+            indexes = self._ivf_indexes(table)
+        elif block_items is None:
             excl_l = 0 if exclude_ids is None else int(exclude_ids.shape[1])
             block_items = resolve_cluster_block_items(
                 table, b, k, excl_l=excl_l
@@ -546,7 +596,7 @@ class FaultTolerantRetrievalMesh:
         for s in range(table.n_shards):
             out = self._query_shard(
                 rs, s, phi_rows, k, exclude_mask, exclude_ids,
-                block_items, budget,
+                block_items, budget, indexes=indexes,
             )
             if out is None:
                 dead.append(s)
@@ -570,10 +620,13 @@ class FaultTolerantRetrievalMesh:
 
     # ----------------------------------------------------------- internals
     def _query_shard(self, rs, s, phi_rows, k, exclude_mask, exclude_ids,
-                     block_items, budget):
+                     block_items, budget, indexes=None):
         """One shard's dispatch with failover + bounded deadline-aware
         retries. Returns (scores, ids) or None (shard unavailable for this
-        request — the degradation path)."""
+        request — the degradation path). ``indexes`` (IVF mode) swaps the
+        exact slab sweep for the shard's index dispatch; every replica of
+        a shard shares the index (replicas are bit-exact content copies),
+        so the fault/stale/latency machinery wraps both paths identically."""
         spent = 0.0       # latency burned: real + injected + backoff
         attempt = 0
         while attempt < self.retry.max_attempts:
@@ -592,11 +645,19 @@ class FaultTolerantRetrievalMesh:
                         f"replica ({s}, {rep.idx}) serves table v"
                         f"{rep.version}, live is v{rs.version}"
                     )
-                ss, ii = shard_topk(
-                    rs.table, s, phi_rows, k, slab=rep.slab,
-                    exclude_mask=exclude_mask, exclude_ids=exclude_ids,
-                    block_items=block_items,
-                )
+                if indexes is not None:
+                    if indexes[s] is None:   # shard owns no valid rows
+                        ss, ii = empty_topk(int(phi_rows.shape[0]), k)
+                    else:
+                        ss, ii = indexes[s].topk(
+                            phi_rows, k, exclude_ids=exclude_ids,
+                        )
+                else:
+                    ss, ii = shard_topk(
+                        rs.table, s, phi_rows, k, slab=rep.slab,
+                        exclude_mask=exclude_mask, exclude_ids=exclude_ids,
+                        block_items=block_items,
+                    )
                 lat = self.clock() - t0
                 self.monitor.observe(rep.key, lat)
                 rep.served += 1

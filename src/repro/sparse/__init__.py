@@ -2,7 +2,7 @@
 
 JAX has no native EmbeddingBag or CSR/CSC sparse support (BCOO only) — the
 gather + ``jax.ops.segment_sum`` implementations here ARE part of the system,
-used by the iCD core, the recsys zoo and the GNN message passing.
+used by the iCD core and the data pipeline.
 """
 
 from repro.sparse.csr import CSR, coo_to_csr, csr_row_ids

@@ -62,7 +62,7 @@ def neighbor_sampler(
     the seeds and ``layer_h`` has shape ``(n_seeds * prod(fanouts[:h]),)`` —
     the flattened h-hop frontier. ``layer_h[i*fanout_h + j]`` is the j-th
     sampled neighbor of ``layer_{h-1}[i]``, so mean-aggregation is a reshape
-    + mean along the fanout axis (see ``repro.models.graphsage``).
+    + mean along the fanout axis.
     """
     frontiers = [seeds]
     frontier = seeds

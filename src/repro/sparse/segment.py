@@ -3,7 +3,7 @@
 ``jax.ops.segment_sum`` is the TPU-native scatter-reduce; EmbeddingBag is a
 ragged gather over a (vocab, dim) table followed by a segment reduce. These
 are the hot primitives of both the iCD solver (column sweeps reduce over the
-observed-interaction CSR) and the recsys zoo (multi-hot feature lookup).
+observed-interaction CSR) and multi-hot feature lookups.
 """
 from __future__ import annotations
 
@@ -53,8 +53,6 @@ def embedding_bag(
     Returns:
       (n_rows, dim).
 
-    This is the pure-JAX path; ``repro.kernels.embedding_bag`` provides the
-    Pallas TPU kernel with the same contract.
     """
     gathered = jnp.take(table, ids, axis=0)
     if weights is not None:

@@ -1,2 +1,2 @@
-from repro.train.train_step import TrainState, build_lm_train_step  # noqa: F401
+from repro.train.train_step import TrainState, build_train_step  # noqa: F401
 from repro.train.trainer import Trainer  # noqa: F401

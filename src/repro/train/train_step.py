@@ -80,15 +80,3 @@ def build_train_step(
         return new_state, {"loss": loss, "grad_norm": gnorm}
 
     return step
-
-
-def build_lm_train_step(cfg, optimizer: OptimizerDef, compute_dtype=jnp.bfloat16):
-    from repro.models import transformer as T
-
-    def loss(params, batch):
-        return T.loss_fn(cfg, params, batch["tokens"], batch["targets"],
-                         compute_dtype=compute_dtype)
-
-    return build_train_step(
-        loss, optimizer, num_microbatches=cfg.num_microbatches
-    )

@@ -1,172 +1,11 @@
-"""Model-zoo smoke tests + the iCD config registry.
+"""iCD config registry smoke tests.
 
-The seed-template LM/RecSys/GNN CONFIG modules were removed (PR 4 — they
-belonged to another paper's template); the model code they exercised stays,
-so these smoke tests build reduced inline configs from the shared
-``configs.base`` dataclasses instead of the registry. The registry itself
-now only carries the paper's own iCD configs.
+The seed-template LM/RecSys/GNN zoo (configs, models, smoke tests) was
+retired — the registry carries only the paper's own iCD configs.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from _smoke_configs import GNN_SMOKE, LM_SMOKE, RECSYS_SMOKE
-
 from repro.configs import ARCH_IDS, get_config, get_shapes, get_smoke_config
-
-
-def _finite(tree) -> bool:
-    return all(bool(jnp.isfinite(x).all()) for x in jax.tree_util.tree_leaves(tree)
-               if jnp.issubdtype(x.dtype, jnp.floating))
-
-
-# ------------------------------------------------------------------ LM ----
-@pytest.mark.parametrize("arch", sorted(LM_SMOKE))
-def test_lm_smoke_forward_and_train_step(arch):
-    from repro.models import transformer as T
-
-    cfg = LM_SMOKE[arch]
-    key = jax.random.PRNGKey(0)
-    params = T.init_params(key, cfg)
-    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
-
-    logits, aux = T.forward(cfg, params, toks, compute_dtype=jnp.float32)
-    assert logits.shape == (2, 16, cfg.vocab)
-    assert bool(jnp.isfinite(logits).all())
-
-    loss, grads = jax.value_and_grad(
-        lambda p: T.loss_fn(cfg, p, toks, toks, compute_dtype=jnp.float32)
-    )(params)
-    assert bool(jnp.isfinite(loss))
-    assert _finite(grads)
-
-
-@pytest.mark.parametrize("arch", sorted(LM_SMOKE))
-def test_lm_smoke_decode_step(arch):
-    from repro.models import transformer as T
-
-    cfg = LM_SMOKE[arch]
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    cache = T.init_cache(cfg, 2, 32, dtype=jnp.float32)
-    tok = jnp.zeros((2, 1), jnp.int32)
-    logits, cache = T.decode_step(cfg, params, cache, tok, jnp.int32(0),
-                                  compute_dtype=jnp.float32)
-    assert logits.shape == (2, 1, cfg.vocab)
-    assert bool(jnp.isfinite(logits).all())
-
-
-# -------------------------------------------------------------- recsys ----
-def _recsys_batch(cfg, rng, batch=8):
-    if cfg.kind in ("dlrm", "dcn"):
-        return {
-            "dense": jnp.asarray(rng.normal(size=(batch, cfg.n_dense)), jnp.float32),
-            "sparse": jnp.asarray(
-                rng.integers(0, min(cfg.table_vocabs), size=(batch, cfg.n_sparse)),
-                jnp.int32),
-            "label": jnp.asarray(rng.integers(0, 2, batch), jnp.float32),
-        }
-    return {
-        "hist": jnp.asarray(
-            rng.integers(0, cfg.item_vocab, size=(batch, cfg.seq_len)), jnp.int32),
-        "mask": jnp.asarray(rng.integers(0, 2, (batch, cfg.seq_len)), jnp.float32),
-        "target": jnp.asarray(rng.integers(0, cfg.item_vocab, batch), jnp.int32),
-        "label": jnp.asarray(rng.integers(0, 2, batch), jnp.float32),
-    }
-
-
-def _recsys_module(cfg):
-    from repro.models import bst, dcn, din, dlrm
-
-    return {"dlrm": dlrm, "dcn": dcn, "din": din, "bst": bst}[cfg.kind]
-
-
-@pytest.mark.parametrize("kind", sorted(RECSYS_SMOKE))
-def test_recsys_smoke_train_step(kind):
-    cfg = RECSYS_SMOKE[kind]
-    mod = _recsys_module(cfg)
-    rng = np.random.default_rng(0)
-    params = mod.init_params(jax.random.PRNGKey(0), cfg)
-    batch = _recsys_batch(cfg, rng)
-    loss, grads = jax.value_and_grad(lambda p: mod.loss_fn(cfg, p, batch))(params)
-    assert bool(jnp.isfinite(loss))
-    assert _finite(grads)
-
-
-@pytest.mark.parametrize("kind", sorted(RECSYS_SMOKE))
-def test_recsys_smoke_retrieval(kind):
-    cfg = RECSYS_SMOKE[kind]
-    mod = _recsys_module(cfg)
-    rng = np.random.default_rng(1)
-    params = mod.init_params(jax.random.PRNGKey(0), cfg)
-    n_cand = 50
-    if cfg.kind in ("dlrm", "dcn"):
-        cand = jnp.asarray(rng.integers(0, cfg.table_vocabs[0], n_cand), jnp.int32)
-        scores = mod.score_candidates(
-            cfg, params,
-            jnp.asarray(rng.normal(size=(1, cfg.n_dense)), jnp.float32),
-            jnp.asarray(rng.integers(0, min(cfg.table_vocabs), (1, cfg.n_sparse)), jnp.int32),
-            cand,
-        )
-    else:
-        cand = jnp.asarray(rng.integers(0, cfg.item_vocab, n_cand), jnp.int32)
-        scores = mod.score_candidates(
-            cfg, params,
-            jnp.asarray(rng.integers(0, cfg.item_vocab, (1, cfg.seq_len)), jnp.int32),
-            jnp.ones((1, cfg.seq_len), jnp.float32),
-            cand,
-        )
-    assert scores.shape == (n_cand,)
-    assert bool(jnp.isfinite(scores).all())
-
-
-# ----------------------------------------------------------------- gnn ----
-def test_gnn_smoke_full_and_minibatch_and_batched():
-    from repro.models import graphsage as G
-    from repro.sparse import build_adjacency, neighbor_sampler
-
-    cfg = GNN_SMOKE
-    rng = np.random.default_rng(0)
-    n, d_feat = 60, 12
-    params = G.init_params(jax.random.PRNGKey(0), cfg, d_feat)
-    feats = jnp.asarray(rng.normal(size=(n, d_feat)), jnp.float32)
-    src = rng.integers(0, n, 240)
-    dst = rng.integers(0, n, 240)
-    edges = jnp.asarray(np.stack([src, dst], 1), jnp.int32)
-    labels = jnp.asarray(rng.integers(0, cfg.n_classes, n), jnp.int32)
-
-    # full-batch
-    logits, h = G.forward_full(cfg, params, feats, edges)
-    assert logits.shape == (n, cfg.n_classes)
-    loss, grads = jax.value_and_grad(
-        lambda p: G.ce_loss(G.forward_full(cfg, p, feats, edges)[0], labels)
-    )(params)
-    assert bool(jnp.isfinite(loss)) and _finite(grads)
-
-    # minibatch via the real sampler
-    adj = build_adjacency(src, dst, n)
-    seeds = jnp.asarray(rng.integers(0, n, 8), jnp.int32)
-    frontiers = neighbor_sampler(jax.random.PRNGKey(1), adj, seeds,
-                                 cfg.sample_sizes)
-    f_feats = [jnp.take(feats, f, axis=0) for f in frontiers]
-    logits_mb, _ = G.forward_minibatch(cfg, params, f_feats)
-    assert logits_mb.shape == (8, cfg.n_classes)
-    assert bool(jnp.isfinite(logits_mb).all())
-
-    # batched small graphs
-    bg_feats = jnp.asarray(rng.normal(size=(5, 7, d_feat)), jnp.float32)
-    adj_d = jnp.asarray(rng.random((5, 7, 7)) < 0.4, jnp.float32)
-    adj_d = adj_d / jnp.maximum(adj_d.sum(-1, keepdims=True), 1)
-    logits_b, _ = G.forward_batched(cfg, params, bg_feats, adj_d)
-    assert logits_b.shape == (5, cfg.n_classes)
-
-    # iCD link loss (Lemma-2 exact negatives) matches brute force
-    z = jnp.asarray(rng.normal(size=(n, 6)), jnp.float32)
-    got = G.icd_link_loss(z, edges, alpha0=0.2)
-    s = z @ z.T
-    pos = jnp.sum((jnp.sum(jnp.take(z, edges[:, 0], 0) * jnp.take(z, edges[:, 1], 0), -1) - 1) ** 2)
-    expect = pos + 0.2 * jnp.sum(s * s)
-    np.testing.assert_allclose(got, expect, rtol=1e-4)
 
 
 # ------------------------------------------------------------- iCD own ----

@@ -25,11 +25,6 @@ from repro.kernels.cd_sweep.ref import (
 )
 from repro.kernels.cd_update.kernel import cd_column_update_pallas
 from repro.kernels.cd_update.ref import cd_column_update_ref
-from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
-from repro.kernels.embedding_bag.ref import embedding_bag_ref
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
-from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gram.kernel import gram_pallas
 from repro.kernels.gram.ref import gram_ref
 
@@ -359,105 +354,3 @@ def test_cd_sweep_gather_full_sweep_matches_per_column():
 
     np.testing.assert_allclose(w_got, w_ref, rtol=2e-5, atol=2e-6)
     np.testing.assert_allclose(e_got, e_ref, rtol=2e-5, atol=2e-6)
-
-
-# ------------------------------------------------------- embedding_bag ----
-@pytest.mark.parametrize("v,d,b,bag", [(1000, 16, 64, 1), (300, 64, 128, 8),
-                                       (2048, 128, 100, 26), (513, 20, 33, 3)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_embedding_bag_kernel_sweep(v, d, b, bag, dtype):
-    key = jax.random.PRNGKey(v + b)
-    ks = jax.random.split(key, 3)
-    table = jax.random.normal(ks[0], (v, d), dtype)
-    ids = jax.random.randint(ks[1], (b, bag), 0, v)
-    weights = jax.random.uniform(ks[2], (b, bag))
-    weights = weights * (weights > 0.2)  # some padding zeros
-    got = embedding_bag_pallas(
-        table, ids, weights, block_batch=64, block_vocab=256, interpret=True
-    )
-    expect = embedding_bag_ref(table, ids, weights)
-    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
-    np.testing.assert_allclose(
-        got.astype(jnp.float32), expect.astype(jnp.float32), rtol=tol, atol=tol
-    )
-
-
-# ----------------------------------------------------- flash_attention ----
-@pytest.mark.parametrize("sq,skv,d", [(128, 128, 64), (256, 512, 128), (96, 160, 64)])
-@pytest.mark.parametrize("causal", [True, False])
-def test_flash_attention_basic(sq, skv, d, causal):
-    if causal and sq > skv:
-        pytest.skip("causal needs skv >= sq here")
-    key = jax.random.PRNGKey(sq + skv)
-    ks = jax.random.split(key, 3)
-    q = jax.random.normal(ks[0], (sq, d))
-    k = jax.random.normal(ks[1], (skv, d))
-    v = jax.random.normal(ks[2], (skv, d))
-    off = skv - sq if causal else 0
-    got = flash_attention_pallas(
-        q, k, v, causal=causal, q_offset=off, block_q=64, block_kv=64,
-        interpret=True,
-    )
-    expect = attention_ref(q, k, v, causal=causal, q_offset=off)
-    np.testing.assert_allclose(got, expect, rtol=2e-4, atol=2e-5)
-
-
-@pytest.mark.parametrize("window,softcap", [(64, None), (None, 30.0), (32, 50.0)])
-def test_flash_attention_window_softcap(window, softcap):
-    key = jax.random.PRNGKey(7)
-    ks = jax.random.split(key, 3)
-    sq = skv = 256
-    q = jax.random.normal(ks[0], (sq, 64))
-    k = jax.random.normal(ks[1], (skv, 64))
-    v = jax.random.normal(ks[2], (skv, 64))
-    got = flash_attention_pallas(
-        q, k, v, causal=True, window=window, softcap=softcap,
-        block_q=64, block_kv=64, interpret=True,
-    )
-    expect = attention_ref(q, k, v, causal=True, window=window, softcap=softcap)
-    np.testing.assert_allclose(got, expect, rtol=2e-4, atol=2e-5)
-
-
-def test_flash_attention_decode_shape():
-    """Decode: Sq=1 against a long KV cache with q_offset=kv_len-1."""
-    key = jax.random.PRNGKey(9)
-    ks = jax.random.split(key, 3)
-    skv, d = 1024, 128
-    q = jax.random.normal(ks[0], (1, d))
-    k = jax.random.normal(ks[1], (skv, d))
-    v = jax.random.normal(ks[2], (skv, d))
-    got = flash_attention_pallas(
-        q, k, v, causal=True, q_offset=skv - 1, kv_len=900,
-        block_q=8, block_kv=128, interpret=True,
-    )
-    expect = attention_ref(q, k, v, causal=True, q_offset=skv - 1, kv_len=900)
-    np.testing.assert_allclose(got, expect, rtol=2e-4, atol=2e-5)
-
-
-def test_flash_attention_gqa_batched():
-    """ops.py wrapper: batch=2, 8 q heads over 2 kv heads."""
-    key = jax.random.PRNGKey(11)
-    ks = jax.random.split(key, 3)
-    b, hq, hkv, s, d = 2, 8, 2, 128, 64
-    q = jax.random.normal(ks[0], (b, hq, s, d))
-    k = jax.random.normal(ks[1], (b, hkv, s, d))
-    v = jax.random.normal(ks[2], (b, hkv, s, d))
-    got = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
-    for bi in range(b):
-        for h in range(hq):
-            expect = attention_ref(q[bi, h], k[bi, h // 4], v[bi, h // 4], causal=True)
-            np.testing.assert_allclose(got[bi, h], expect, rtol=3e-4, atol=3e-5)
-
-
-def test_flash_attention_bf16():
-    key = jax.random.PRNGKey(13)
-    ks = jax.random.split(key, 3)
-    q = jax.random.normal(ks[0], (128, 64), jnp.bfloat16)
-    k = jax.random.normal(ks[1], (128, 64), jnp.bfloat16)
-    v = jax.random.normal(ks[2], (128, 64), jnp.bfloat16)
-    got = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_kv=64,
-                                 interpret=True)
-    expect = attention_ref(q, k, v, causal=True)
-    np.testing.assert_allclose(
-        got.astype(jnp.float32), expect.astype(jnp.float32), rtol=3e-2, atol=3e-2
-    )
