@@ -105,6 +105,16 @@ def roofline(quick):
     }
 
 
+def grid(quick):
+    """Model × confidence × context experiments grid: trains every cell on
+    the MovieLens-class log, streams Recall/NDCG through eval/ranking, and
+    hard-gates weighted parity + the frequency/context quality wins;
+    results merge into BENCH_cd_sweep.json under ``quality``."""
+    from benchmarks.experiments import run_grid
+
+    return run_grid(quick=quick)
+
+
 def continual(quick):
     """Continual-learning gates: fold-in parity (all zoo models + the mesh
     round-trip), full-schedule bit equivalence, delta-publish semantics,
@@ -124,11 +134,12 @@ FIGURES = {
     "cd_sweep": cd_sweep,
     "serve": serve,
     "continual": continual,
+    "grid": grid,
     "roofline": roofline,
 }
 
 # dataset-free, seconds-fast subset — the smoke gate for CI / pre-commit
-QUICK_SET = ("kernels", "cd_sweep", "serve", "continual", "roofline")
+QUICK_SET = ("kernels", "cd_sweep", "serve", "continual", "grid", "roofline")
 
 
 def main() -> None:

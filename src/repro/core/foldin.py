@@ -36,7 +36,7 @@ class FoldInResult(NamedTuple):
     delta_max: float      # last sweep's max |Δθ| (convergence certificate)
 
 
-def _prepare(table, ids, y, alpha, free, init):
+def _prepare(table, ids, y, alpha, free, init, weights=None):
     table = np.asarray(table, np.float32)
     n, d = table.shape
     ids = np.asarray(ids, np.int64).reshape(-1)
@@ -49,6 +49,13 @@ def _prepare(table, ids, y, alpha, free, init):
     )
     if y.shape != ids.shape or alpha.shape != ids.shape:
         raise ValueError("y/alpha must match ids shape")
+    if weights is not None:
+        # per-interaction confidence folds into α exactly (α is purely
+        # multiplicative in the explicit parts of the row subproblem)
+        weights = np.asarray(weights, np.float32)
+        if weights.shape != ids.shape:
+            raise ValueError("weights must match ids shape")
+        alpha = alpha * weights
     free = np.ones(d, bool) if free is None else np.asarray(free, bool)
     if free.shape != (d,):
         raise ValueError(f"free mask must be ({d},), got {free.shape}")
@@ -69,6 +76,7 @@ def fold_in_row(
     alpha0: float,
     l2: float,
     eta: float = 1.0,
+    weights=None,
     free=None,
     init=None,
     gram: Optional[np.ndarray] = None,
@@ -86,6 +94,10 @@ def fold_in_row(
     ``y`` / ``alpha`` (m,)
         targets and confidences; default 1 (plain implicit feedback). Feed
         Lemma-1 rescaled values to match a specific training objective.
+    ``weights`` (m,)
+        optional per-interaction confidence weights — multiplied into α
+        (exact: α is purely multiplicative in the explicit parts), the same
+        semantics as the ``weights=`` training epochs.
     ``free`` (D,) bool
         solvable coordinates; fixed ones keep their ``init`` value (FM's
         constant-1 extended columns).
@@ -97,7 +109,9 @@ def fold_in_row(
     rank-1 residual patch — the ``mf._side_sweep`` math with n_rows=1) until
     ``max|Δθ| < tol·(1 + max|θ|)`` or ``n_sweeps`` is hit.
     """
-    table, ids, y, alpha, free, theta = _prepare(table, ids, y, alpha, free, init)
+    table, ids, y, alpha, free, theta = _prepare(
+        table, ids, y, alpha, free, init, weights
+    )
     g = (table.T @ table).astype(np.float32) if gram is None else np.asarray(
         gram, np.float32
     )
@@ -133,6 +147,7 @@ def fold_in_exact(
     *,
     alpha0: float,
     l2: float,
+    weights=None,
     free=None,
     init=None,
 ) -> np.ndarray:
@@ -142,8 +157,11 @@ def fold_in_exact(
     with ``A = Σ α t tᵀ`` and ``b = Σ α y t``; the unique minimizer the CD
     iteration converges to. Uses ``lstsq`` so the λ=0 empty-history corner
     (singular system) returns the minimum-norm solution instead of raising.
+    ``weights`` multiplies α like :func:`fold_in_row`.
     """
-    table, ids, y, alpha, free, theta = _prepare(table, ids, y, alpha, free, init)
+    table, ids, y, alpha, free, theta = _prepare(
+        table, ids, y, alpha, free, init, weights
+    )
     t64 = table.astype(np.float64)
     g = t64.T @ t64
     t_rows = t64[ids]

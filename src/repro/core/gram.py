@@ -17,12 +17,18 @@ import jax
 import jax.numpy as jnp
 
 
-def gram(m: jax.Array, *, implementation: str = "xla") -> jax.Array:
-    """J = mᵀm with fp32 accumulation. m: (rows, k) → (k, k)."""
+def gram(m: jax.Array, *, implementation: str = "xla",
+         weights: jax.Array | None = None) -> jax.Array:
+    """J = mᵀm (or mᵀ·diag(w)·m) with fp32 accumulation. m: (rows, k) → (k, k).
+
+    ``weights=None`` is a trace-time branch: the unweighted program is
+    untouched on every backend."""
     if implementation == "pallas":
         from repro.kernels.gram import ops as gram_ops
 
-        return gram_ops.gram(m)
+        return gram_ops.gram(m, weights=weights)
+    if weights is not None:
+        return weighted_gram(m, weights)
     mf = m.astype(jnp.float32)
     return jnp.dot(mf.T, mf, preferred_element_type=jnp.float32)
 

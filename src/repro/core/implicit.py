@@ -24,6 +24,36 @@ def rescale_observed(y: jax.Array, alpha: jax.Array, alpha0: float) -> Tuple[jax
     return alpha / (alpha - alpha0) * y, alpha - alpha0
 
 
+def frequency_confidence(
+    count, *, beta: float = 1.0, mode: str = "linear", eps: float = 1.0
+):
+    """Hu et al. 2008 confidence from interaction frequency.
+
+    ``linear``: α = 1 + β·count       (eq. 2 of Hu et al.)
+    ``log``:    α = 1 + β·log(1 + count/ε)   (their eq. 3 variant)
+
+    Returns the RAW observed confidence α (α > 1 for count > 0) — feed it to
+    :func:`~repro.sparse.interactions.build_interactions` which applies the
+    Lemma-1 rescale (ᾱ = α−α₀) for any α₀ < 1; or divide by a baseline α to
+    obtain a relative per-interaction weight for the ``weights=`` epoch
+    paths.
+    """
+    count = jnp.asarray(count, jnp.float32)
+    if mode == "linear":
+        return 1.0 + beta * count
+    if mode == "log":
+        return 1.0 + beta * jnp.log1p(count / eps)
+    raise ValueError(f"unknown frequency confidence mode {mode!r}")
+
+
+def confidence_weights(alpha_raw, *, base: float = 1.0):
+    """Per-interaction weights w = α/base for the ``weights=`` epoch paths:
+    training with ``(alpha=base·1, weights=w)`` equals training with
+    ``alpha=α`` directly (α is purely multiplicative in the explicit loss
+    parts — see the kernel ops docstrings)."""
+    return jnp.asarray(alpha_raw, jnp.float32) / base
+
+
 def implicit_regularizer_gram(phi: jax.Array, psi: jax.Array) -> jax.Array:
     """Lemma 2: R(Θ) = Σ_{f,f'} J_C(f,f')·J_I(f,f') in O((|C|+|I|)k²)."""
     j_c = gram(phi)

@@ -51,6 +51,7 @@ from repro.sparse.interactions import Interactions
 __all__ = [
     "Dataset", "Model", "build_model", "MODEL_TYPES",
     "MFModel", "MFSIModel", "FMModel", "PARAFACModel", "TuckerModel",
+    "CtxMFModel",
 ]
 
 
@@ -60,13 +61,21 @@ class Dataset:
 
     ``data``  training interactions (always; fold-in works without it)
     ``x``/``z`` context/item feature designs (MFSI, FM)
-    ``tc``    tensor context pair lists (PARAFAC, Tucker)
+    ``tc``    tensor context pair lists (PARAFAC, Tucker, CtxMF)
+    ``confidence`` optional (nnz,) per-interaction confidence weights in
+    ctx-major nnz order (e.g. from
+    :func:`repro.core.implicit.frequency_confidence` /
+    :func:`~repro.core.implicit.confidence_weights`); threaded as
+    ``weights=`` through every adapter's ``fit``/``epoch`` unless the call
+    overrides it. ``None`` keeps every training program bit-identical to
+    the unweighted one.
     """
 
     data: Optional[Interactions] = None
     x: Optional[Design] = None
     z: Optional[Design] = None
     tc: Optional[TensorContext] = None
+    confidence: Optional[jax.Array] = None
 
     def require(self, *fields: str) -> "Dataset":
         missing = [f for f in fields if getattr(self, f) is None]
@@ -85,18 +94,19 @@ class Model(Protocol):
 
     def init(self, key: jax.Array): ...
     def fit(self, params, *, n_epochs: int, data: Optional[Interactions] = None,
-            callback: Optional[Callable] = None, schedule=None): ...
+            callback: Optional[Callable] = None, schedule=None,
+            weights=None): ...
     def epoch(self, params, e, *, data: Optional[Interactions] = None,
-              schedule=None, sweep_index: int = 0): ...
+              schedule=None, sweep_index: int = 0, weights=None): ...
     def residuals(self, params, *, data: Optional[Interactions] = None): ...
     def objective(self, params, *, data: Optional[Interactions] = None): ...
     def export_psi(self, params): ...
     def build_phi(self, params, query): ...
     def phi_table(self, params): ...
     def fold_in_user(self, params, item_ids, y=None, alpha=None, *,
-                     n_sweeps: int = 64, tol: float = 1e-6): ...
+                     weights=None, n_sweeps: int = 64, tol: float = 1e-6): ...
     def fold_in_item(self, params, ctx_ids, y=None, alpha=None, *,
-                     n_sweeps: int = 64, tol: float = 1e-6): ...
+                     weights=None, n_sweeps: int = 64, tol: float = 1e-6): ...
 
 
 class _ModelBase:
@@ -115,6 +125,12 @@ class _ModelBase:
         self.dataset.require("data")
         return self.dataset.data
 
+    def _weights(self, weights):
+        """Per-interaction confidence for this call: an explicit ``weights``
+        argument wins; otherwise the Dataset's ``confidence`` (None = the
+        bit-identical unweighted program)."""
+        return weights if weights is not None else self.dataset.confidence
+
     # -- fold-in ----------------------------------------------------------
     # Free/fixed masks over the D export coordinates; None = all free.
     def _user_free_init(self):
@@ -127,27 +143,33 @@ class _ModelBase:
         return dict(alpha0=self.hp.alpha0, l2=self.hp.l2, eta=self.hp.eta)
 
     def fold_in_user(self, params, item_ids, y=None, alpha=None, *,
-                     n_sweeps: int = 64, tol: float = 1e-6) -> np.ndarray:
+                     weights=None, n_sweeps: int = 64,
+                     tol: float = 1e-6) -> np.ndarray:
         """Closed-form φ row for an UNSEEN user from its item interactions:
-        single-row CD against the frozen ψ export table. Returns (D,)."""
+        single-row CD against the frozen ψ export table. Returns (D,).
+        ``weights`` (per-interaction confidence, e.g. frequency-derived)
+        multiplies α in the single-row solve — continual learning inherits
+        confidence."""
         free, init = self._user_free_init()
         table = np.asarray(self.export_psi(params))
         res = foldin.fold_in_row(
-            table, item_ids, y, alpha, free=free, init=init,
+            table, item_ids, y, alpha, weights=weights, free=free, init=init,
             n_sweeps=n_sweeps, tol=tol, **self._foldin_hp(),
         )
         return res.row
 
     def fold_in_item(self, params, ctx_ids, y=None, alpha=None, *,
-                     n_sweeps: int = 64, tol: float = 1e-6) -> np.ndarray:
+                     weights=None, n_sweeps: int = 64,
+                     tol: float = 1e-6) -> np.ndarray:
         """Closed-form ψ row for a NEW item from the contexts that touched
         it (ids in the model's ``Interactions.ctx`` space): single-row CD
         against the frozen φ table. Returns (D,) — ready for the serving
-        tier's ``publish_delta``."""
+        tier's ``publish_delta``. ``weights`` multiplies α like
+        :meth:`fold_in_user`."""
         free, init = self._item_free_init()
         table = np.asarray(self.phi_table(params))
         res = foldin.fold_in_row(
-            table, ctx_ids, y, alpha, free=free, init=init,
+            table, ctx_ids, y, alpha, weights=weights, free=free, init=init,
             n_sweeps=n_sweeps, tol=tol, **self._foldin_hp(),
         )
         return res.row
@@ -160,13 +182,16 @@ class MFModel(_ModelBase):
         d = self._data(None)
         return mf.init(key, d.n_ctx, d.n_items, self.hp.k)
 
-    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None):
+    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None,
+            weights=None):
         return mf.fit(params, self._data(data), self.hp, n_epochs,
-                      callback=callback, schedule=schedule)
+                      callback=callback, schedule=schedule,
+                      weights=self._weights(weights))
 
-    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0):
+    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0,
+              weights=None):
         return mf.epoch(params, self._data(data), e, self.hp, schedule,
-                        sweep_index)
+                        sweep_index, self._weights(weights))
 
     def residuals(self, params, *, data=None):
         return mf.residuals(params, self._data(data))
@@ -193,15 +218,18 @@ class MFSIModel(_ModelBase):
     def init(self, key):
         return mfsi.init(key, self.dataset.x.p, self.dataset.z.p, self.hp.k)
 
-    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None):
+    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None,
+            weights=None):
         ds = self.dataset
         return mfsi.fit(params, ds.x, ds.z, self._data(data), self.hp,
-                        n_epochs, callback=callback, schedule=schedule)
+                        n_epochs, callback=callback, schedule=schedule,
+                        weights=self._weights(weights))
 
-    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0):
+    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0,
+              weights=None):
         ds = self.dataset
         return mfsi.epoch(params, ds.x, ds.z, self._data(data), e, self.hp,
-                          schedule, sweep_index)
+                          schedule, sweep_index, self._weights(weights))
 
     def residuals(self, params, *, data=None):
         ds = self.dataset
@@ -230,15 +258,18 @@ class FMModel(_ModelBase):
     def init(self, key):
         return fm.init(key, self.dataset.x.p, self.dataset.z.p, self.hp.k)
 
-    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None):
+    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None,
+            weights=None):
         ds = self.dataset
         return fm.fit(params, ds.x, ds.z, self._data(data), self.hp,
-                      n_epochs, callback=callback, schedule=schedule)
+                      n_epochs, callback=callback, schedule=schedule,
+                      weights=self._weights(weights))
 
-    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0):
+    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0,
+              weights=None):
         ds = self.dataset
         return fm.epoch(params, ds.x, ds.z, self._data(data), e, self.hp,
-                        schedule, sweep_index)
+                        schedule, sweep_index, self._weights(weights))
 
     def residuals(self, params, *, data=None):
         ds = self.dataset
@@ -289,13 +320,17 @@ class PARAFACModel(_ModelBase):
         tc = self.dataset.tc
         return parafac.init(key, tc.n_c1, tc.n_c2, d.n_items, self.hp.k)
 
-    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None):
+    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None,
+            weights=None):
         return parafac.fit(params, self.dataset.tc, self._data(data), self.hp,
-                           n_epochs, callback=callback, schedule=schedule)
+                           n_epochs, callback=callback, schedule=schedule,
+                           weights=self._weights(weights))
 
-    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0):
+    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0,
+              weights=None):
         return parafac.epoch(params, self.dataset.tc, self._data(data), e,
-                             self.hp, schedule, sweep_index)
+                             self.hp, schedule, sweep_index,
+                             self._weights(weights))
 
     def residuals(self, params, *, data=None):
         return parafac.residuals(params, self.dataset.tc, self._data(data))
@@ -327,13 +362,17 @@ class TuckerModel(_ModelBase):
         return tucker.init(key, tc.n_c1, tc.n_c2, d.n_items,
                            self.hp.k1, self.hp.k2, self.hp.k3)
 
-    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None):
+    def fit(self, params, *, n_epochs, data=None, callback=None, schedule=None,
+            weights=None):
         return tucker.fit(params, self.dataset.tc, self._data(data), self.hp,
-                          n_epochs, callback=callback, schedule=schedule)
+                          n_epochs, callback=callback, schedule=schedule,
+                          weights=self._weights(weights))
 
-    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0):
+    def epoch(self, params, e, *, data=None, schedule=None, sweep_index=0,
+              weights=None):
         return tucker.epoch(params, self.dataset.tc, self._data(data), e,
-                            self.hp, schedule, sweep_index)
+                            self.hp, schedule, sweep_index,
+                            self._weights(weights))
 
     def residuals(self, params, *, data=None):
         return tucker.residuals(params, self.dataset.tc, self._data(data))
@@ -353,12 +392,24 @@ class TuckerModel(_ModelBase):
         return tucker.phi(params, self.dataset.tc)
 
 
+class CtxMFModel(PARAFACModel):
+    """Context-aware MF (GFF seasonal/session mode): PARAFAC with
+    ``(c1, c2) = (user, context bucket)``. The query address is a
+    ``(user_ids, bucket_ids)`` pair; ``tc``/``data.ctx`` come from
+    :func:`repro.core.models.ctxmf.build_context`. All training and
+    serving paths are the PARAFAC ones (incl. the fused rowpatch-kernel
+    epoch) — only the naming and data-prep story differ."""
+
+    name = "ctxmf"
+
+
 MODEL_TYPES = {
     "mf": MFModel,
     "mfsi": MFSIModel,
     "fm": FMModel,
     "parafac": PARAFACModel,
     "tucker": TuckerModel,
+    "ctxmf": CtxMFModel,
 }
 
 

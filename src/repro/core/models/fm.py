@@ -49,6 +49,7 @@ from repro.core.implicit import implicit_objective
 from repro.core.models.mf_padded import (
     PaddedInteractions,
     pad_interactions,
+    reweight_padded,
     scatter_ctx_major,
     transfer_ctx_to_item,
     transfer_item_to_ctx,
@@ -451,7 +452,12 @@ def epoch(
     hp: FMHyperParams,
     schedule=None,
     sweep_index: int = 0,
+    weights: Optional[jax.Array] = None,
 ) -> Tuple[FMParams, jax.Array]:
+    # weights (optional, (nnz,) ctx-major): per-interaction confidence folds
+    # into α exactly; None traces the identical unweighted program.
+    if weights is not None:
+        data = dataclasses.replace(data, alpha=data.alpha * weights)
     b, w_lin, w, h_lin, h = params
     pe = phi_ext(params, x, hp)
     se = psi_ext(params, z, hp)
@@ -483,10 +489,13 @@ def epoch_padded(
     pdata: PaddedInteractions,
     e_pad: jax.Array,
     hp: FMHyperParams,
+    weights: Optional[jax.Array] = None,
 ) -> Tuple[FMParams, jax.Array]:
     """Fused iCD epoch over the dual padded layout; carries the ctx-major
     padded residual grid. Same sweep order and fixed point as :func:`epoch`
-    (parity-tested)."""
+    (parity-tested). ``weights`` folds into both padded α grids."""
+    if weights is not None:
+        pdata = reweight_padded(pdata, weights)
     b, w_lin, w, h_lin, h = params
     k_b = sweeps.resolve_block_k(hp.block_k, hp.k)
     pe = phi_ext(params, x, hp)
@@ -540,12 +549,12 @@ def objective(params: FMParams, x: Design, z: Design, data: Interactions,
 
 
 def fit(params, x, z, data, hp, n_epochs, callback=None, refresh_residuals=True,
-        schedule=None):
+        schedule=None, weights=None):
     e = residuals(params, x, z, data, hp)
     for ep in range(n_epochs):
         if refresh_residuals and ep > 0:
             e = residuals(params, x, z, data, hp)  # bound multi-hot drift
-        params, e = epoch(params, x, z, data, e, hp, schedule, ep)
+        params, e = epoch(params, x, z, data, e, hp, schedule, ep, weights)
         if callback is not None:
             callback(ep, params)
     return params

@@ -141,6 +141,7 @@ def epoch(
     hp: MFHyperParams,
     schedule: Optional[sweeps.SweepSchedule] = None,
     sweep_index: int = 0,
+    weights: Optional[jax.Array] = None,
 ) -> Tuple[MFParams, jax.Array]:
     """One iCD epoch: W sweep then H sweep over the scheduled columns.
 
@@ -150,7 +151,15 @@ def epoch(
     :class:`~repro.core.sweeps.SweepSchedule` restricts/reorders the swept
     subspace blocks (``schedule``/``sweep_index`` are static — rotating or
     randomized schedules trace one program per distinct block plan).
+
+    ``weights`` is an optional (nnz,) per-interaction confidence weight in
+    ctx-major order: the observed confidence enters the sweep math purely
+    multiplicatively, so a weighted epoch is EXACTLY an epoch over
+    ``alpha·w`` (the implicit part stays uniform ``alpha0``). ``None`` is a
+    trace-time branch — the unweighted program is byte-identical.
     """
+    if weights is not None:
+        data = dataclasses.replace(data, alpha=data.alpha * weights)
     w, h = params
 
     # --- context side: J_I from the fixed item factors -------------------
@@ -193,6 +202,7 @@ def fit(
     n_epochs: int,
     callback=None,
     schedule: Optional[sweeps.SweepSchedule] = None,
+    weights: Optional[jax.Array] = None,
 ) -> MFParams:
     """Run ``n_epochs`` iCD epochs (host loop; each epoch is one jit call).
 
@@ -201,7 +211,7 @@ def fit(
     blocks_per_sweep=1)`` turns each "epoch" into one k_b subspace step."""
     e = residuals(params, data)
     for ep in range(n_epochs):
-        params, e = epoch(params, data, e, hp, schedule, ep)
+        params, e = epoch(params, data, e, hp, schedule, ep, weights)
         if callback is not None:
             callback(ep, params)
     return params

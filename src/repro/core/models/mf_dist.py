@@ -65,9 +65,14 @@ class ShardedMF:
     n_shards: int = dataclasses.field(metadata=dict(static=True))
 
 
-def shard_interactions(data: Interactions, n_shards: int) -> ShardedMF:
+def shard_interactions(data: Interactions, n_shards: int,
+                       weights=None) -> ShardedMF:
     """Host-side partitioner: range-partition contexts and items, pad blocks,
-    precompute the all-to-all routing."""
+    precompute the all-to-all routing.
+
+    ``weights`` (optional, (nnz,) ctx-major) folds per-interaction
+    confidence into both blocked α layouts exactly (α is purely
+    multiplicative in the explicit loss parts); padding stays α=0."""
     d = n_shards
     c_per = -(-data.n_ctx // d)
     i_per = -(-data.n_items // d)
@@ -75,6 +80,8 @@ def shard_interactions(data: Interactions, n_shards: int) -> ShardedMF:
     item = np.asarray(data.item)
     y = np.asarray(data.y)
     alpha = np.asarray(data.alpha)
+    if weights is not None:
+        alpha = alpha * np.asarray(weights, alpha.dtype)
     nnz = len(ctx)
     ctx_shard = ctx // c_per
     item_shard = item // i_per

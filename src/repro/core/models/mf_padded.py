@@ -204,9 +204,21 @@ def _padded_side_sweep(side, other, other_j, ids_pad, alpha_pad, e_pad, hp):
     return side[:n], e_pad[:n]
 
 
+def reweight_padded(pdata: PaddedInteractions, weights: jax.Array) -> PaddedInteractions:
+    """Fold per-interaction weights (flat nnz, ctx-major order) into both
+    padded α grids: α_eff = α·w on real slots, padding stays α=0 (the w grid
+    defaults to 1 where no observation lands)."""
+    w_c = jnp.ones_like(pdata.alpha_c).at[pdata.c_rows, pdata.c_cols].set(weights)
+    w_i = jnp.ones_like(pdata.alpha_i).at[pdata.i_rows, pdata.i_cols].set(weights)
+    return dataclasses.replace(
+        pdata, alpha_c=pdata.alpha_c * w_c, alpha_i=pdata.alpha_i * w_i
+    )
+
+
 @partial(jax.jit, static_argnames=("hp",), donate_argnums=(2,))
 def epoch(
-    params: MFParams, pdata: PaddedInteractions, e_pad: jax.Array, hp: MFHyperParams
+    params: MFParams, pdata: PaddedInteractions, e_pad: jax.Array,
+    hp: MFHyperParams, weights: jax.Array | None = None,
 ) -> Tuple[MFParams, jax.Array]:
     """Kernel-fused iCD epoch; carries the ctx-major padded residual grid.
 
@@ -216,7 +228,13 @@ def epoch(
     grid across the call. (Within an epoch the fused path's Ψ tile is
     bigger — see the module docstring's capacity note.) Callers must
     rebind (``params, e_pad = epoch(...)``), which every sweep/fit loop
-    already does."""
+    already does.
+
+    ``weights`` (optional, flat nnz ctx-major) folds per-interaction
+    confidence into both α grids exactly (α is purely multiplicative in the
+    explicit loss parts); ``None`` traces the identical unweighted program."""
+    if weights is not None:
+        pdata = reweight_padded(pdata, weights)
     w, h = params
 
     j_i = gram_kernel(h)
@@ -239,8 +257,8 @@ def residuals(params: MFParams, pdata: PaddedInteractions) -> jax.Array:
     return scores - pdata.y_c
 
 
-def fit(params, pdata, hp, n_epochs):
+def fit(params, pdata, hp, n_epochs, weights=None):
     e_pad = residuals(params, pdata)
     for _ in range(n_epochs):
-        params, e_pad = epoch(params, pdata, e_pad, hp)
+        params, e_pad = epoch(params, pdata, e_pad, hp, weights)
     return params

@@ -57,6 +57,7 @@ from repro.core.implicit import implicit_objective
 from repro.core.models.mf_padded import (
     PaddedInteractions,
     pad_interactions,
+    reweight_padded,
     scatter_ctx_major,
     transfer_ctx_to_item,
     transfer_item_to_ctx,
@@ -322,9 +323,16 @@ def epoch(
     hp: MFSIHyperParams,
     schedule=None,
     sweep_index: int = 0,
+    weights: Optional[jax.Array] = None,
 ) -> Tuple[MFSIParams, jax.Array]:
     """One iCD epoch: context-feature sweep, then item-feature sweep, over
-    the scheduled columns (``schedule=None`` = full pass)."""
+    the scheduled columns (``schedule=None`` = full pass).
+
+    ``weights`` (optional, (nnz,) ctx-major) folds per-interaction
+    confidence into α exactly (α is purely multiplicative in the explicit
+    parts); ``None`` traces the identical unweighted program."""
+    if weights is not None:
+        data = dataclasses.replace(data, alpha=data.alpha * weights)
     w, h = params
     phi_m = design_matmul(x, w)
     psi_m = design_matmul(z, h)
@@ -354,10 +362,15 @@ def epoch_padded(
     pdata: PaddedInteractions,
     e_pad: jax.Array,
     hp: MFSIHyperParams,
+    weights: Optional[jax.Array] = None,
 ) -> Tuple[MFSIParams, jax.Array]:
     """Fused iCD epoch over the dual padded layout (``mf_padded``'s
     ``PaddedInteractions``); carries the ctx-major padded residual grid.
-    Same sweep order and fixed point as :func:`epoch` (parity-tested)."""
+    Same sweep order and fixed point as :func:`epoch` (parity-tested).
+    ``weights`` folds into both padded α grids (see
+    :func:`repro.core.models.mf_padded.reweight_padded`)."""
+    if weights is not None:
+        pdata = reweight_padded(pdata, weights)
     w, h = params
     k_b = sweeps.resolve_block_k(hp.block_k, hp.k)
     phi_m = design_matmul(x, w)
@@ -399,10 +412,11 @@ def objective(params: MFSIParams, x: Design, z: Design, data: Interactions,
     return implicit_objective(phi(params, x), psi(params, z), e, data, hp.alpha0, hp.l2, sq)
 
 
-def fit(params, x, z, data, hp, n_epochs, callback=None, schedule=None):
+def fit(params, x, z, data, hp, n_epochs, callback=None, schedule=None,
+        weights=None):
     e = residuals(params, x, z, data)
     for ep in range(n_epochs):
-        params, e = epoch(params, x, z, data, e, hp, schedule, ep)
+        params, e = epoch(params, x, z, data, e, hp, schedule, ep, weights)
         if callback is not None:
             callback(ep, params)
     return params

@@ -357,9 +357,15 @@ def epoch(
     hp: PARAFACHyperParams,
     schedule=None,
     sweep_index: int = 0,
+    weights=None,
 ) -> Tuple[PARAFACParams, jax.Array]:
     """One iCD epoch: U sweep → V sweep → item (W) sweep (scheduled
-    columns; ``schedule=None`` = full pass)."""
+    columns; ``schedule=None`` = full pass).
+
+    ``weights`` (optional, (nnz,) ctx-major) folds per-interaction
+    confidence into α exactly; ``None`` traces the identical program."""
+    if weights is not None:
+        data = dataclasses.replace(data, alpha=data.alpha * weights)
     u, v, w = params
     j_i = gram(w, implementation=hp.implementation)
 
@@ -397,11 +403,21 @@ def epoch_padded(
     padded: TensorPadded,
     e: jax.Array,
     hp: PARAFACHyperParams,
+    weights=None,
 ) -> Tuple[PARAFACParams, jax.Array]:
     """Fused-kernel iCD epoch on the padded layouts; same sweep order and
     fixed point as :func:`epoch` (parity-tested). The flat residual cache is
     re-grouped per sweep (scatter in, gather out — O(nnz), amortized over
-    the ⌈k/k_b⌉ VMEM-resident block dispatches of the sweep)."""
+    the ⌈k/k_b⌉ VMEM-resident block dispatches of the sweep).
+    ``weights`` rebuilds all three group α grids via
+    :meth:`~repro.core.padded.PaddedGroup.with_alpha`."""
+    if weights is not None:
+        a_eff = data.alpha * weights
+        data = dataclasses.replace(data, alpha=a_eff)
+        padded = dataclasses.replace(
+            padded, g1=padded.g1.with_alpha(a_eff),
+            g2=padded.g2.with_alpha(a_eff), gi=padded.gi.with_alpha(a_eff),
+        )
     u, v, w = params
     k_b = sweeps.resolve_block_k(hp.block_k, hp.k)
     j_i = gram(w, implementation=hp.implementation)
@@ -446,10 +462,11 @@ def objective(params: PARAFACParams, tc: TensorContext, data: Interactions,
     return explicit_loss(e, data.alpha) + hp.alpha0 * reg + hp.l2 * sq
 
 
-def fit(params, tc, data, hp, n_epochs, callback=None, schedule=None):
+def fit(params, tc, data, hp, n_epochs, callback=None, schedule=None,
+        weights=None):
     e = residuals(params, tc, data)
     for ep in range(n_epochs):
-        params, e = epoch(params, tc, data, e, hp, schedule, ep)
+        params, e = epoch(params, tc, data, e, hp, schedule, ep, weights)
         if callback is not None:
             callback(ep, params)
     return params

@@ -283,11 +283,16 @@ def epoch(
     hp: TuckerHyperParams,
     schedule=None,
     sweep_index: int = 0,
+    weights=None,
 ) -> Tuple[TuckerParams, jax.Array]:
     """One iCD epoch: U sweep → V sweep → core sweep → item (W) sweep.
 
     A ``schedule`` restricts the FACTOR-mode sweeps (per-mode k1/k2/k3
-    column plans); the scalar core sweep always runs in full."""
+    column plans); the scalar core sweep always runs in full.
+    ``weights`` (optional, (nnz,) ctx-major) folds per-interaction
+    confidence into α exactly; ``None`` traces the identical program."""
+    if weights is not None:
+        data = dataclasses.replace(data, alpha=data.alpha * weights)
     u, v, w, b = params
     j_i = gram(w, implementation=hp.implementation)
     phi_m = phi(params, tc)
@@ -323,11 +328,20 @@ def epoch_padded(
     padded: TensorPadded,
     e: jax.Array,
     hp: TuckerHyperParams,
+    weights=None,
 ) -> Tuple[TuckerParams, jax.Array]:
     """Fused-kernel iCD epoch on the padded layouts; same sweep order and
     fixed point as :func:`epoch` (parity-tested). U/V mode sweeps and the
     MF-like item sweep run blocked; the core sweep is inherently sequential
-    and stays on the flat path."""
+    and stays on the flat path. ``weights`` rebuilds all three group α
+    grids (and the flat α the core sweep reads)."""
+    if weights is not None:
+        a_eff = data.alpha * weights
+        data = dataclasses.replace(data, alpha=a_eff)
+        padded = dataclasses.replace(
+            padded, g1=padded.g1.with_alpha(a_eff),
+            g2=padded.g2.with_alpha(a_eff), gi=padded.gi.with_alpha(a_eff),
+        )
     u, v, w, b = params
     j_i = gram(w, implementation=hp.implementation)
     phi_m = phi(params, tc)
@@ -380,10 +394,11 @@ def objective(params: TuckerParams, tc: TensorContext, data: Interactions,
     )
 
 
-def fit(params, tc, data, hp, n_epochs, callback=None, schedule=None):
+def fit(params, tc, data, hp, n_epochs, callback=None, schedule=None,
+        weights=None):
     e = residuals(params, tc, data)
     for ep in range(n_epochs):
-        params, e = epoch(params, tc, data, e, hp, schedule, ep)
+        params, e = epoch(params, tc, data, e, hp, schedule, ep, weights)
         if callback is not None:
             callback(ep, params)
     return params

@@ -69,6 +69,15 @@ class PaddedGroup:
         """(n_rows, d_pad) grid → flat per-nnz vector."""
         return grid[self.rows, self.cols]
 
+    def with_alpha(self, alpha_flat: jax.Array) -> "PaddedGroup":
+        """Rebuild the α grid from a flat per-nnz confidence vector (same
+        nnz order the group was built with; padding stays 0) — how
+        per-interaction weights fold into an existing padded layout without
+        a host-side rebuild."""
+        return dataclasses.replace(
+            self, alpha_pad=self.scatter(alpha_flat, jnp.float32)
+        )
+
 
 def append_sentinel_row(vals_blk: jax.Array) -> jax.Array:
     """Flat (nnz, m) pseudo-ψ block → (nnz+1, m) slab whose last row is the

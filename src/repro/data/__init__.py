@@ -2,4 +2,11 @@ from repro.data.synthetic import (  # noqa: F401
     SyntheticImplicitDataset,
     make_implicit_dataset,
 )
-from repro.data.loader import interaction_stream, sharded_batches  # noqa: F401
+from repro.data.loader import (  # noqa: F401
+    ImplicitLog,
+    frequency_interactions,
+    interaction_stream,
+    load_movielens,
+    sharded_batches,
+    split_by_time,
+)

@@ -6,6 +6,15 @@ reused in place on backends that support donation. Inside an outer jit
 (the ``*_padded.epoch`` paths) nested-jit donation is inert — there the
 in-place update comes from the kernels' e→e_out ``input_output_aliases``
 and from ``epoch`` donating ``e_pad`` at the top level.
+
+Per-interaction confidence weights: every entry point takes an optional
+``weights`` operand shaped like ``alpha``. The observed confidence enters
+the sweep math purely multiplicatively (L'/2 = Σ ᾱ·e·ψ, L''/2 = Σ ᾱ·ψ²;
+the implicit/Gram parts use the uniform ``alpha0`` only), so a weighted
+sweep is EXACTLY a sweep over ``alpha·w`` — folded here, outside the
+pallas call, rather than shipping a second VMEM operand to the kernel.
+``weights=None`` is a trace-time branch: the jitted program is the
+byte-identical unweighted one.
 """
 from repro.kernels import kernel_jit
 from repro.kernels.cd_sweep.kernel import (
@@ -20,12 +29,18 @@ from repro.kernels.cd_sweep.kernel import (
 )
 
 
+def _fold_weights(alpha, weights):
+    """alpha_eff = alpha·w (Lemma-1-rescaled confidence times per-interaction
+    weight). ``weights is None`` short-circuits at trace time — no-op."""
+    return alpha if weights is None else alpha * weights
+
+
 @kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
             donate_argnums=(2,))
 def cd_block_sweep(psi_blk, alpha, e, w_blk, r1_blk, j_blk, *, alpha0, l2,
-                   eta=1.0, block_ctx=None, interpret=None):
+                   eta=1.0, block_ctx=None, weights=None, interpret=None):
     return cd_block_sweep_pallas(
-        psi_blk, alpha, e, w_blk, r1_blk, j_blk,
+        psi_blk, _fold_weights(alpha, weights), e, w_blk, r1_blk, j_blk,
         alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
         interpret=interpret,
     )
@@ -35,18 +50,20 @@ def cd_block_sweep(psi_blk, alpha, e, w_blk, r1_blk, j_blk, *, alpha0, l2,
             donate_argnums=(2,))
 def cd_block_sweep_rowpatch(psi_blk, alpha, e, w_blk, r1_blk, p_blk, *,
                             alpha0, l2, eta=1.0, block_ctx=None,
-                            interpret=None):
+                            weights=None, interpret=None):
     return cd_block_sweep_rowpatch_pallas(
-        psi_blk, alpha, e, w_blk, r1_blk, p_blk,
+        psi_blk, _fold_weights(alpha, weights), e, w_blk, r1_blk, p_blk,
         alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
         interpret=interpret,
     )
 
 
 @kernel_jit(static_argnames=("block_ctx",))
-def cd_slab_reduce(psi_blk, alpha, e, *, block_ctx=None, interpret=None):
+def cd_slab_reduce(psi_blk, alpha, e, *, block_ctx=None, weights=None,
+                   interpret=None):
     return cd_slab_reduce_pallas(
-        psi_blk, alpha, e, block_ctx=block_ctx, interpret=interpret,
+        psi_blk, _fold_weights(alpha, weights), e, block_ctx=block_ctx,
+        interpret=interpret,
     )
 
 
@@ -65,9 +82,10 @@ def cd_resid_patch(psi_blk, e, dphi_blk, *, block_ctx=None, interpret=None):
 @kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
             donate_argnums=(3,))
 def cd_block_sweep_gather(psi_tab, ids, alpha, e, w_blk, r1_blk, j_blk, *,
-                          alpha0, l2, eta=1.0, block_ctx=None, interpret=None):
+                          alpha0, l2, eta=1.0, block_ctx=None, weights=None,
+                          interpret=None):
     return cd_block_sweep_gather_pallas(
-        psi_tab, ids, alpha, e, w_blk, r1_blk, j_blk,
+        psi_tab, ids, _fold_weights(alpha, weights), e, w_blk, r1_blk, j_blk,
         alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
         interpret=interpret,
     )
@@ -77,9 +95,10 @@ def cd_block_sweep_gather(psi_tab, ids, alpha, e, w_blk, r1_blk, j_blk, *,
             donate_argnums=(3,))
 def cd_block_sweep_rowpatch_gather(psi_tab, ids, alpha, e, w_blk, r1_blk,
                                    p_blk, *, alpha0, l2, eta=1.0,
-                                   block_ctx=None, interpret=None):
+                                   block_ctx=None, weights=None,
+                                   interpret=None):
     return cd_block_sweep_rowpatch_gather_pallas(
-        psi_tab, ids, alpha, e, w_blk, r1_blk, p_blk,
+        psi_tab, ids, _fold_weights(alpha, weights), e, w_blk, r1_blk, p_blk,
         alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,
         interpret=interpret,
     )
@@ -87,9 +106,10 @@ def cd_block_sweep_rowpatch_gather(psi_tab, ids, alpha, e, w_blk, r1_blk,
 
 @kernel_jit(static_argnames=("block_ctx",))
 def cd_slab_reduce_gather(psi_tab, ids, alpha, e, *, block_ctx=None,
-                          interpret=None):
+                          weights=None, interpret=None):
     return cd_slab_reduce_gather_pallas(
-        psi_tab, ids, alpha, e, block_ctx=block_ctx, interpret=interpret,
+        psi_tab, ids, _fold_weights(alpha, weights), e, block_ctx=block_ctx,
+        interpret=interpret,
     )
 
 

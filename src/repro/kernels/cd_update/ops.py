@@ -14,7 +14,13 @@ from repro.kernels.cd_update.kernel import cd_column_update_pallas
 @kernel_jit(static_argnames=("alpha0", "l2", "eta", "block_ctx"),
             donate_argnums=(2,))
 def cd_column_update(psi, alpha, e, w_col, r1, jff, *, alpha0, l2, eta=1.0,
-                     block_ctx=256, interpret=None):
+                     block_ctx=256, weights=None, interpret=None):
+    # alpha enters the fused update purely multiplicatively (explicit loss
+    # parts only; the implicit/Gram part is uniform alpha0), so per-
+    # interaction weights fold exactly into alpha_eff = alpha·w here, outside
+    # the pallas call. weights=None is a trace-time branch: identical program.
+    if weights is not None:
+        alpha = alpha * weights
     return cd_column_update_pallas(
         psi, alpha, e, w_col, r1, jff,
         alpha0=alpha0, l2=l2, eta=eta, block_ctx=block_ctx,

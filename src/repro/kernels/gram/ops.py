@@ -6,5 +6,9 @@ from repro.kernels.gram.kernel import gram_pallas
 
 
 @kernel_jit(static_argnames=("block_rows",))
-def gram(x: jax.Array, block_rows: int = 1024, *, interpret=None) -> jax.Array:
-    return gram_pallas(x, block_rows=block_rows, interpret=interpret)
+def gram(x: jax.Array, block_rows: int = 1024, *, weights=None,
+         interpret=None) -> jax.Array:
+    """J = xᵀx, or the confidence-weighted xᵀ·diag(w)·x when ``weights``
+    (per-row, shape (rows,)) is given. ``weights=None`` traces the identical
+    unweighted program."""
+    return gram_pallas(x, weights, block_rows=block_rows, interpret=interpret)

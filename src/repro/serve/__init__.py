@@ -39,4 +39,4 @@ from repro.serve.publish import (  # noqa: F401
     dense_table,
 )
 from repro.kernels.topk_score.ref import retrieval_topk  # noqa: F401
-from repro.serve.recsys_serve import bulk_score, mf_retrieval_score_fn  # noqa: F401
+from repro.serve.engine import bulk_score, mf_retrieval_score_fn  # noqa: F401

@@ -271,3 +271,24 @@ class RetrievalEngine:
         """Dense (B, n_items) scores — small batches / tests ONLY; serving
         and eval go through :meth:`topk`, which never materializes this."""
         return phi_rows @ self.psi.T
+
+
+def bulk_score(forward: Callable, batch, chunk: int = 65536):
+    """Offline scoring of a huge batch in fixed-size chunks (serve_bulk)."""
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    outs = []
+    for lo in range(0, n, chunk):
+        piece = jax.tree_util.tree_map(lambda x: x[lo : lo + chunk], batch)
+        outs.append(forward(piece))
+    return jnp.concatenate(outs, axis=0)
+
+
+def mf_retrieval_score_fn(user_vec: jax.Array, item_table: jax.Array):
+    """The paper-native separable retrieval: one (k)·(k,N) matvec per id
+    chunk — or a (B, k)·(k, N) matmul when ``user_vec`` is a (B, k) batch."""
+
+    def score(ids):
+        s = jnp.take(item_table, ids, axis=0) @ user_vec.T  # (c,) | (c, B)
+        return s.T if s.ndim == 2 else s
+
+    return score

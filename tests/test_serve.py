@@ -9,7 +9,7 @@ from repro.kernels.topk_score import topk_score_ref
 from repro.serve.batcher import MicroBatcher
 from repro.serve.cluster import ShardedRetrievalCluster
 from repro.serve.engine import exclude_ids_from_lists
-from repro.serve.recsys_serve import bulk_score, mf_retrieval_score_fn, retrieval_topk
+from repro.serve import bulk_score, mf_retrieval_score_fn, retrieval_topk
 
 import jax
 

@@ -1,0 +1,273 @@
+"""Per-interaction confidence weights as a first-class training citizen.
+
+Three contracts, each pinned hard:
+
+1. ``weights=None`` is a trace-time branch — the unweighted program is the
+   IDENTICAL program, so ``weights=ones`` must be bit-equal to
+   ``weights=None`` on every zoo model (flat adapter path AND the fused
+   padded paths).
+2. α is purely multiplicative in the explicit loss parts, so
+   ``weights=w`` must equal training on premultiplied ``alpha·w`` exactly.
+3. The weighted epoch is still the paper's Lemma-1/2/3 machinery: weighted
+   iCD on the rescaled ``(ȳ, ᾱ·w)`` must track conventional dense CD on the
+   equivalent dense objective ``α' = α₀ + ᾱ·w``, ``y' = ȳ·ᾱw/α'`` — the
+   same trajectory-level oracle as ``test_icd_exact``, now per-cell
+   weighted. Plus: the weighted Gram kernel vs the float64 oracle, and
+   weighted closed-form fold-in vs the ``fold_in_exact`` normal-equations
+   oracle on all five zoo models.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import foldin, naive_cd
+from repro.core.gram import gram, weighted_gram
+from repro.core.models import fm, mf, mf_padded
+from repro.core.models.zoo import ZOO, zoo_model
+from repro.sparse.interactions import build_interactions
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _interactions(n_ctx, n_items, nnz, alpha0, seed=0):
+    rng = np.random.default_rng(seed)
+    cells = rng.choice(n_ctx * n_items, size=nnz, replace=False)
+    ctx, item = cells // n_items, cells % n_items
+    y = rng.integers(1, 5, size=nnz).astype(np.float64)
+    alpha = alpha0 + 1.0 + rng.random(nnz)  # α > α₀
+    return build_interactions(ctx, item, y, alpha, n_ctx, n_items,
+                              alpha0=alpha0)
+
+
+def _zoo_interactions(name, model, params, seed=0):
+    """Interactions in the zoo instance's own (ctx, item) address space:
+    mf/mfsi/fm contexts are the 20 rows, parafac/tucker contexts are the
+    zoo's 9 (c1, c2) pair rows; items are the 37 catalogue rows."""
+    n_ctx = (int(model.dataset.tc.c1.shape[0])
+             if name in ("parafac", "tucker") else 20)
+    return _interactions(n_ctx, 37, nnz=min(60, n_ctx * 37 // 2),
+                         alpha0=float(model.hp.alpha0), seed=seed)
+
+
+def _rand_weights(nnz, seed=5, lo=0.5, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=nnz), jnp.float32)
+
+
+# ------------------------------------------------------------------ zoo ---
+@pytest.mark.parametrize("name", ZOO)
+def test_zoo_epoch_weighted_exact(name):
+    """Every zoo model through the unified adapter: weights=ones bit-equal
+    weights=None, and weights=w exactly the premultiplied-α epoch."""
+    model, params, _ = zoo_model(name, np.random.default_rng(0))
+    data = _zoo_interactions(name, model, params)
+    w = _rand_weights(data.nnz)
+    data_pre = dataclasses.replace(data, alpha=data.alpha * w)
+
+    def run(d, weights):
+        e = model.residuals(params, data=d)  # fresh: epochs may donate e
+        return model.epoch(params, e, data=d, weights=weights)
+
+    p_none, e_none = run(data, None)
+    p_ones, e_ones = run(data, jnp.ones(data.nnz, jnp.float32))
+    p_w, e_w = run(data, w)
+    p_pre, e_pre = run(data_pre, None)
+    for f in p_none._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(p_ones, f)),
+                                      np.asarray(getattr(p_none, f)))
+        np.testing.assert_array_equal(np.asarray(getattr(p_w, f)),
+                                      np.asarray(getattr(p_pre, f)))
+    np.testing.assert_array_equal(np.asarray(e_ones), np.asarray(e_none))
+    np.testing.assert_array_equal(np.asarray(e_w), np.asarray(e_pre))
+
+
+# --------------------------------------------------------- padded paths ---
+def test_mf_padded_weighted_exact():
+    """The fused padded MF epoch (``reweight_padded`` grids): ones≡None
+    bit-equal, weights=w ≡ padding the premultiplied interactions."""
+    data = _interactions(13, 9, nnz=37, alpha0=0.4, seed=2)
+    hp = mf.MFHyperParams(k=5, alpha0=0.4, l2=0.05)
+    params = mf.init(jax.random.PRNGKey(1), data.n_ctx, data.n_items, 5)
+    w = _rand_weights(data.nnz, seed=6)
+    pdata = mf_padded.pad_interactions(data)
+    pdata_pre = mf_padded.pad_interactions(
+        dataclasses.replace(data, alpha=data.alpha * w))
+
+    def run(pd, weights):
+        e_pad = mf_padded.residuals(params, pd)  # fresh: e_pad is donated
+        return mf_padded.epoch(params, pd, e_pad, hp, weights)
+
+    p_none, e_none = run(pdata, None)
+    p_ones, e_ones = run(pdata, jnp.ones(data.nnz, jnp.float32))
+    p_w, e_w = run(pdata, w)
+    p_pre, e_pre = run(pdata_pre, None)
+    for f in p_none._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(p_ones, f)),
+                                      np.asarray(getattr(p_none, f)))
+        np.testing.assert_array_equal(np.asarray(getattr(p_w, f)),
+                                      np.asarray(getattr(p_pre, f)))
+    np.testing.assert_array_equal(np.asarray(e_ones), np.asarray(e_none))
+    np.testing.assert_array_equal(np.asarray(e_w), np.asarray(e_pre))
+
+
+def test_fm_padded_weighted_exact():
+    """The fused FM epoch (slab-reduce + rank patch): the weighted program
+    must keep both exactness contracts on the padded path too."""
+    model, params, _ = zoo_model("fm", np.random.default_rng(1))
+    x, z, hp = model.dataset.x, model.dataset.z, model.hp
+    data = _zoo_interactions("fm", model, params, seed=3)
+    w = _rand_weights(data.nnz, seed=7)
+    pdata = fm.pad_interactions(data)
+    data_pre = dataclasses.replace(data, alpha=data.alpha * w)
+    pdata_pre = fm.pad_interactions(data_pre)
+
+    def run(d, pd, weights):
+        e_pad = fm.residuals_padded(params, x, z, d, pd, hp)
+        return fm.epoch_padded(params, x, z, pd, e_pad, hp, weights)
+
+    p_none, _ = run(data, pdata, None)
+    p_ones, _ = run(data, pdata, jnp.ones(data.nnz, jnp.float32))
+    p_w, _ = run(data, pdata, w)
+    p_pre, _ = run(data_pre, pdata_pre, None)
+    for f in p_none._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(p_ones, f)),
+                                      np.asarray(getattr(p_none, f)))
+        np.testing.assert_array_equal(np.asarray(getattr(p_w, f)),
+                                      np.asarray(getattr(p_pre, f)))
+
+
+# ------------------------------------------------------- dense CD oracle ---
+@pytest.mark.parametrize("k", [1, 4])
+def test_weighted_mf_matches_naive_cd_trajectory(k):
+    """Weighted iCD is still exact Newton CD on a dense objective: training
+    on ``(ȳ, ᾱ·w)`` must track conventional dense CD with per-cell
+    confidence ``α' = α₀ + ᾱ·w`` and target ``y' = ȳ·ᾱw/α'`` (the Lemma-1
+    rescaling inverted at the new confidence)."""
+    n_ctx, n_items, nnz, alpha0 = 13, 9, 37, 0.4
+    rng = np.random.default_rng(4)
+    # ctx-major event order up front: build_interactions lexsorts its
+    # events, and w must address the SAME interactions on both sides
+    cells = np.sort(rng.choice(n_ctx * n_items, size=nnz, replace=False))
+    ctx, item = cells // n_items, cells % n_items
+    y = rng.integers(1, 5, size=nnz).astype(np.float64)
+    alpha = alpha0 + 1.0 + rng.random(nnz)
+    w = rng.uniform(0.5, 2.0, size=nnz)
+
+    data = build_interactions(ctx, item, y, alpha, n_ctx, n_items,
+                              alpha0=alpha0)
+    abar = alpha - alpha0
+    ybar = alpha / abar * y
+    alpha_p = alpha0 + abar * w
+    y_p = ybar * (abar * w) / alpha_p
+    y_dense, a_dense = naive_cd.dense_from_observed(
+        jnp.asarray(ctx), jnp.asarray(item), jnp.asarray(y_p, jnp.float32),
+        jnp.asarray(alpha_p, jnp.float32), n_ctx, n_items, alpha0,
+    )
+
+    hp = mf.MFHyperParams(k=k, alpha0=alpha0, l2=0.05, eta=1.0)
+    params = mf.init(jax.random.PRNGKey(1), n_ctx, n_items, k)
+    params_naive = params
+    w_jnp = jnp.asarray(w, jnp.float32)
+    e = mf.residuals(params, data)
+    for _ in range(3):
+        params, e = mf.epoch(params, data, e, hp, None, 0, w_jnp)
+        params_naive = naive_cd.epoch_dense(params_naive, y_dense, a_dense, hp)
+        np.testing.assert_allclose(params.w, params_naive.w,
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(params.h, params_naive.h,
+                                   rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------- gram ---
+@pytest.mark.parametrize("implementation", ["xla", "pallas"])
+def test_weighted_gram_matches_oracle(implementation):
+    rng = np.random.default_rng(9)
+    m = jnp.asarray(rng.normal(size=(50, 6)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.25, 4.0, size=50), jnp.float32)
+    got = gram(m, implementation=implementation, weights=w)
+    m64 = np.asarray(m, np.float64)
+    expect = m64.T @ (np.asarray(w, np.float64)[:, None] * m64)
+    np.testing.assert_allclose(np.asarray(got), expect, rtol=1e-5, atol=1e-6)
+    # weights=None / weights absent: the untouched unweighted program
+    np.testing.assert_array_equal(
+        np.asarray(gram(m, implementation=implementation,
+                        weights=jnp.ones(50, jnp.float32))),
+        np.asarray(gram(m, implementation=implementation)),
+    )
+
+
+def test_weighted_gram_oracle_consistency():
+    rng = np.random.default_rng(10)
+    m = jnp.asarray(rng.normal(size=(17, 4)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=17), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(weighted_gram(m, w)),
+        np.asarray(gram(m * jnp.sqrt(w)[:, None])), rtol=1e-5, atol=1e-6,
+    )
+
+
+# ------------------------------------------------------------- fold-in ---
+@pytest.mark.parametrize("name", ZOO)
+def test_weighted_fold_in_user_matches_exact_oracle(name):
+    """Non-uniform per-interaction weights through the single-row CD solve
+    vs the float64 normal-equations oracle, every zoo model."""
+    model, params, _ = zoo_model(name, np.random.default_rng(3))
+    rng = np.random.default_rng(29)
+    table = np.asarray(model.export_psi(params))
+    ids = rng.choice(table.shape[0], size=7, replace=False)
+    y = rng.integers(1, 4, ids.size).astype(np.float32)
+    alpha = (1.0 + rng.random(ids.size)).astype(np.float32)
+    w = rng.uniform(0.25, 4.0, ids.size).astype(np.float32)
+    row = model.fold_in_user(params, ids, y, alpha, weights=w,
+                             n_sweeps=512, tol=1e-9)
+    free, init = model._user_free_init()
+    hp = model._foldin_hp()
+    exact = foldin.fold_in_exact(
+        table, ids, y, alpha, alpha0=hp["alpha0"], l2=hp["l2"],
+        weights=w, free=free, init=init,
+    )
+    np.testing.assert_allclose(row, exact, rtol=2e-4, atol=2e-5)
+    # weights=ones reproduces the unweighted solve exactly
+    ones = np.ones(ids.size, np.float32)
+    np.testing.assert_array_equal(
+        model.fold_in_user(params, ids, y, alpha, weights=ones,
+                           n_sweeps=512, tol=1e-9),
+        model.fold_in_user(params, ids, y, alpha, n_sweeps=512, tol=1e-9),
+    )
+
+
+def test_weighted_fold_in_item_matches_exact_oracle():
+    model, params, _ = zoo_model("mf", np.random.default_rng(3))
+    rng = np.random.default_rng(31)
+    table = np.asarray(model.phi_table(params))
+    ids = rng.choice(table.shape[0], size=6, replace=False)
+    y = (1.0 + rng.random(ids.size)).astype(np.float32)
+    alpha = (1.0 + rng.random(ids.size)).astype(np.float32)
+    w = rng.uniform(0.25, 4.0, ids.size).astype(np.float32)
+    row = model.fold_in_item(params, ids, y, alpha, weights=w,
+                             n_sweeps=512, tol=1e-9)
+    free, init = model._item_free_init()
+    hp = model._foldin_hp()
+    exact = foldin.fold_in_exact(
+        table, ids, y, alpha, alpha0=hp["alpha0"], l2=hp["l2"],
+        weights=w, free=free, init=init,
+    )
+    np.testing.assert_allclose(row, exact, rtol=2e-4, atol=2e-5)
+
+
+def test_weighted_fold_in_row_is_premultiplied_alpha():
+    """``weights`` multiplies α before the solve — bit-identical to handing
+    the premultiplied confidences in directly."""
+    rng = np.random.default_rng(12)
+    table = rng.normal(size=(15, 5)).astype(np.float32)
+    ids = [1, 4, 9, 11]
+    y = rng.random(4).astype(np.float32)
+    alpha = (1.0 + rng.random(4)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, 4).astype(np.float32)
+    a = foldin.fold_in_row(table, ids, y, alpha, weights=w,
+                           alpha0=0.3, l2=0.05)
+    b = foldin.fold_in_row(table, ids, y, alpha * w, alpha0=0.3, l2=0.05)
+    np.testing.assert_array_equal(a.row, b.row)
