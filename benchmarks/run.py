@@ -19,10 +19,17 @@ def _emit(name: str, seconds: float, derived: str):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
 
 
-def run_figure(name, fn, out_dir, quick):
+def run_figure(name, fn, out_dir, quick, registry=None):
     t0 = time.perf_counter()
     res = fn(quick=quick)
     dt = time.perf_counter() - t0
+    if registry is not None:
+        registry.histogram(
+            "bench_section_seconds", "wall time per benchmark section",
+            ("section",),
+        ).labels(section=name).observe(dt)
+    if isinstance(res, dict):
+        res = {**res, "bench_seconds": dt}
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
         json.dump(res, f, indent=1, default=str)
@@ -162,13 +169,30 @@ def main() -> None:
           f"(use_interpret()={interp}) jax_default_backend={jax.default_backend()}")
     print("# name,seconds_us,derived")
 
+    from repro.obs import MetricsRegistry
+
+    registry = MetricsRegistry(clock=time.perf_counter)
+    ran = []
     for name, fn in FIGURES.items():
         if args.quick and name not in QUICK_SET:
             continue
         if args.only and args.only not in name:
             continue
-        res, dt = run_figure(name, fn, args.out, quick)
+        res, dt = run_figure(name, fn, args.out, quick, registry=registry)
+        ran.append(name)
         _emit(name, dt, json.dumps(res, default=str)[:160].replace(",", ";"))
+
+    if args.quick and ran:
+        # per-section wall time read back from the obs registry (each
+        # section observed exactly once, so the histogram mean IS the
+        # section's wall time)
+        print("# section wall-time summary (bench_section_seconds):")
+        total = 0.0
+        for name in ran:
+            s = registry.get("bench_section_seconds", section=name)
+            total += s
+            print(f"#   {name:<16s} {s:8.2f}s")
+        print(f"#   {'total':<16s} {total:8.2f}s")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,12 @@ the trace (repeatable) — the self-contained failover/degradation demo:
 with ``--replicas 2`` a single kill is invisible in the results; killing
 both replicas of a shard degrades coverage below 1.0 and the driver
 reports the dead row ranges.
+
+Observability (``repro.obs``): ``--metrics-out FILE`` exports the metrics
+registry on exit (``.prom`` → Prometheus text, anything else → JSONL);
+``--trace-out FILE`` exports the request trace as Chrome-trace JSON (open
+in Perfetto / ``chrome://tracing``); ``--stats-every N`` prints a live
+stats line from the registry every N requests.
 """
 from __future__ import annotations
 
@@ -54,6 +60,14 @@ def main():
                     help="after the trace: fold in an unseen user at "
                          "request time and delta-publish a fold-in item "
                          "(the continual-learning serving path)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="export the metrics registry on exit (.prom -> "
+                         "Prometheus text exposition, else JSONL)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="export the request trace as Chrome-trace JSON "
+                         "(Perfetto / chrome://tracing)")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="print a live registry stats line every N requests")
     args = ap.parse_args()
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not args.arch.startswith("icd"):
@@ -63,12 +77,18 @@ def main():
         )
 
     from repro.core.models import mf
+    from repro.obs import MetricsRegistry, Tracer, write_metrics, write_trace
     from repro.serve.batcher import MicroBatcher
     from repro.serve.mesh import (
         FaultInjector,
         FaultTolerantRetrievalMesh,
         RetryPolicy,
     )
+
+    # one registry + tracer for the whole serving stack, on the SAME clock
+    # as the batcher so queue latencies and span times line up
+    registry = MetricsRegistry(clock=time.perf_counter)
+    tracer = Tracer(clock=time.perf_counter) if args.trace_out else None
 
     params = mf.init(jax.random.PRNGKey(0), cfg.n_ctx, cfg.n_items, cfg.k)
     k = min(args.topk, cfg.n_items)
@@ -80,6 +100,7 @@ def main():
         # a shard's retries share the batcher's latency bound: a request
         # can burn at most max_delay on backoff before degrading instead
         retry=RetryPolicy(max_attempts=3, deadline=args.max_delay),
+        registry=registry, tracer=tracer,
     )
     version = mesh.publish(mf.export_psi(params))
     print(f"[serve] published psi v{version}: {cfg.n_items} items over "
@@ -95,15 +116,23 @@ def main():
         # same clock as t0 below: completed_at − t0 must be well-defined
         clock=time.perf_counter,
         version_fn=lambda: mesh.version,
+        registry=registry, tracer=tracer,
     )
     phi_all = np.asarray(mf.build_phi(params, np.arange(cfg.n_ctx)))
     rng = np.random.default_rng(0)
     users = rng.integers(0, cfg.n_ctx, size=args.requests)
     t0 = time.perf_counter()
     tickets = []
-    for u in users:
+    for n, u in enumerate(users, start=1):
         tickets.append((u, batcher.submit(phi_all[u], key=("user", int(u)))))
         batcher.step()
+        if args.stats_every and n % args.stats_every == 0:
+            bs, ms = batcher.stats, mesh.stats
+            print(f"[serve] stats @ {n}/{args.requests}: "
+                  f"submitted={bs['submitted']} "
+                  f"flushes={bs['flushes']} hits={bs['cache_hits']} "
+                  f"dispatches={ms['dispatches']} faults={ms['faults']} "
+                  f"failovers={ms['failovers']}")
     batcher.flush()  # retire the sub-batch tail
     dt = time.perf_counter() - t0
     lat, top_id, coverage, dead_ranges = [], None, 1.0, set()
@@ -165,6 +194,14 @@ def main():
         print(f"[serve] fold-in item {new_id} delta-published as v{v}; "
               f"self-query top id {int(res.ids[0, 0])} "
               f"({mesh.n_items} items live)")
+
+    if args.metrics_out:
+        write_metrics(args.metrics_out, registry)
+        print(f"[serve] metrics -> {args.metrics_out}")
+    if args.trace_out:
+        write_trace(args.trace_out, tracer)
+        print(f"[serve] trace ({len(tracer.spans)} spans) -> "
+              f"{args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,178 @@
+"""Kernel cost accounting: dispatch-site shim over the ``kernels/vmem.py``
+analytic models.
+
+The benches (``benchmarks/serve_bench.py``, ``benchmarks/roofline_bench``)
+have always priced the kernels analytically — HBM bytes from the declared
+streaming pattern, FLOPs from the einsum shapes, VMEM from the tile fit.
+This module records the SAME models into the metrics registry at every
+host-level dispatch site (engine/cluster/mesh ``topk_score`` calls, IVF
+probe blocks, the training fit loop's cd_sweep epochs), so live serving
+and the benches report one cost model — and the serve bench hard-gates
+that the counters reproduce the analytic numbers on its shapes.
+
+Why dispatch-site, not in-kernel: the model ``epoch`` functions are
+jitted, so a Python hook inside ``sweep_columns`` fires at trace time
+only — it would count one epoch no matter how many run. Host call sites
+execute per dispatch, and the analytic models need only the static
+shapes that are in hand there.
+
+Counters (labels: ``kernel``):
+
+  ``kernel_calls_total``       dispatches
+  ``kernel_hbm_bytes_total``   analytic HBM bytes streamed
+  ``kernel_flops_total``       analytic FLOPs
+  ``kernel_vmem_tile_bytes``   (gauge) last dispatch's tile footprint
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.kernels.vmem import (
+    VMEM_BUDGET_BYTES,
+    VmemBudgetError,
+    psi_row_bytes,
+    topk_block_items,
+)
+from repro.obs.metrics import resolve_registry
+
+
+def _pad(x: int, m: int) -> int:
+    return -(-int(x) // m) * m
+
+
+def topk_score_cost(
+    b: int,
+    n_rows: int,
+    d: int,
+    k: int,
+    *,
+    psi_bytes: int = 4,
+    per_row_scale: bool = False,
+    excl_l: int = 0,
+) -> Dict[str, float]:
+    """Analytic cost of ONE fused ``topk_score`` dispatch over ``n_rows``
+    stored ψ rows: the ψ stream (at its stored width —
+    :func:`~repro.kernels.vmem.psi_row_bytes`), the φ read, the final
+    (B, K_pad) score/id blocks (the running merge rides VMEM — matching
+    ``serve_bench.topk_traffic_bytes``'s fused model), and the exclude-id
+    lists when present; FLOPs are the score matmul's ``2·B·n_rows·D``."""
+    k_pad = _pad(k, 128)
+    hbm = (
+        float(n_rows) * psi_row_bytes(
+            d, psi_bytes=psi_bytes, per_row_scale=per_row_scale)
+        + 4.0 * b * d
+        + 2 * 4.0 * b * k_pad
+        + 4.0 * b * excl_l
+    )
+    d_pad = _pad(max(d, 1), 128)
+    block_b = _pad(max(b, 1), 8)
+    try:
+        block_items = topk_block_items(
+            block_b, d_pad, k_pad, n_items=n_rows,
+            psi_bytes=psi_bytes, per_row_scale=per_row_scale,
+        )
+        stored = psi_bytes * d_pad + (4 * d_pad if psi_bytes < 4 else 0)
+        per_row = stored + 16 * block_b + (4 if per_row_scale else 0)
+        fixed = 4 * (block_b * d_pad + 4 * block_b * k_pad)
+        vmem = float(fixed + block_items * per_row)
+    except VmemBudgetError:
+        vmem = float(VMEM_BUDGET_BYTES)
+    return {
+        "hbm_bytes": hbm,
+        "flops": 2.0 * b * n_rows * d,
+        "vmem_tile_bytes": vmem,
+    }
+
+
+def cd_sweep_cost(c: int, d_pad: int, k: int, k_b: int) -> Dict[str, float]:
+    """Analytic cost of ONE side's fused k-column cd_sweep over the padded
+    `(C, D_pad)` layout (``benchmarks/roofline_bench.cd_sweep_sweep_bytes``
+    fused model): ψ read once per column, α + 2·e streams amortized per
+    k_b block, the per-column (C,) slabs, and the block's k_b² Gram
+    patch. FLOPs ≈ 6·C·D_pad per column (score, gradient, residual
+    patch)."""
+    cd = 4.0 * c * d_pad
+    col = 4.0 * c
+    n_blocks = float(-(-k // k_b))
+    hbm = (k * cd + 3 * n_blocks * cd + 3 * k * col
+           + n_blocks * 4.0 * k_b * k_b)
+    return {
+        "hbm_bytes": hbm,
+        "flops": 6.0 * c * d_pad * k,
+        "vmem_tile_bytes": 4.0 * (k_b + 3) * d_pad * 8,  # minimal 8-row tile
+    }
+
+
+class KernelCostRecorder:
+    """Registry-bound recorder; resolve once, record per dispatch.
+
+    Children are cached per kernel label so the serve hot path pays a
+    dict hit + three float adds per dispatch. With
+    :data:`~repro.obs.metrics.NULL_REGISTRY` every record is a no-op."""
+
+    def __init__(self, registry=None):
+        reg = resolve_registry(registry)
+        self._calls = reg.counter(
+            "kernel_calls_total", "kernel dispatches", labels=("kernel",))
+        self._hbm = reg.counter(
+            "kernel_hbm_bytes_total",
+            "analytic HBM bytes streamed (kernels/vmem.py model)",
+            labels=("kernel",))
+        self._flops = reg.counter(
+            "kernel_flops_total", "analytic FLOPs", labels=("kernel",))
+        self._vmem = reg.gauge(
+            "kernel_vmem_tile_bytes",
+            "last dispatch's analytic VMEM tile footprint",
+            labels=("kernel",))
+        self._children: Dict[str, tuple] = {}
+
+    def _resolve(self, kernel: str):
+        ch = self._children.get(kernel)
+        if ch is None:
+            ch = (
+                self._calls.labels(kernel=kernel),
+                self._hbm.labels(kernel=kernel),
+                self._flops.labels(kernel=kernel),
+                self._vmem.labels(kernel=kernel),
+            )
+            self._children[kernel] = ch
+        return ch
+
+    def record(self, kernel: str, cost: Dict[str, float],
+               calls: int = 1) -> None:
+        calls_c, hbm_c, flops_c, vmem_g = self._resolve(kernel)
+        calls_c.inc(calls)
+        hbm_c.inc(cost["hbm_bytes"])
+        flops_c.inc(cost["flops"])
+        vmem_g.set(cost.get("vmem_tile_bytes", 0.0))
+
+    def record_topk(self, b: int, n_rows: int, d: int, k: int, *,
+                    kernel: str = "topk_score",
+                    psi_bytes: int = 4, per_row_scale: bool = False,
+                    excl_l: int = 0) -> None:
+        self.record(kernel, topk_score_cost(
+            b, n_rows, d, k, psi_bytes=psi_bytes,
+            per_row_scale=per_row_scale, excl_l=excl_l,
+        ))
+
+    def record_cd_sweep(self, c: int, d_pad: int, k: int, k_b: int, *,
+                        kernel: str = "cd_sweep", sweeps: int = 1) -> None:
+        cost = cd_sweep_cost(c, d_pad, k, k_b)
+        self.record(kernel, {
+            "hbm_bytes": cost["hbm_bytes"] * sweeps,
+            "flops": cost["flops"] * sweeps,
+            "vmem_tile_bytes": cost["vmem_tile_bytes"],
+        }, calls=sweeps)
+
+
+_null_recorder: Optional[KernelCostRecorder] = None
+
+
+def null_recorder() -> KernelCostRecorder:
+    """Shared no-op recorder (bound to NULL_REGISTRY) for bare mode."""
+    global _null_recorder
+    if _null_recorder is None:
+        from repro.obs.metrics import NULL_REGISTRY
+
+        _null_recorder = KernelCostRecorder(NULL_REGISTRY)
+    return _null_recorder

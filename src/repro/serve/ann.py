@@ -252,6 +252,7 @@ class PsiIndex:
         exclude_ids: Optional[jax.Array] = None,
         block_items: Optional[int] = None,
         interpret: Optional[bool] = None,
+        registry=None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Approximate top-K: ``(scores (B, k), ids (B, k))``, ids GLOBAL.
 
@@ -259,11 +260,25 @@ class PsiIndex:
         loop runs each probed block once for the whole batch and masks the
         rows that did not select it, so per-query pruning semantics hold
         at any batch size. ``n_probe ≥ n_clusters`` skips pruning entirely
-        (the bit-exact oracle path)."""
+        (the bit-exact oracle path).
+
+        ``registry`` (an ``obs.metrics`` registry) opts into query/probe
+        counters and per-block kernel cost accounting at the stored quant
+        width. Unlike the serving components, ``None`` here means NO
+        recording — a hot library function must not reach for process
+        globals behind its caller's back (the engine/mesh thread their own
+        registries through)."""
         phi_rows = jnp.asarray(phi_rows, jnp.float32)
         b = int(phi_rows.shape[0])
         c = self.n_clusters
         n_probe = self.cfg.resolve_probe(c) if n_probe is None else n_probe
+        costs = None
+        if registry is not None and registry:   # NULL_REGISTRY is falsy
+            from repro.obs.costs import KernelCostRecorder
+
+            registry.counter(
+                "ann_queries_total", "PsiIndex.topk dispatches").inc()
+            costs = KernelCostRecorder(registry)
         if n_probe >= c:
             probe_mask = np.ones((b, c), bool)       # oracle: prune nothing
         else:
@@ -272,6 +287,9 @@ class PsiIndex:
             probe_mask = np.zeros((b, c), bool)
             np.put_along_axis(probe_mask, sel, True, axis=1)
         excl_pos = self._map_exclude(exclude_ids)
+        excl_l = 0 if excl_pos is None else int(excl_pos.shape[1])
+        psi_bytes = {"none": 4, "bf16": 2, "int8": 1}[self.cfg.quant]
+        probed = 0
         parts_s, parts_i = [], []
         for cl in np.nonzero(probe_mask.any(axis=0))[0]:
             if self.counts[cl] == 0:
@@ -285,6 +303,13 @@ class PsiIndex:
                 id_offset=lo, n_valid=int(self.counts[cl]),
                 block_items=block_items, interpret=interpret,
             )
+            probed += 1
+            if costs is not None:
+                costs.record_topk(
+                    b, self.block_rows, self.d, k,
+                    kernel="topk_score_ivf", psi_bytes=psi_bytes,
+                    per_row_scale=self.cfg.quant == "int8", excl_l=excl_l,
+                )
             mask = jnp.asarray(probe_mask[:, cl])
             ss = jnp.where(mask[:, None], ss, -jnp.inf)
             ii = jnp.where(mask[:, None], ii, -1)
@@ -295,6 +320,10 @@ class PsiIndex:
             )
             parts_s.append(ss)
             parts_i.append(ii)
+        if registry is not None and registry:
+            registry.counter(
+                "ann_probed_blocks_total",
+                "IVF blocks actually dispatched (post-pruning)").inc(probed)
         if not parts_s:
             return empty_topk(b, k)
         if len(parts_s) == 1:
@@ -425,17 +454,22 @@ def fold_delta_indexes(
     rows,
     ids,
     cfg: AnnConfig,
+    *,
+    registry=None,
 ) -> Tuple[Optional[PsiIndex], ...]:
     """Per-shard delta fold-in after a ``publish_delta``: route each
     changed/appended row to its owning shard's index, fold it in, and
     REBUILD any index whose staleness budget is spent (or whose shard just
     materialized) from the authoritative ``new_table`` slab. Callers must
     have checked the shard geometry (``rows_per``/``n_shards``) is
-    unchanged — a geometry change means re-sharding, not folding."""
+    unchanged — a geometry change means re-sharding, not folding.
+    ``registry`` opts into the reindex-trigger counter (same convention as
+    :meth:`PsiIndex.topk`: ``None`` records nothing)."""
     rows = np.asarray(jnp.asarray(rows, jnp.float32))
     ids = np.asarray(ids, np.int64).reshape(-1)
     shard_of = ids // new_table.rows_per
     out = []
+    rebuilt = 0
     for s in range(new_table.n_shards):
         idx = indexes[s] if s < len(indexes) else None
         hit = shard_of == s
@@ -448,7 +482,14 @@ def fold_delta_indexes(
                 new_table.shards[s][: new_table.valid_rows(s)], cfg,
                 id_offset=s * new_table.rows_per,
             )
+            rebuilt += 1
         out.append(idx)
+    if registry is not None and registry and rebuilt:
+        registry.counter(
+            "ann_reindexes_total",
+            "per-shard IVF index rebuilds triggered by the staleness "
+            "budget (needs_reindex) or a newly materialized shard",
+        ).inc(rebuilt)
     return tuple(out)
 
 
@@ -462,6 +503,7 @@ def ivf_cluster_topk(
     exclude_ids: Optional[jax.Array] = None,
     interpret: Optional[bool] = None,
     dead_shards: Sequence[int] = (),
+    registry=None,
 ) -> TopKResult:
     """Sharded IVF top-K: per-shard :meth:`PsiIndex.topk` candidates (each
     shard prunes to its own ``n_probe`` blocks) + the same cross-shard
@@ -475,7 +517,7 @@ def ivf_cluster_topk(
             continue
         ss, ii = indexes[s].topk(
             phi_rows, k, n_probe=n_probe, exclude_ids=exclude_ids,
-            interpret=interpret,
+            interpret=interpret, registry=registry,
         )
         parts_s.append(ss)
         parts_i.append(ii)

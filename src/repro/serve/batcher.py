@@ -66,7 +66,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import StatsView, next_instance_id, resolve_registry
 from repro.serve.cluster import TopKResult
+
+_FLUSH_REASONS = ("size", "deadline", "forced", "drained")
 
 
 @dataclasses.dataclass
@@ -110,6 +113,8 @@ class MicroBatcher:
         clock: Callable[[], float] = time.monotonic,
         cache_size: int = 4096,
         version_fn: Optional[Callable[[], int]] = None,
+        registry=None,
+        tracer=None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -127,12 +132,63 @@ class MicroBatcher:
         self._cache_size = int(cache_size)
         self._cache_version = self.version_fn()
         self._closed = False
-        self.stats = {
-            "submitted": 0, "flushes": 0, "flushed_rows": 0,
-            "flush_by_size": 0, "flush_by_deadline": 0, "flush_forced": 0,
-            "cache_hits": 0, "cache_misses": 0, "cache_evicted_stale": 0,
-            "degraded_results": 0,
-        }
+        # counters live on the metrics registry (obs/metrics.py);
+        # ``self.stats`` stays a live read-only view over them so every
+        # pre-registry caller (tests, benches, drivers) keeps working.
+        # ``registry=None`` → the process default (per-instance labels
+        # keep two batchers' counters apart); NULL_REGISTRY → bare mode.
+        # ``tracer`` (obs/trace.py) opts into per-request spans.
+        self.registry = resolve_registry(registry)
+        self.tracer = tracer
+        self._spans: Dict[int, tuple] = {}   # ticket -> (request, queue) spans
+        reg, inst = self.registry, next_instance_id()
+        lab = ("instance",)
+
+        def _c(name, help_text):
+            return reg.counter(name, help_text, labels=lab).labels(
+                instance=inst)
+
+        self._m_submitted = _c(
+            "serve_batcher_submitted_total", "requests admitted")
+        self._m_flushed_rows = _c(
+            "serve_batcher_flushed_rows_total", "real (non-pad) rows flushed")
+        self._m_cache_hits = _c(
+            "serve_batcher_cache_hits_total", "keyed-result cache hits")
+        self._m_cache_misses = _c(
+            "serve_batcher_cache_misses_total", "keyed-result cache misses")
+        self._m_cache_evicted = _c(
+            "serve_batcher_cache_evicted_stale_total",
+            "cache entries evicted on a table-version bump")
+        self._m_degraded = _c(
+            "serve_batcher_degraded_results_total",
+            "routed results with coverage < 1")
+        flush_fam = reg.counter(
+            "serve_batcher_flushes_total", "flushes by trigger reason",
+            labels=("instance", "reason"))
+        self._m_flush = {r: flush_fam.labels(instance=inst, reason=r)
+                         for r in _FLUSH_REASONS}
+        self._m_queue_depth = reg.gauge(
+            "serve_batcher_queue_depth", "requests waiting in the admission "
+            "queue", labels=lab).labels(instance=inst)
+        self._m_queue_lat = reg.histogram(
+            "serve_batcher_queue_latency_seconds",
+            "per-ticket submit->flush wait", labels=lab).labels(instance=inst)
+        self.stats = StatsView({
+            "submitted": lambda: int(self._m_submitted.value),
+            "flushes": lambda: int(sum(
+                ch.value for ch in self._m_flush.values())),
+            "flushed_rows": lambda: int(self._m_flushed_rows.value),
+            "flush_by_size": lambda: int(self._m_flush["size"].value),
+            "flush_by_deadline":
+                lambda: int(self._m_flush["deadline"].value),
+            "flush_forced": lambda: int(self._m_flush["forced"].value),
+            "drained": lambda: int(self._m_flush["drained"].value),
+            "cache_hits": lambda: int(self._m_cache_hits.value),
+            "cache_misses": lambda: int(self._m_cache_misses.value),
+            "cache_evicted_stale":
+                lambda: int(self._m_cache_evicted.value),
+            "degraded_results": lambda: int(self._m_degraded.value),
+        })
 
     # ----------------------------------------------------------- admission
     def submit(
@@ -159,26 +215,35 @@ class MicroBatcher:
         self._evict_superseded()
         ticket = self._next_ticket
         self._next_ticket += 1
-        self.stats["submitted"] += 1
+        self._m_submitted.inc()
+        rq = None
+        if self.tracer is not None:
+            rq = self.tracer.begin("request", parent=None, ticket=ticket)
         excl = None
         if exclude is not None:
             excl = np.asarray(exclude, np.int32).reshape(-1)
         if key is not None:
             hit = self._cache_get(self._cache_key(key, excl))
             if hit is not None:
-                self.stats["cache_hits"] += 1
+                self._m_cache_hits.inc()
                 self._results[ticket] = hit
                 self._completed_at[ticket] = now
+                if rq is not None:
+                    self.tracer.end(rq, cache="hit")
                 self.step(now)  # a hit must still retire queue deadlines
                 return ticket
-            self.stats["cache_misses"] += 1
+            self._m_cache_misses.inc()
+        if rq is not None:
+            qs = self.tracer.begin("queue", parent=rq, ticket=ticket)
+            self._spans[ticket] = (rq, qs)
         self._queue.append(_Pending(
             ticket=ticket,
             phi_row=np.asarray(phi_row, np.float32).reshape(-1),
             exclude=excl, key=key, t_submit=now,
         ))
+        self._m_queue_depth.set(len(self._queue))
         if len(self._queue) >= self.max_batch:
-            self._flush(now, "flush_by_size")
+            self._flush(now, "size")
         else:
             self.step(now)  # admission also retires an overdue deadline
         return ticket
@@ -191,7 +256,7 @@ class MicroBatcher:
             return False
         now = self.clock() if now is None else now
         if now - self._queue[0].t_submit >= self.max_delay:
-            self._flush(now, "flush_by_deadline")
+            self._flush(now, "deadline")
             return True
         return False
 
@@ -199,15 +264,19 @@ class MicroBatcher:
         """Force-flush everything queued."""
         now = self.clock() if now is None else now
         while self._queue:
-            self._flush(now, "flush_forced")
+            self._flush(now, "forced")
 
     # ------------------------------------------------------------- shutdown
     def drain(self, now: Optional[float] = None) -> Dict[int, TopKResult]:
         """Graceful shutdown: flush every queued request so none is
         stranded, CLOSE the batcher (subsequent ``submit`` raises), and
         return all still-unclaimed results keyed by ticket so the caller
-        can deliver them before exiting. Idempotent."""
-        self.flush(now)
+        can deliver them before exiting. Idempotent. Flushes performed
+        here count under the ``drained`` reason (``stats["drained"]``) so
+        a shutdown flush is distinguishable from a deadline one."""
+        now = self.clock() if now is None else now
+        while self._queue:
+            self._flush(now, "drained")
         self._closed = True
         out = dict(self._results)
         self._results.clear()
@@ -243,6 +312,7 @@ class MicroBatcher:
     # ------------------------------------------------------------ internals
     def _flush(self, now: float, reason: str) -> None:
         batch, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch:]
+        self._m_queue_depth.set(len(self._queue))
         b = len(batch)
         b_pad = -(-b // self.pad_to) * self.pad_to
         phi = np.zeros((b_pad, batch[0].phi_row.shape[0]), np.float32)
@@ -257,25 +327,43 @@ class MicroBatcher:
                 if req.exclude is not None:
                     excl_ids[r, : req.exclude.shape[0]] = req.exclude
             excl_ids = jnp.asarray(excl_ids)
-        res = self.topk_phi(jnp.asarray(phi), excl_ids)
+        fs = None
+        if self.tracer is not None:
+            # explicit begin/end (not a context manager): _flush is
+            # non-reentrant via the trailing step() and the span must
+            # close before that follow-up flush opens its own
+            fs = self.tracer.begin("flush", parent=None, reason=reason,
+                                   batch=b, batch_padded=b_pad)
+            with self.tracer.activate(fs):   # mesh spans nest under it
+                res = self.topk_phi(jnp.asarray(phi), excl_ids)
+        else:
+            res = self.topk_phi(jnp.asarray(phi), excl_ids)
         scores, ids = res  # TopKResult or a bare (scores, ids) tuple
         coverage = float(getattr(res, "coverage", 1.0))
         dead_ranges = tuple(getattr(res, "dead_ranges", ()))
         scores = np.asarray(scores)
         ids = np.asarray(ids)
         if coverage < 1.0:
-            self.stats["degraded_results"] += len(batch)
+            self._m_degraded.inc(len(batch))
         for r, req in enumerate(batch):  # route rows back to their tickets
             out = TopKResult(scores[r], ids[r], coverage, dead_ranges)
             self._results[req.ticket] = out
             self._completed_at[req.ticket] = now
+            self._m_queue_lat.observe(now - req.t_submit)
+            spans = self._spans.pop(req.ticket, None)
+            if spans is not None:
+                rq, qs = spans
+                self.tracer.end(qs)
+                self.tracer.end(rq, flush_span=fs.span_id,
+                                coverage=coverage)
             # degraded answers are never cached: the hole they carry must
             # not outlive the replica failure that caused it
             if req.key is not None and coverage == 1.0:
                 self._cache_put(self._cache_key(req.key, req.exclude), out)
-        self.stats["flushes"] += 1
-        self.stats["flushed_rows"] += b
-        self.stats[reason] += 1
+        if fs is not None:
+            self.tracer.end(fs, coverage=coverage)
+        self._m_flushed_rows.inc(b)
+        self._m_flush[reason].inc()
         if self._queue:  # drain backlog left by a size-capped flush
             self.step(now)
 
@@ -297,7 +385,7 @@ class MicroBatcher:
         stale = [k for k in self._cache if k[1] != version]
         for k in stale:
             del self._cache[k]
-        self.stats["cache_evicted_stale"] += len(stale)
+        self._m_cache_evicted.inc(len(stale))
 
     def _cache_get(self, key):
         if key not in self._cache:

@@ -439,7 +439,10 @@ class ShardedRetrievalCluster:
         psi_table: Optional[jax.Array] = None,
         retrieval: str = "exact",
         ann=None,                                  # serve.ann.AnnConfig
+        registry=None,
     ):
+        from repro.obs.costs import KernelCostRecorder
+        from repro.obs.metrics import next_instance_id, resolve_registry
         from repro.serve.publish import VersionedTable
 
         self.phi_fn = phi_fn
@@ -453,6 +456,11 @@ class ShardedRetrievalCluster:
         self.ann = ann
         self._ivf: dict = {}      # table version → per-shard PsiIndex tuple
         self._table = VersionedTable()
+        self.registry = resolve_registry(registry)
+        self._costs = KernelCostRecorder(self.registry)
+        self._m_queries = self.registry.counter(
+            "serve_cluster_queries_total", "cluster topk_phi requests",
+            labels=("instance",)).labels(instance=next_instance_id())
         if psi_table is not None:
             self.publish(psi_table)
 
@@ -495,7 +503,8 @@ class ShardedRetrievalCluster:
             if (new_table.rows_per == old_table.rows_per
                     and new_table.n_shards == old_table.n_shards):
                 self._ivf = {version: fold_delta_indexes(
-                    old_indexes, new_table, rows, ids, self._ann_cfg()
+                    old_indexes, new_table, rows, ids, self._ann_cfg(),
+                    registry=self.registry,
                 )}
         return version
 
@@ -568,6 +577,7 @@ class ShardedRetrievalCluster:
         (an index is host-driven block dispatch, not a flat-mesh program)."""
         table = self.table  # ONE snapshot: version-consistent whole request
         k = k or self.k
+        self._m_queries.inc()
         if mesh is not None:
             if exclude_mask is not None:
                 raise ValueError(
@@ -593,8 +603,20 @@ class ShardedRetrievalCluster:
 
             return ivf_cluster_topk(
                 table, self._ivf_indexes(table), phi_rows, k,
-                exclude_ids=exclude_ids,
+                exclude_ids=exclude_ids, registry=self.registry,
             )
+        from repro.obs.costs import topk_score_cost
+
+        b = int(jnp.shape(phi_rows)[0])
+        excl_l = 0 if exclude_ids is None else int(exclude_ids.shape[1])
+        cost = topk_score_cost(b, table.rows_per, int(table.shards[0].shape[1]),
+                               k, excl_l=excl_l)
+        # one per-shard kernel dispatch each: S× the streams, same tile
+        self._costs.record("topk_score", {
+            "hbm_bytes": cost["hbm_bytes"] * table.n_shards,
+            "flops": cost["flops"] * table.n_shards,
+            "vmem_tile_bytes": cost["vmem_tile_bytes"],
+        }, calls=table.n_shards)
         return cluster_topk(
             table, phi_rows, k, exclude_mask=exclude_mask,
             exclude_ids=exclude_ids, block_items=self.block_items,

@@ -71,6 +71,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.costs import KernelCostRecorder
+from repro.obs.metrics import StatsView, next_instance_id, resolve_registry
 from repro.runtime.health import StragglerWatchdog
 from repro.serve.cluster import (
     PsiShardSet,
@@ -398,6 +400,8 @@ class FaultTolerantRetrievalMesh:
         psi_table: Optional[jax.Array] = None,
         retrieval: str = "exact",
         ann=None,                                  # serve.ann.AnnConfig
+        registry=None,
+        tracer=None,
     ):
         from repro.serve.publish import VersionedTable
 
@@ -422,12 +426,73 @@ class FaultTolerantRetrievalMesh:
         self.sleep = sleep if sleep is not None else (lambda dt: None)
         self._set = VersionedTable()
         self._canary: Optional[PsiShardSet] = None
-        self.stats = {
-            "queries": 0, "dispatches": 0, "failovers": 0, "retries": 0,
-            "faults": 0, "replicas_died": 0, "replicas_replaced": 0,
-            "degraded_queries": 0, "backoff_slept_s": 0.0,
-            "deadline_gaveups": 0,
+        # counters live on the metrics registry (obs/metrics.py) with a
+        # per-instance label; ``self.stats`` is the live back-compat view.
+        # ``tracer`` opts into dispatch/retry/failover spans that nest
+        # under the batcher's flush span (one trace per request).
+        self.registry = resolve_registry(registry)
+        self.tracer = tracer
+        reg, inst = self.registry, next_instance_id()
+        self._inst = inst
+        lab = ("instance",)
+
+        def _c(name, help_text):
+            return reg.counter(name, help_text, labels=lab).labels(
+                instance=inst)
+
+        counter_specs = {
+            "queries": ("serve_mesh_queries_total", "topk_phi requests"),
+            "dispatches": ("serve_mesh_dispatches_total",
+                           "per-replica dispatch attempts"),
+            "failovers": ("serve_mesh_failovers_total",
+                          "failovers to another live replica"),
+            "retries": ("serve_mesh_retries_total",
+                        "same-set retries (after backoff)"),
+            "faults": ("serve_mesh_faults_total",
+                       "dispatches that raised (real or injected)"),
+            "replicas_died": ("serve_mesh_replicas_died_total",
+                              "replicas marked dead"),
+            "replicas_replaced": ("serve_mesh_replicas_replaced_total",
+                                  "replicas re-placed by heal()"),
+            "degraded_queries": ("serve_mesh_degraded_queries_total",
+                                 "queries answered with coverage < 1"),
+            "backoff_slept_s": ("serve_mesh_backoff_slept_seconds_total",
+                                "total backoff sleep"),
+            "deadline_gaveups": ("serve_mesh_deadline_gaveups_total",
+                                 "shards given up on over the deadline "
+                                 "budget"),
+            "fault_burned_s": ("serve_mesh_fault_burned_seconds_total",
+                               "deadline budget burned by failed "
+                               "dispatches (real wall time + injected "
+                               "fault latency)"),
+            "heals": ("serve_mesh_heals_total", "heal() invocations"),
+            "canary_staged": ("serve_mesh_canary_staged_total",
+                              "canary tables staged"),
+            "canary_promoted": ("serve_mesh_canary_promoted_total",
+                                "canaries promoted live"),
+            "canary_rolled_back": ("serve_mesh_canary_rolled_back_total",
+                                   "canaries rolled back"),
         }
+        self._m = {key: _c(name, help_text)
+                   for key, (name, help_text) in counter_specs.items()}
+        _float_keys = ("backoff_slept_s", "fault_burned_s")
+        self.stats = StatsView({
+            key: (lambda ch=ch: ch.value) if key in _float_keys
+            else (lambda ch=ch: int(ch.value))
+            for key, ch in self._m.items()
+        })
+        self._m_version = reg.gauge(
+            "serve_mesh_version", "live table version", labels=lab,
+        ).labels(instance=inst)
+        self._m_coverage = reg.gauge(
+            "serve_mesh_coverage", "coverage of the last query", labels=lab,
+        ).labels(instance=inst)
+        self._lat_fam = reg.histogram(
+            "serve_mesh_replica_latency_seconds",
+            "per-(shard,replica) dispatch wall time (the health monitor's "
+            "own observations)", labels=("instance", "shard", "replica"))
+        self._lat_children: Dict[Tuple[int, int], object] = {}
+        self._costs = KernelCostRecorder(reg)
         if psi_table is not None:
             self.publish(psi_table)
 
@@ -436,12 +501,14 @@ class FaultTolerantRetrievalMesh:
         """Shard, replicate, version, and atomically flip a ψ snapshot
         live (the unstaged path — see :meth:`begin_canary` for the staged
         rollout). Returns the new version."""
-        return self._set.publish(
+        version = self._set.publish(
             lambda version: ReplicaSet(
                 shard_psi(psi_table, self.n_shards, version=version),
                 self.n_replicas, devices=self.devices, policy=self.policy,
             )
         )
+        self._m_version.set(version)
+        return version
 
     def publish_delta(self, rows, ids) -> int:
         """Incremental publish for fold-in rows: patch/append ψ ``rows`` at
@@ -472,7 +539,8 @@ class FaultTolerantRetrievalMesh:
             if (new_table.rows_per == old_table.rows_per
                     and new_table.n_shards == old_table.n_shards):
                 self._ivf = {version: fold_delta_indexes(
-                    old_indexes, new_table, rows, ids, self._ann_cfg()
+                    old_indexes, new_table, rows, ids, self._ann_cfg(),
+                    registry=self.registry,
                 )}
         return version
 
@@ -522,7 +590,7 @@ class FaultTolerantRetrievalMesh:
             live = {r.idx for r in rs.live(s)}
             if idx in live:
                 rs.mark_dead(s, idx, reason="slow")
-                self.stats["replicas_died"] += 1
+                self._m["replicas_died"].inc()
                 reaped.append((s, idx))
         if reaped and self.auto_heal:
             self.heal()
@@ -533,13 +601,22 @@ class FaultTolerantRetrievalMesh:
         target gets fresh replicas rebuilt from the authoritative table
         copy on surviving devices. Returns the new (shard, idx) pairs."""
         rs = self._set.active
+        self._m["heals"].inc()
         placed = []
         for s in range(rs.n_shards):
             while len(rs.live(s)) < self.n_replicas:
                 rep = rs.replace(s)
-                self.stats["replicas_replaced"] += 1
+                self._m["replicas_replaced"].inc()
                 placed.append(rep.key)
         return placed
+
+    def _replica_latency(self, s: int, idx: int):
+        ch = self._lat_children.get((s, idx))
+        if ch is None:
+            ch = self._lat_fam.labels(
+                instance=self._inst, shard=str(s), replica=str(idx))
+            self._lat_children[(s, idx)] = ch
+        return ch
 
     # --------------------------------------------------------------- query
     def phi(self, *query) -> jax.Array:
@@ -590,7 +667,7 @@ class FaultTolerantRetrievalMesh:
             block_items = resolve_cluster_block_items(
                 table, b, k, excl_l=excl_l
             )
-        self.stats["queries"] += 1
+        self._m["queries"].inc()
         budget = self.retry.deadline if budget is None else budget
         parts_s, parts_i, dead = [], [], []
         for s in range(table.n_shards):
@@ -604,18 +681,25 @@ class FaultTolerantRetrievalMesh:
                 parts_s.append(out[0])
                 parts_i.append(out[1])
         if dead:
-            self.stats["degraded_queries"] += 1
+            self._m["degraded_queries"].inc()
         coverage = coverage_fraction(table, dead)
         ranges = dead_item_ranges(table, dead)
+        self._m_coverage.set(coverage)
         if not parts_s:
             es, ei = empty_topk(b, k)
             return TopKResult(es, ei, coverage, ranges)
         if len(parts_s) == 1:
             return TopKResult(parts_s[0], parts_i[0], coverage, ranges)
+        merge_span = None
+        if self.tracer is not None:
+            merge_span = self.tracer.begin(
+                "merge", shards=len(parts_s), k=k)
         ms, mi = topk_merge_shards(
             jnp.stack(colocate_parts(parts_s)),
             jnp.stack(colocate_parts(parts_i)), k,
         )
+        if merge_span is not None:
+            self.tracer.end(merge_span)
         return TopKResult(ms, mi, coverage, ranges)
 
     # ----------------------------------------------------------- internals
@@ -629,6 +713,7 @@ class FaultTolerantRetrievalMesh:
         so the fault/stale/latency machinery wraps both paths identically."""
         spent = 0.0       # latency burned: real + injected + backoff
         attempt = 0
+        tr = self.tracer
         while attempt < self.retry.max_attempts:
             live = rs.live(s)
             if not live:
@@ -636,6 +721,10 @@ class FaultTolerantRetrievalMesh:
             attempt += 1
             rep = rs.pick(s)
             rep.outstanding += 1
+            sp = None
+            if tr is not None:
+                sp = tr.begin("dispatch", shard=s, replica=rep.idx,
+                              attempt=attempt)
             t0 = self.clock()
             try:
                 if self.injector is not None:
@@ -651,8 +740,15 @@ class FaultTolerantRetrievalMesh:
                     else:
                         ss, ii = indexes[s].topk(
                             phi_rows, k, exclude_ids=exclude_ids,
+                            registry=self.registry,
                         )
                 else:
+                    self._costs.record_topk(
+                        int(phi_rows.shape[0]), rs.table.rows_per,
+                        int(rep.slab.shape[1]), k,
+                        excl_l=0 if exclude_ids is None
+                        else int(exclude_ids.shape[1]),
+                    )
                     ss, ii = shard_topk(
                         rs.table, s, phi_rows, k, slab=rep.slab,
                         exclude_mask=exclude_mask, exclude_ids=exclude_ids,
@@ -660,21 +756,31 @@ class FaultTolerantRetrievalMesh:
                     )
                 lat = self.clock() - t0
                 self.monitor.observe(rep.key, lat)
+                self._replica_latency(s, rep.idx).observe(lat)
                 rep.served += 1
                 rep.failures = 0
-                self.stats["dispatches"] += 1
+                self._m["dispatches"].inc()
+                if sp is not None:
+                    tr.end(sp, outcome="ok")
                 return ss, ii
             except ReplicaFailure as e:
                 lat = max(self.clock() - t0, e.latency)
                 spent += lat
-                self.stats["dispatches"] += 1
-                self.stats["faults"] += 1
+                self._m["dispatches"].inc()
+                self._m["faults"].inc()
+                # the satellite: burned deadline budget — real wall time
+                # OR the injected fault's declared latency, whichever the
+                # retry loop actually charged against the budget
+                self._m["fault_burned_s"].inc(lat)
+                if sp is not None:
+                    tr.end(sp, outcome=type(e).__name__, burned_s=lat)
                 rep.failures += 1
                 if isinstance(e, ReplicaTimeout):
                     self.monitor.observe(rep.key, lat)
+                    self._replica_latency(s, rep.idx).observe(lat)
                 if rep.failures >= self.fail_threshold:
                     rs.mark_dead(s, rep.idx, reason=type(e).__name__)
-                    self.stats["replicas_died"] += 1
+                    self._m["replicas_died"].inc()
                     if self.auto_heal:
                         self.heal()
             finally:
@@ -682,11 +788,14 @@ class FaultTolerantRetrievalMesh:
             # burned latency (real + injected) already exhausted the
             # budget: even a free failover dispatch would answer late
             if budget is not None and spent >= budget:
-                self.stats["deadline_gaveups"] += 1
+                self._m["deadline_gaveups"].inc()
                 return None
             # failover beats backoff: another live replica is already warm
             if any(r.idx != rep.idx for r in rs.live(s)):
-                self.stats["failovers"] += 1
+                self._m["failovers"].inc()
+                if tr is not None:
+                    tr.end(tr.begin("failover", shard=s,
+                                    from_replica=rep.idx))
                 continue
             # same (possibly healed) set again: exponential backoff, but
             # only if the sleep FITS the remaining deadline budget
@@ -696,10 +805,12 @@ class FaultTolerantRetrievalMesh:
             if budget is not None:
                 remaining = budget - spent
                 if remaining <= 0.0 or back >= remaining:
-                    self.stats["deadline_gaveups"] += 1
+                    self._m["deadline_gaveups"].inc()
                     return None
-            self.stats["retries"] += 1
-            self.stats["backoff_slept_s"] += back
+            self._m["retries"].inc()
+            self._m["backoff_slept_s"].inc(back)
+            if tr is not None:
+                tr.end(tr.begin("retry", shard=s, backoff_s=back))
             spent += back
             self.sleep(back)
         return None
@@ -729,6 +840,7 @@ class FaultTolerantRetrievalMesh:
                 slab=slab, device=dev, version=staged.version, canary=True,
             )
             rs.replicas[s].append(rep)
+        self._m["canary_staged"].inc()
         return staged.version
 
     def canary_topk_phi(self, phi_rows, *, k=None,
@@ -833,6 +945,8 @@ class FaultTolerantRetrievalMesh:
 
         version = self._set.publish(build)
         self._canary = None
+        self._m["canary_promoted"].inc()
+        self._m_version.set(version)
         return version
 
     def rollback_canary(self) -> None:
@@ -844,3 +958,4 @@ class FaultTolerantRetrievalMesh:
         for s in range(rs.n_shards):
             rs.replicas[s] = [r for r in rs.replicas[s] if not r.canary]
         self._canary = None
+        self._m["canary_rolled_back"].inc()

@@ -48,6 +48,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.metrics import next_instance_id, resolve_registry
+
 
 def dense_table(shard_set) -> np.ndarray:
     """Reassemble the dense (n_items, D) ψ table from a
@@ -146,6 +148,13 @@ class PsiPublisher:
     ``export`` maps the training params to the (n_items, D) ψ table (each
     model's ``export_psi``; close over design matrices / hyper-params where
     the model needs them). ``every`` throttles the refresh cadence.
+
+    Registry metrics (``obs/metrics.py``; labels ``instance``):
+    ``serve_psi_version`` (gauge: last published version),
+    ``serve_psi_last_publish_time`` (gauge: registry-clock timestamp of the
+    last publish — staleness age = ``registry.clock() - value``),
+    ``serve_psi_publishes_total`` / ``serve_psi_delta_publishes_total`` /
+    ``serve_psi_delta_rows_total``.
     """
 
     def __init__(
@@ -155,6 +164,7 @@ class PsiPublisher:
         *,
         every: int = 1,
         log: Optional[Callable[[str], None]] = None,
+        registry=None,
     ):
         self.cluster = cluster
         self.export = export
@@ -162,12 +172,39 @@ class PsiPublisher:
         self.log = log
         self.versions: list = []  # [(epoch, version), ...]
         self.deltas: list = []    # [(version, n_rows), ...] delta publishes
+        reg = resolve_registry(registry)
+        self.registry = reg
+        inst = {"instance": next_instance_id()}
+        lab = ("instance",)
+        self._g_version = reg.gauge(
+            "serve_psi_version", "last published psi table version",
+            labels=lab).labels(**inst)
+        self._g_pub_time = reg.gauge(
+            "serve_psi_last_publish_time",
+            "registry-clock timestamp of the last publish (staleness age "
+            "= clock() - value)", labels=lab).labels(**inst)
+        self._c_publishes = reg.counter(
+            "serve_psi_publishes_total", "full-table publishes",
+            labels=lab).labels(**inst)
+        self._c_deltas = reg.counter(
+            "serve_psi_delta_publishes_total", "delta publishes",
+            labels=lab).labels(**inst)
+        self._c_delta_rows = reg.counter(
+            "serve_psi_delta_rows_total",
+            "psi rows patched/appended by delta publishes",
+            labels=lab).labels(**inst)
+
+    def _mark(self, version: int) -> None:
+        self._g_version.set(version)
+        self._g_pub_time.set(self.registry.clock())
 
     def __call__(self, epoch: int, params) -> None:
         if epoch % self.every:
             return
         version = self.cluster.publish(self.export(params))
         self.versions.append((epoch, version))
+        self._c_publishes.inc()
+        self._mark(version)
         if self.log is not None:
             self.log(f"epoch {epoch}: published psi table version {version}")
 
@@ -177,7 +214,11 @@ class PsiPublisher:
         ``export(params)`` full-table pass. Returns the new version and
         records it in ``deltas``."""
         version = self.cluster.publish_delta(rows, ids)
-        self.deltas.append((version, int(np.atleast_1d(ids).size)))
+        n_rows = int(np.atleast_1d(ids).size)
+        self.deltas.append((version, n_rows))
+        self._c_deltas.inc()
+        self._c_delta_rows.inc(n_rows)
+        self._mark(version)
         if self.log is not None:
             self.log(
                 f"delta: {self.deltas[-1][1]} psi row(s) -> version {version}"
@@ -224,6 +265,7 @@ class StagedRollout:
         validate: Optional[Callable] = None,
         k: Optional[int] = None,
         log: Optional[Callable[[str], None]] = None,
+        registry=None,
     ):
         self.mesh = mesh
         self.mirror_phi = mirror_phi
@@ -231,6 +273,16 @@ class StagedRollout:
         self.k = k
         self.log = log
         self.history: list = []  # [(staged_version, promoted, report), ...]
+        reg = resolve_registry(registry)
+        inst = {"instance": next_instance_id()}
+        fam = reg.counter(
+            "serve_rollout_attempts_total",
+            "staged rollout attempts by outcome",
+            labels=("instance", "outcome"))
+        self._c_outcome = {
+            out: fam.labels(**inst, outcome=out)
+            for out in ("promoted", "rolled_back")
+        }
 
     def publish(self, psi_table, *, mirror_phi=None) -> tuple:
         """Stage ``psi_table``, mirror-check it, and promote iff healthy.
@@ -244,6 +296,7 @@ class StagedRollout:
         staged = self.mesh.begin_canary(psi_table)
         report = self.mesh.mirror_check(phi, k=self.k, validate=self.validate)
         promoted = bool(report["healthy"])
+        self._c_outcome["promoted" if promoted else "rolled_back"].inc()
         if promoted:
             version = self.mesh.promote_canary()
             report = {**report, "promoted_version": version}
